@@ -1,0 +1,107 @@
+//! Partitioning study: compares the four offline strategies (GSplit /
+//! Node / Edge / Rand) on a dataset — expected cut, expected balance, and
+//! realized per-mini-batch splitting quality (the §7.3 / Figure 5 story
+//! as a runnable example).
+//!
+//! Run: `cargo run --release --example partition_study -- --dataset tiny`
+
+use anyhow::Result;
+use gsplit::cli::Args;
+use gsplit::config::parse_dataset;
+use gsplit::opts;
+use gsplit::partition::{
+    evaluate_minibatch, evaluate_partitioning, partition_graph, Strategy,
+};
+use gsplit::presample::{presample, PresampleConfig};
+use gsplit::rng::{derive_seed, Pcg32};
+use gsplit::sampling::Sampler;
+use gsplit::util::{timer::timed, Table};
+
+fn main() -> Result<()> {
+    let spec = opts![
+        ("dataset", true, "orkut-s|papers-s|friendster-s|tiny (default tiny)"),
+        ("parts", true, "number of splits (default 4)"),
+        ("batch", true, "mini-batch size (default 1024)"),
+        ("fanout", true, "fanout (default 15)"),
+        ("layers", true, "layers (default 3)"),
+        ("presample-epochs", true, "pre-sampling epochs (default 5)"),
+        ("iters", true, "mini-batches to evaluate (default 16)"),
+    ];
+    let a = Args::from_env(spec, "compare offline partitioning strategies")?;
+    let ds = parse_dataset(&a.get_str("dataset", "tiny"))?.load()?;
+    let k = a.get_usize("parts", 4)?;
+    let batch = a.get_usize("batch", 1024)?;
+    let fanout = a.get_usize("fanout", 15)?;
+    let layers = a.get_usize("layers", 3)?;
+    let iters = a.get_usize("iters", 16)?;
+    let seed = 42u64;
+
+    let (t_pre, pw) = timed(|| {
+        presample(
+            &ds.graph,
+            &ds.labels.train_set,
+            &PresampleConfig {
+                epochs: a.get_usize("presample-epochs", 5).unwrap(),
+                batch_size: batch,
+                fanouts: vec![fanout; layers],
+                seed,
+            },
+        )
+    });
+    println!(
+        "dataset {} ({} vertices, {} edges); presample {t_pre:.1}s\n",
+        ds.spec.name,
+        ds.graph.num_vertices(),
+        ds.graph.num_edges()
+    );
+
+    let mask: Vec<bool> = {
+        let mut m = vec![false; ds.graph.num_vertices()];
+        for &t in &ds.labels.train_set {
+            m[t as usize] = true;
+        }
+        m
+    };
+
+    let mut table = Table::new(&[
+        "Strategy",
+        "Partition(s)",
+        "E[cut] frac",
+        "E[imbalance]",
+        "mb cross %",
+        "mb imbalance",
+    ])
+    .left(0);
+    for strat in [Strategy::GSplit, Strategy::Node, Strategy::Edge, Strategy::Rand] {
+        let (t_part, part) =
+            timed(|| partition_graph(&ds.graph, &pw, &mask, strat, k, 0.05, seed));
+        let q = evaluate_partitioning(&ds.graph, &pw, &part);
+        // Realized mini-batch quality over a few iterations.
+        let mut sampler = Sampler::new();
+        let targets = ds.epoch_targets(seed);
+        let (mut cross, mut imb) = (0.0, 0.0);
+        let mut n = 0;
+        for (i, chunk) in targets.chunks(batch).take(iters).enumerate() {
+            let mut rng = Pcg32::new(derive_seed(seed, &[i as u64]));
+            let mb = sampler.sample(&ds.graph, chunk, &vec![fanout; layers], &mut rng);
+            let mq = evaluate_minibatch(&mb, &part);
+            cross += mq.cross_edge_fraction * 100.0;
+            imb += mq.imbalance;
+            n += 1;
+        }
+        table.row(vec![
+            format!("{strat:?}"),
+            format!("{t_part:.1}"),
+            format!("{:.3}", q.cut_fraction()),
+            format!("{:.3}", q.imbalance),
+            format!("{:.1}%", cross / n as f64),
+            format!("{:.3}", imb / n as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nGSplit should dominate: lowest realized cross-edge % at near-balanced load\n\
+         (Rand balances best but shuffles ~75% of edges; Edge cuts well but can be imbalanced)."
+    );
+    Ok(())
+}

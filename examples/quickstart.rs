@@ -1,0 +1,87 @@
+//! Quickstart: the whole GSplit pipeline on a small graph in ~a minute.
+//!
+//! 1. generate a community graph,
+//! 2. pre-sample to weight vertices/edges (offline stage 1),
+//! 3. weighted min-cut partition → global splitting function f_G (stage 2),
+//! 4. cooperatively sample + split one mini-batch online,
+//! 5. run one real split-parallel training iteration through the
+//!    AOT-compiled (JAX/Pallas → HLO → PJRT) executables.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use gsplit::graph::Dataset;
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::{evaluate_partitioning, partition_graph, Strategy};
+use gsplit::presample::{presample, PresampleConfig};
+use gsplit::runtime::Runtime;
+use gsplit::split::SplitSampler;
+use gsplit::train::Trainer;
+use gsplit::util::fmt_count;
+
+fn main() -> Result<()> {
+    // --- load the AOT artifacts (build once with `make artifacts`) ---
+    let rt = Runtime::load("artifacts")?;
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: rt.manifest.feat_dim,
+        hidden: rt.manifest.hidden,
+        num_classes: rt.manifest.num_classes,
+        num_layers: rt.manifest.layer_dims.len(),
+    };
+    println!("model: 3-layer GraphSage {}→{}→{} classes", cfg.feat_dim, cfg.hidden, cfg.num_classes);
+
+    // --- a small learnable dataset ---
+    let ds = Dataset::sbm_learnable(8192, cfg.num_classes, cfg.feat_dim, 0.6, 7);
+    println!(
+        "graph: {} vertices, {} edges, {} train targets",
+        fmt_count(ds.graph.num_vertices() as u64),
+        fmt_count(ds.graph.num_edges() as u64),
+        fmt_count(ds.labels.train_set.len() as u64)
+    );
+
+    // --- offline: pre-sample + weighted min-cut partition (4 splits) ---
+    let fanouts = vec![rt.manifest.kernel_fanout; cfg.num_layers];
+    let pw = presample(
+        &ds.graph,
+        &ds.labels.train_set,
+        &PresampleConfig { epochs: 3, batch_size: 256, fanouts: fanouts.clone(), seed: 7 },
+    );
+    let mask = vec![false; ds.graph.num_vertices()];
+    let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, 4, 0.05, 7);
+    let q = evaluate_partitioning(&ds.graph, &pw, &part);
+    println!(
+        "partitioning: expected cut fraction {:.3}, load imbalance {:.3}",
+        q.cut_fraction(),
+        q.imbalance
+    );
+
+    // --- online: split one mini-batch and inspect the plan ---
+    let targets = &ds.epoch_targets(0)[..256];
+    let mut ss = SplitSampler::new(4);
+    let plan = ss.sample(&ds.graph, targets, &fanouts, &part, 1);
+    println!(
+        "split plan: {} layers, {} total sampled edges, {} non-overlapping input rows",
+        plan.layers.len(),
+        fmt_count(plan.total_edges()),
+        fmt_count(plan.total_inputs())
+    );
+    for (i, layer) in plan.layers.iter().enumerate() {
+        println!(
+            "  layer {i}: dst per split {:?}, remote shuffle rows {}",
+            layer.per_dev.iter().map(|d| d.num_dst()).collect::<Vec<_>>(),
+            layer.shuffle.remote_rows()
+        );
+    }
+
+    // --- one real training iteration through PJRT ---
+    let mut trainer = Trainer::new(&rt, &cfg, part, 0.2, 7)?;
+    let stats = trainer.train_iteration(&ds, targets, 0)?;
+    println!(
+        "one split-parallel training iteration: loss {:.4}, batch accuracy {:.3}",
+        stats.loss,
+        stats.accuracy()
+    );
+    println!("OK — see examples/train_sage.rs for full training runs.");
+    Ok(())
+}

@@ -1,0 +1,242 @@
+"""AOT compiler: lowers the L2/L1 functions to HLO **text** artifacts that
+the Rust coordinator loads via PJRT (`xla` crate).
+
+Why HLO text and not ``lowered.compile().serialize()`` / serialized protos:
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact set (see DESIGN.md §7 "Shapes & padding"): per model kind and
+per (din, dout, relu) layer signature, forward and backward executables in
+a few destination-row *buckets* M ∈ M_BUCKETS with mixed-frontier capacity
+N = M·(K+1) — a sampled layer with M_actual ≤ M always has
+N_actual ≤ M_actual·(K+1) ≤ N, so the runtime just picks the smallest
+bucket that fits and pads. Plus the loss head per batch bucket, and a
+golden-values file the Rust integration tests verify numerics against.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Configuration — must stay in sync with rust/src/runtime (the manifest
+# carries all of it, so Rust reads rather than assumes).
+# ---------------------------------------------------------------------------
+
+KERNEL_K = 5  # fanout of runtime-executed configs (examples + tests)
+M_BUCKETS = [256, 1024, 4096]
+LOSS_BUCKETS = [256, 1024]
+
+# (din, dout, relu) bottom→top for the default end-to-end model:
+# feat 32 → hidden 64 → hidden 64 → 8 classes.
+FEAT_DIM = 32
+HIDDEN = 64
+NUM_CLASSES = 8
+LAYER_DIMS = [
+    (FEAT_DIM, HIDDEN, True),
+    (HIDDEN, HIDDEN, True),
+    (HIDDEN, NUM_CLASSES, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def param_specs(kind, din, dout):
+    if kind == "sage":
+        return [f32(din, dout), f32(din, dout), f32(dout)]
+    return [f32(din, dout), f32(dout), f32(dout), f32(dout)]
+
+
+def layer_fwd_fn(kind, relu):
+    def fn(x, idx, mask, *params):
+        return (model.layer_apply(kind, params, x, idx, mask, relu),)
+
+    return fn
+
+
+def layer_bwd_fn(kind, relu):
+    def fn(x, idx, mask, g_out, *params):
+        grads = model.layer_bwd(kind, params, x, idx, mask, relu, g_out)
+        return tuple(grads)  # (g_x, *g_params)
+
+    return fn
+
+
+def loss_fn(logits, labels, valid):
+    return model.loss_head(logits, labels, valid)
+
+
+def lower_artifact(fn, specs):
+    # keep_unused: jax DCEs arguments that don't affect outputs (e.g. the
+    # bias in a no-relu backward); the Rust runtime passes the full argument
+    # list, so the HLO signature must keep every parameter.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def build_artifacts(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "kernel_fanout": KERNEL_K,
+        "m_buckets": M_BUCKETS,
+        "loss_buckets": LOSS_BUCKETS,
+        "feat_dim": FEAT_DIM,
+        "hidden": HIDDEN,
+        "num_classes": NUM_CLASSES,
+        "layer_dims": [[d, o, r] for (d, o, r) in LAYER_DIMS],
+        "artifacts": [],
+    }
+
+    def emit(name, fn, specs, meta):
+        path = f"{name}.hlo.txt"
+        text = lower_artifact(fn, specs)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": path}
+        entry.update(meta)
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+    k = KERNEL_K
+    for kind in ("sage", "gat"):
+        for din, dout, relu in LAYER_DIMS:
+            for m in M_BUCKETS:
+                n = m * (k + 1)
+                rtag = "r1" if relu else "r0"
+                base = f"{kind}_{din}x{dout}_{rtag}_m{m}"
+                common = {
+                    "model": kind,
+                    "din": din,
+                    "dout": dout,
+                    "relu": relu,
+                    "m": m,
+                    "n": n,
+                    "k": k,
+                }
+                emit(
+                    f"{base}_fwd",
+                    layer_fwd_fn(kind, relu),
+                    [f32(n, din), i32(m, k), f32(m, k), *param_specs(kind, din, dout)],
+                    {"kind": "layer_fwd", **common},
+                )
+                emit(
+                    f"{base}_bwd",
+                    layer_bwd_fn(kind, relu),
+                    [
+                        f32(n, din),
+                        i32(m, k),
+                        f32(m, k),
+                        f32(m, dout),
+                        *param_specs(kind, din, dout),
+                    ],
+                    {"kind": "layer_bwd", **common},
+                )
+    for b in LOSS_BUCKETS:
+        emit(
+            f"loss_b{b}_c{NUM_CLASSES}",
+            loss_fn,
+            [f32(b, NUM_CLASSES), i32(b), f32(b)],
+            {"kind": "loss", "b": b, "c": NUM_CLASSES},
+        )
+
+    write_goldens(out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def write_goldens(out_dir, manifest):
+    """Deterministic test vectors the Rust runtime verifies against.
+
+    Small shapes (M=8 real rows inside the m=256 bucket) so the JSON stays
+    tiny; inputs are simple ramps so Rust can regenerate them exactly.
+    """
+    k = KERNEL_K
+    m_real, din, dout = 8, FEAT_DIM, HIDDEN
+    m, n = M_BUCKETS[0], M_BUCKETS[0] * (k + 1)
+
+    def ramp(shape, scale, dtype=np.float32):
+        size = int(np.prod(shape))
+        # Bounded deterministic pattern, exactly reproducible in Rust:
+        # v(i) = ((i * 37 + 11) % 97) / 97 * scale - scale/2
+        v = (((np.arange(size) * 37 + 11) % 97) / 97.0 * scale - scale / 2).astype(dtype)
+        return v.reshape(shape)
+
+    x = np.zeros((n, din), np.float32)
+    x[: m_real * (k + 1)] = ramp((m_real * (k + 1), din), 2.0)
+    idx = np.zeros((m, k), np.int32)
+    mask = np.zeros((m, k), np.float32)
+    for i in range(m_real):
+        for j in range(k):
+            # neighbors of row i live at rows m_real + i*k + j
+            idx[i, j] = m_real + i * k + j
+            mask[i, j] = 1.0 if (i + j) % 4 != 3 else 0.0  # some padding
+    params = [ramp(s.shape, 0.5) for s in param_specs("sage", din, dout)]
+    out = model.layer_apply(
+        "sage", tuple(jnp.asarray(p) for p in params), jnp.asarray(x), jnp.asarray(idx), jnp.asarray(mask), True
+    )
+    out = np.asarray(out)
+
+    # Loss golden.
+    b = LOSS_BUCKETS[0]
+    logits = ramp((b, NUM_CLASSES), 4.0)
+    labels = ((np.arange(b) * 7 + 3) % NUM_CLASSES).astype(np.int32)
+    valid = (np.arange(b) < 16).astype(np.float32)
+    loss, g_logits, correct = model.loss_head(
+        jnp.asarray(logits), jnp.asarray(labels), jnp.asarray(valid)
+    )
+
+    golden = {
+        "layer": {
+            "artifact": f"sage_{din}x{dout}_r1_m{m}_fwd",
+            "m_real": m_real,
+            "out_rows": out[:m_real].reshape(-1).tolist(),
+        },
+        "loss": {
+            "artifact": f"loss_b{b}_c{NUM_CLASSES}",
+            "loss": float(loss),
+            "correct": float(correct),
+            "g_logits_head": np.asarray(g_logits)[:2].reshape(-1).tolist(),
+        },
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print("  wrote golden.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 — Pallas kernels for the GNN compute hot-spots.
+
+``gather_mean``   — GraphSage masked mean aggregation (Pallas fwd + Pallas
+                    scatter-add bwd via custom_vjp).
+``gat_attention`` — single-head GAT attention aggregation (Pallas fwd,
+                    recompute jnp bwd via custom_vjp).
+``ref``           — pure-jnp oracles both kernels are tested against.
+"""
+
+from .gat_attn import gat_attention
+from .gather_mean import gather_mean, scatter_mean_grad
+from . import ref
+
+__all__ = ["gather_mean", "scatter_mean_grad", "gat_attention", "ref"]

@@ -1,0 +1,129 @@
+"""Pallas kernel: masked gather-mean aggregation (GraphSage hot spot).
+
+Forward: for each destination row, gather its K sampled neighbor rows from
+the mixed-frontier feature matrix and average the valid ones. Backward:
+scatter-add of the output gradient back to the gathered rows — also a
+Pallas kernel — wired together with ``jax.custom_vjp``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles destination
+rows in blocks of ``BLOCK_M``; each grid step keeps one ``(BLOCK_M, K)``
+index tile, one mask tile, and one ``(BLOCK_M, D)`` output tile in VMEM and
+gathers from the source matrix (resident here; streamed from HBM on a real
+TPU — the BlockSpec index map is where the paper's thread-block schedule
+lives). ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO that
+both pytest and the Rust runtime execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+
+
+def _fwd_kernel(x_ref, idx_ref, mask_ref, o_ref):
+    x = x_ref[...]  # (N, D) source rows
+    idx = idx_ref[...]  # (BM, K)
+    mask = mask_ref[...]  # (BM, K)
+    rows = x[idx]  # (BM, K, D) gather
+    s = jnp.sum(rows * mask[..., None], axis=1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    o_ref[...] = s / cnt[:, None]
+
+
+def _bwd_kernel(idx_ref, mask_ref, g_ref, o_ref):
+    # The output block is the full (N, D) gradient, revisited by every grid
+    # step; initialize once, then scatter-add each step's contribution.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]
+    mask = mask_ref[...]
+    g = g_ref[...]  # (BM, D)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    contrib = (g / cnt[:, None])[:, None, :] * mask[..., None]  # (BM, K, D)
+    o_ref[...] = o_ref[...].at[idx].add(contrib)
+
+
+def _pad_rows(a, m_pad):
+    if a.shape[0] == m_pad:
+        return a
+    pad = [(0, m_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+def _gather_mean_fwd_impl(x, idx, mask):
+    m, k = idx.shape
+    n, d = x.shape
+    bm = min(BLOCK_M, m) if m > 0 else 1
+    m_pad = ((m + bm - 1) // bm) * bm
+    idx_p = _pad_rows(idx, m_pad)
+    mask_p = _pad_rows(mask, m_pad)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), x.dtype),
+        interpret=True,
+    )(x, idx_p, mask_p)
+    return out[:m]
+
+
+def scatter_mean_grad(idx, mask, g_out, n):
+    """Pallas backward: scatter-add gradient to the N source rows."""
+    m, k = idx.shape
+    d = g_out.shape[-1]
+    bm = min(BLOCK_M, m) if m > 0 else 1
+    m_pad = ((m + bm - 1) // bm) * bm
+    idx_p = _pad_rows(idx, m_pad)
+    mask_p = _pad_rows(mask, m_pad)
+    g_p = _pad_rows(g_out, m_pad)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), g_out.dtype),
+        interpret=True,
+    )(idx_p, mask_p, g_p)
+
+
+@jax.custom_vjp
+def gather_mean(x, idx, mask):
+    """Masked mean over gathered neighbor rows; see ``ref.gather_mean_ref``.
+
+    Differentiable w.r.t. ``x`` (Pallas scatter-add backward); ``idx`` and
+    ``mask`` are treated as constants.
+    """
+    return _gather_mean_fwd_impl(x, idx, mask)
+
+
+def _vjp_fwd(x, idx, mask):
+    return _gather_mean_fwd_impl(x, idx, mask), (idx, mask, x.shape[0])
+
+
+def _vjp_bwd(res, g_out):
+    idx, mask, n = res
+    gx = scatter_mean_grad(idx, mask, g_out, n)
+    return gx, None, None
+
+
+gather_mean.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def gather_mean_jit(x, idx, mask):
+    return gather_mean(x, idx, mask)

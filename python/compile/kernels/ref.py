@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the "obviously correct" reference implementations. Every Pallas
+kernel must match them (pytest + hypothesis sweeps in ``tests/``), and the
+backward passes wired through ``jax.custom_vjp`` must match ``jax.grad`` of
+these references.
+"""
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2  # GAT LeakyReLU slope (Velickovic et al. 2018)
+
+
+def gather_mean_ref(x, idx, mask):
+    """Masked mean aggregation of sampled neighbors.
+
+    Args:
+      x:    [N, D] float32 — mixed-frontier feature rows.
+      idx:  [M, K] int32   — per-destination neighbor indices into ``x``
+                             (padded slots may hold any valid index).
+      mask: [M, K] float32 — 1.0 for real neighbors, 0.0 for padding.
+
+    Returns:
+      [M, D] float32 — sum(x[idx] * mask) / max(sum(mask), 1) per row.
+      Zero-degree rows (all-zero mask) return zeros.
+    """
+    rows = x[idx]  # [M, K, D]
+    s = jnp.sum(rows * mask[..., None], axis=1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return s / cnt[:, None]
+
+
+def gather_mean_grad_x_ref(idx, mask, g_out, n):
+    """Reference gradient of ``gather_mean_ref`` w.r.t. ``x``.
+
+    Each sampled edge (m, k) scatters ``g_out[m] * mask[m,k] / cnt[m]``
+    into row ``idx[m, k]``.
+    """
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    contrib = (g_out / cnt[:, None])[:, None, :] * mask[..., None]  # [M,K,D]
+    gx = jnp.zeros((n, g_out.shape[-1]), g_out.dtype)
+    return gx.at[idx].add(contrib)
+
+
+def gat_attention_ref(z, s_src, s_dst, idx, mask):
+    """Single-head GAT aggregation with an implicit self edge.
+
+    Args:
+      z:     [N, D] — projected features (x @ W) of the mixed frontier.
+      s_src: [N]    — per-source attention term (z @ a_src).
+      s_dst: [M]    — per-destination attention term ((z @ a_dst)[:M];
+                      destination m *is* mixed row m).
+      idx:   [M, K] int32 — neighbor indices into ``z``.
+      mask:  [M, K] — 1/0 validity.
+
+    Returns:
+      [M, D] — attention-weighted sum over {self} ∪ neighbors, with
+      LeakyReLU(0.2) on logits and a masked softmax.
+    """
+    m = idx.shape[0]
+    e_self = s_dst + s_src[:m]  # [M] — self edge score
+    e_nb = s_dst[:, None] + s_src[idx]  # [M, K]
+    logits = jnp.concatenate([e_self[:, None], e_nb], axis=1)  # [M, K+1]
+    logits = jax.nn.leaky_relu(logits, LEAKY_SLOPE)
+    full_mask = jnp.concatenate([jnp.ones((m, 1), mask.dtype), mask], axis=1)
+    neg = jnp.finfo(logits.dtype).min / 2
+    masked = jnp.where(full_mask > 0, logits, neg)
+    alpha = jax.nn.softmax(masked, axis=1) * full_mask
+    alpha = alpha / jnp.maximum(alpha.sum(axis=1, keepdims=True), 1e-9)
+    out = alpha[:, 0:1] * z[:m] + jnp.einsum("mk,mkd->md", alpha[:, 1:], z[idx])
+    return out

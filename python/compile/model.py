@@ -1,0 +1,156 @@
+"""L2 — JAX GNN model: GraphSage and GAT layers over the L1 Pallas kernels,
+plus the softmax-CE loss head.
+
+Everything here is **build-time only**: ``aot.py`` lowers these functions to
+HLO text once; the Rust coordinator executes the artifacts via PJRT and
+composes layers with its own shuffles (split parallelism) — exactly the
+layer-centric kernel reuse the paper's §6 API argues for.
+
+Conventions shared with the Rust runtime (see rust/src/runtime):
+  * the mixed-frontier feature matrix ``x`` has the destination rows first
+    (``x[:M]`` are the destinations' own features),
+  * neighbor tables are ``[M, K]`` int32 indices into ``x`` with a parallel
+    ``[M, K]`` float32 validity mask (0.0 ⇒ padded slot; padded ``idx``
+    must still be < N, the runtime uses 0),
+  * padded destination rows simply produce garbage outputs that the runtime
+    slices away; the loss head additionally takes a per-row validity mask.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gat_attention, gather_mean
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def sage_layer(params, x, idx, mask, relu):
+    """GraphSage layer: h = act(x_self @ W_self + mean(x_nbr) @ W_neigh + b).
+
+    ``params = (w_self [Din,Dout], w_neigh [Din,Dout], bias [Dout])``.
+    """
+    w_self, w_neigh, bias = params
+    m = idx.shape[0]
+    agg = gather_mean(x, idx, mask)  # [M, Din] — L1 Pallas kernel
+    h = x[:m] @ w_self + agg @ w_neigh + bias
+    return jax.nn.relu(h) if relu else h
+
+
+def gat_layer(params, x, idx, mask, relu):
+    """Single-head GAT layer with implicit self edge.
+
+    ``params = (w [Din,Dout], a_src [Dout], a_dst [Dout], bias [Dout])``.
+    The projection and attention dot products run in jnp (MXU-friendly);
+    the score/softmax/weighted-sum hot loop is the L1 Pallas kernel.
+    """
+    w, a_src, a_dst, bias = params
+    m = idx.shape[0]
+    z = x @ w  # [N, Dout]
+    s_src = z @ a_src  # [N]
+    s_dst = (z @ a_dst)[:m]  # [M]
+    h = gat_attention(z, s_src, s_dst, idx, mask) + bias
+    return jax.nn.relu(h) if relu else h
+
+
+def layer_apply(kind, params, x, idx, mask, relu):
+    if kind == "sage":
+        return sage_layer(params, x, idx, mask, relu)
+    if kind == "gat":
+        return gat_layer(params, x, idx, mask, relu)
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def layer_bwd(kind, params, x, idx, mask, relu, g_out):
+    """VJP of one layer w.r.t. (x, *params) — the per-layer backward the
+    split-parallel engine composes with reverse shuffles.
+
+    Returns ``(g_x [N,Din], *g_params)``.
+    """
+    _, vjp = jax.vjp(lambda xx, *pp: layer_apply(kind, pp, xx, idx, mask, relu), x, *params)
+    return vjp(g_out)
+
+
+# ---------------------------------------------------------------------------
+# Loss head
+# ---------------------------------------------------------------------------
+
+
+def loss_head(logits, labels, valid):
+    """Masked softmax cross-entropy over target rows.
+
+    Args:
+      logits: [B, C] — top-layer outputs for the (padded) target rows.
+      labels: [B] int32.
+      valid:  [B] float32 — 1.0 for real targets, 0.0 for padding.
+
+    Returns:
+      (loss, g_logits, correct): mean CE over valid rows, its gradient
+      w.r.t. ``logits``, and the number of correct (valid) predictions.
+    """
+    denom = jnp.maximum(valid.sum(), 1.0)
+
+    def mean_ce(lg):
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        ce = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+        return jnp.sum(ce * valid) / denom
+
+    loss, g_logits = jax.value_and_grad(mean_ce)(logits)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == labels).astype(jnp.float32) * valid)
+    return loss, g_logits, correct
+
+
+# ---------------------------------------------------------------------------
+# Whole-minibatch reference (used by tests and the fused single-device path)
+# ---------------------------------------------------------------------------
+
+
+def full_forward(kind, all_params, x_input, layers):
+    """Run a whole sampled mini-batch bottom-up on one device.
+
+    ``layers`` is a list of ``(idx, mask, gather)`` from bottom to top,
+    where ``gather`` maps the *next* layer's mixed rows into the current
+    output rows (what the cross-device shuffle does in split parallelism;
+    on one device it's a plain take). The bottom entry's ``gather`` indexes
+    into ``x_input`` rows. Returns top-layer logits.
+    """
+    h = x_input
+    num = len(all_params)
+    for l, (params, (idx, mask, gather)) in enumerate(zip(all_params, layers)):
+        if gather is not None:
+            h = h[gather]
+        relu = l + 1 < num
+        h = layer_apply(kind, params, h, idx, mask, relu)
+    return h
+
+
+def init_params(kind, rng, dims):
+    """Xavier-uniform init; ``dims`` = [(din, dout), ...] bottom→top.
+
+    Mirrors ``rust/src/model`` ParamStore layouts (shape-wise; the Rust
+    side streams its own deterministic values into the artifacts).
+    """
+    params = []
+    for din, dout in dims:
+        rng, k1, k2, k3 = jax.random.split(rng, 4)
+        bound = (6.0 / (din + dout)) ** 0.5
+        if kind == "sage":
+            params.append(
+                (
+                    jax.random.uniform(k1, (din, dout), minval=-bound, maxval=bound),
+                    jax.random.uniform(k2, (din, dout), minval=-bound, maxval=bound),
+                    jnp.zeros((dout,)),
+                )
+            )
+        else:
+            params.append(
+                (
+                    jax.random.uniform(k1, (din, dout), minval=-bound, maxval=bound),
+                    jax.random.uniform(k2, (dout,), minval=-bound, maxval=bound) * 0.1,
+                    jax.random.uniform(k3, (dout,), minval=-bound, maxval=bound) * 0.1,
+                    jnp.zeros((dout,)),
+                )
+            )
+    return params

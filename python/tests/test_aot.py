@@ -1,0 +1,90 @@
+"""AOT export contract tests: manifest consistency, HLO parameter counts
+(keep_unused must hold every argument), and golden-file regeneration
+determinism. These run against the checked-in aot module without writing
+to the real artifacts/ directory."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_param_specs_match_model_layouts():
+    sage = aot.param_specs("sage", 8, 4)
+    assert [s.shape for s in sage] == [(8, 4), (8, 4), (4,)]
+    gat = aot.param_specs("gat", 8, 4)
+    assert [s.shape for s in gat] == [(8, 4), (4,), (4,), (4,)]
+
+
+def test_layer_fwd_lowering_keeps_all_parameters():
+    # The no-relu backward famously DCEs the bias without keep_unused; the
+    # HLO entry signature must keep every runtime-supplied argument.
+    k, m, n, din, dout = 5, 256, 1536, 64, 8
+    specs = [
+        aot.f32(n, din),
+        aot.i32(m, k),
+        aot.f32(m, k),
+        aot.f32(m, dout),
+        *aot.param_specs("sage", din, dout),
+    ]
+    text = aot.lower_artifact(aot.layer_bwd_fn("sage", False), specs)
+    entry = text[text.index("ENTRY") :]
+    n_params = entry.count("parameter(")
+    assert n_params == len(specs), f"expected {len(specs)} params, HLO has {n_params}"
+
+
+def test_bucket_capacity_invariant():
+    # N = M·(K+1) guarantees any layer with m_real ≤ M fits (n_real ≤ N).
+    k = aot.KERNEL_K
+    for m in aot.M_BUCKETS:
+        n = m * (k + 1)
+        # worst case mixed size for m destinations:
+        assert m * (k + 1) <= n
+
+
+def test_full_export_writes_consistent_manifest(tmp_path):
+    # Monkeypatch the config to a tiny set so the test stays fast.
+    old = (aot.M_BUCKETS, aot.LOSS_BUCKETS, aot.LAYER_DIMS)
+    aot.M_BUCKETS, aot.LOSS_BUCKETS = [256], [256]
+    aot.LAYER_DIMS = [(aot.FEAT_DIM, aot.HIDDEN, True), (aot.HIDDEN, aot.NUM_CLASSES, False)]
+    try:
+        out = str(tmp_path / "arts")
+        aot.build_artifacts(out)
+        manifest = json.load(open(os.path.join(out, "manifest.json")))
+        assert manifest["version"] == 1
+        names = {a["name"] for a in manifest["artifacts"]}
+        # 2 models × 2 dims × 1 bucket × (fwd+bwd) + 1 loss = 9
+        assert len(names) == 9
+        for a in manifest["artifacts"]:
+            path = os.path.join(out, a["file"])
+            assert os.path.exists(path), a["file"]
+            text = open(path).read()
+            assert text.startswith("HloModule"), a["file"]
+        golden = json.load(open(os.path.join(out, "golden.json")))
+        assert "layer" in golden and "loss" in golden
+        assert len(golden["layer"]["out_rows"]) == golden["layer"]["m_real"] * aot.HIDDEN
+    finally:
+        aot.M_BUCKETS, aot.LOSS_BUCKETS, aot.LAYER_DIMS = old
+
+
+def test_loss_head_golden_math():
+    # Cross-check the golden loss values written by write_goldens against a
+    # hand computation on the same ramp inputs.
+    import numpy as np
+
+    b, c = 4, aot.NUM_CLASSES
+    logits = jnp.asarray(np.arange(b * c, dtype=np.float32).reshape(b, c) / 7.0)
+    labels = jnp.asarray(np.array([1, 0, 3, 2], dtype=np.int32))
+    valid = jnp.asarray(np.array([1.0, 1.0, 0.0, 1.0], dtype=np.float32))
+    loss, g, correct = model.loss_head(logits, labels, valid)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    want = -(logp[0, 1] + logp[1, 0] + logp[3, 2]) / 3.0
+    assert abs(float(loss) - float(want)) < 1e-6
+    assert float(jnp.abs(g[2]).sum()) < 1e-8  # masked row: no gradient

@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py), including
+hypothesis sweeps over shapes and the custom_vjp backward passes vs
+jax.grad of the references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gat_attention, gather_mean, ref, scatter_mean_grad
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_case(seed, n, m, k, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    idx = rng.integers(0, n, (m, k)).astype(np.int32)
+    mask = (rng.random((m, k)) > 0.25).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(idx), jnp.asarray(mask)
+
+
+class TestGatherMean:
+    def test_matches_ref_basic(self):
+        x, idx, mask = rand_case(0, n=64, m=32, k=5, d=16)
+        got = gather_mean(x, idx, mask)
+        want = ref.gather_mean_ref(x, idx, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_degree_rows_are_zero(self):
+        x, idx, mask = rand_case(1, n=32, m=8, k=4, d=8)
+        mask = mask.at[3].set(0.0)
+        got = gather_mean(x, idx, mask)
+        np.testing.assert_allclose(got[3], np.zeros(8), atol=1e-6)
+
+    def test_full_mask_is_plain_mean(self):
+        x, idx, _ = rand_case(2, n=32, m=16, k=4, d=8)
+        mask = jnp.ones((16, 4), jnp.float32)
+        got = gather_mean(x, idx, mask)
+        want = x[idx].mean(axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(2, 200),
+        m=st.integers(1, 300),
+        k=st.integers(1, 12),
+        d=st.integers(1, 40),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_sweep(self, n, m, k, d, seed):
+        x, idx, mask = rand_case(seed, n=n, m=m, k=k, d=d)
+        got = gather_mean(x, idx, mask)
+        want = ref.gather_mean_ref(x, idx, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_grad_matches_ref_grad(self):
+        x, idx, mask = rand_case(3, n=48, m=24, k=5, d=12)
+
+        def via_kernel(xx):
+            return (gather_mean(xx, idx, mask) ** 2).sum()
+
+        def via_ref(xx):
+            return (ref.gather_mean_ref(xx, idx, mask) ** 2).sum()
+
+        gk = jax.grad(via_kernel)(x)
+        gr = jax.grad(via_ref)(x)
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+    def test_scatter_bwd_matches_ref(self):
+        x, idx, mask = rand_case(4, n=40, m=16, k=6, d=8)
+        g = jnp.asarray(np.random.default_rng(5).standard_normal((16, 8)).astype(np.float32))
+        got = scatter_mean_grad(idx, mask, g, 40)
+        want = ref.gather_mean_grad_x_ref(idx, mask, g, 40)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(2, 100),
+        m=st.integers(1, 150),
+        k=st.integers(1, 8),
+        d=st.integers(1, 24),
+        seed=st.integers(0, 10_000),
+    )
+    def test_grad_sweep(self, n, m, k, d, seed):
+        x, idx, mask = rand_case(seed, n=n, m=m, k=k, d=d)
+        g = jnp.asarray(
+            np.random.default_rng(seed + 1).standard_normal((m, d)).astype(np.float32)
+        )
+        got = scatter_mean_grad(idx, mask, g, n)
+        want = ref.gather_mean_grad_x_ref(idx, mask, g, n)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_duplicate_indices_accumulate(self):
+        # All neighbors point at row 0: gradient should pile up there.
+        n, m, k, d = 8, 4, 3, 2
+        x = jnp.ones((n, d), jnp.float32)
+        idx = jnp.zeros((m, k), jnp.int32)
+        mask = jnp.ones((m, k), jnp.float32)
+        g = jnp.ones((m, d), jnp.float32)
+        gx = scatter_mean_grad(idx, mask, g, n)
+        # every row contributes 1/k per slot, k slots, m rows → m total
+        np.testing.assert_allclose(gx[0], np.full(d, float(m)), rtol=1e-5)
+        np.testing.assert_allclose(gx[1:], np.zeros((n - 1, d)), atol=1e-7)
+
+
+def rand_gat_case(seed, n, m, k, d):
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((n, d)).astype(np.float32)
+    s_src = rng.standard_normal(n).astype(np.float32)
+    s_dst = rng.standard_normal(m).astype(np.float32)
+    idx = rng.integers(0, n, (m, k)).astype(np.int32)
+    mask = (rng.random((m, k)) > 0.3).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (z, s_src, s_dst, idx, mask))
+
+
+class TestGatAttention:
+    def test_matches_ref_basic(self):
+        z, s_src, s_dst, idx, mask = rand_gat_case(0, n=64, m=32, k=5, d=16)
+        got = gat_attention(z, s_src, s_dst, idx, mask)
+        want = ref.gat_attention_ref(z, s_src, s_dst, idx, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_isolated_vertex_keeps_self(self):
+        # All neighbors masked out ⇒ attention collapses onto the self edge.
+        z, s_src, s_dst, idx, _ = rand_gat_case(1, n=16, m=4, k=3, d=8)
+        mask = jnp.zeros((4, 3), jnp.float32)
+        got = gat_attention(z, s_src, s_dst, idx, mask)
+        np.testing.assert_allclose(got, z[:4], rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(2, 150),
+        m=st.integers(1, 200),
+        k=st.integers(1, 10),
+        d=st.integers(1, 32),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref_sweep(self, n, m, k, d, seed):
+        m = min(m, n)  # dst rows are a prefix of the mixed rows
+        z, s_src, s_dst, idx, mask = rand_gat_case(seed, n=n, m=m, k=k, d=d)
+        got = gat_attention(z, s_src, s_dst, idx, mask)
+        want = ref.gat_attention_ref(z, s_src, s_dst, idx, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_attention_weights_sum_to_one_effect(self):
+        # With identical z rows the output must equal that row regardless
+        # of attention weights (softmax is a convex combination).
+        n, m, k, d = 20, 6, 4, 5
+        z = jnp.tile(jnp.arange(d, dtype=jnp.float32)[None, :], (n, 1))
+        s_src = jnp.linspace(-1, 1, n)
+        s_dst = jnp.linspace(1, -1, m)
+        idx = jnp.asarray(np.random.default_rng(2).integers(0, n, (m, k)), jnp.int32)
+        mask = jnp.ones((m, k), jnp.float32)
+        got = gat_attention(z, s_src, s_dst, idx, mask)
+        np.testing.assert_allclose(got, z[:m], rtol=1e-5, atol=1e-5)
+
+    def test_grad_matches_ref(self):
+        z, s_src, s_dst, idx, mask = rand_gat_case(3, n=40, m=16, k=5, d=8)
+
+        def via_kernel(zz, ss, sd):
+            return (gat_attention(zz, ss, sd, idx, mask) ** 2).sum()
+
+        def via_ref(zz, ss, sd):
+            return (ref.gat_attention_ref(zz, ss, sd, idx, mask) ** 2).sum()
+
+        gk = jax.grad(via_kernel, argnums=(0, 1, 2))(z, s_src, s_dst)
+        gr = jax.grad(via_ref, argnums=(0, 1, 2))(z, s_src, s_dst)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestJitAndLowering:
+    def test_kernels_jit_cleanly(self):
+        x, idx, mask = rand_case(7, n=32, m=16, k=4, d=8)
+        jit_fn = jax.jit(gather_mean)
+        np.testing.assert_allclose(
+            jit_fn(x, idx, mask), gather_mean(x, idx, mask), rtol=1e-6
+        )
+
+    def test_gather_mean_lowers_to_hlo_text(self):
+        from compile.aot import to_hlo_text
+
+        spec_x = jax.ShapeDtypeStruct((60, 8), jnp.float32)
+        spec_i = jax.ShapeDtypeStruct((10, 4), jnp.int32)
+        spec_m = jax.ShapeDtypeStruct((10, 4), jnp.float32)
+        lowered = jax.jit(lambda *a: (gather_mean(*a),)).lower(spec_x, spec_i, spec_m)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ROOT" in text

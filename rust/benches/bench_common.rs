@@ -1,0 +1,180 @@
+//! Shared infrastructure for the paper-reproduction benches.
+//!
+//! Heavy offline products (pre-sample weights, partitionings) are cached
+//! under `target/bench_cache/` so re-running individual benches doesn't
+//! repeat minutes of identical offline work. Set `GSPLIT_BENCH_QUICK=1`
+//! to cap per-epoch iterations (scaled extrapolation) while iterating.
+
+#![allow(dead_code)]
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use gsplit::costmodel::{iter_time, IterCounters, PhaseBreakdown};
+use gsplit::exec::{Engine, EngineCtx, SplitParallel};
+use gsplit::graph::{Dataset, StandIn};
+use gsplit::partition::{partition_graph, Partitioning, Strategy};
+use gsplit::presample::{presample, PresampleConfig, PresampleWeights};
+use gsplit::rng::derive_seed;
+
+pub const SEED: u64 = 42;
+/// Paper defaults (§7.1).
+pub const FANOUT: usize = 15;
+pub const LAYERS: usize = 3;
+pub const HIDDEN: usize = 256;
+pub const BATCH: usize = 1024;
+/// Pre-sampling epochs for weights (the paper found 10 sufficient; 3 is
+/// indistinguishable at stand-in scale and keeps bench setup fast — the
+/// 10/30 sweep itself is in fig6_ablations).
+pub const PRESAMPLE_EPOCHS: usize = 3;
+
+pub fn quick() -> bool {
+    std::env::var("GSPLIT_BENCH_QUICK").is_ok()
+}
+
+/// Max iterations actually executed per epoch (rest extrapolated — batches
+/// are iid samples of the same distribution, so the per-iteration mean is
+/// unbiased). `GSPLIT_BENCH_FULL=1` runs every iteration.
+pub fn iter_cap() -> usize {
+    if quick() {
+        4
+    } else if std::env::var("GSPLIT_BENCH_FULL").is_ok() {
+        usize::MAX
+    } else {
+        16
+    }
+}
+
+fn cache_dir() -> PathBuf {
+    let d = PathBuf::from("target/bench_cache");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+pub fn train_mask(ds: &Dataset) -> Vec<bool> {
+    let mut m = vec![false; ds.graph.num_vertices()];
+    for &t in &ds.labels.train_set {
+        m[t as usize] = true;
+    }
+    m
+}
+
+/// Pre-sample weights, disk-cached.
+pub fn presample_cached(ds: &Dataset, epochs: usize, fanout: usize, layers: usize) -> PresampleWeights {
+    let key = format!("pw_{}_{epochs}_{fanout}_{layers}_{}.bin", ds.spec.name, BATCH);
+    let path = cache_dir().join(key);
+    if let Ok(mut f) = std::fs::File::open(&path) {
+        let mut buf = Vec::new();
+        if f.read_to_end(&mut buf).is_ok() {
+            if let Some(w) = decode_weights(&buf, ds) {
+                return w;
+            }
+        }
+    }
+    let w = presample(
+        &ds.graph,
+        &ds.labels.train_set,
+        &PresampleConfig { epochs, batch_size: BATCH, fanouts: vec![fanout; layers], seed: SEED },
+    );
+    if let Ok(mut f) = std::fs::File::create(&path) {
+        f.write_all(&encode_weights(&w)).ok();
+    }
+    w
+}
+
+/// Partitioning, disk-cached.
+pub fn partition_cached(
+    ds: &Dataset,
+    w: &PresampleWeights,
+    strategy: Strategy,
+    k: usize,
+) -> Partitioning {
+    let key = format!("part_{}_{strategy:?}_{k}_{}.bin", ds.spec.name, w.epochs);
+    let path = cache_dir().join(key);
+    if let Ok(buf) = std::fs::read(&path) {
+        if buf.len() == ds.graph.num_vertices() * 2 {
+            let assignment: Vec<u16> =
+                buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+            return Partitioning { assignment, k };
+        }
+    }
+    let p = partition_graph(&ds.graph, w, &train_mask(ds), strategy, k, 0.05, SEED);
+    let bytes: Vec<u8> = p.assignment.iter().flat_map(|d| d.to_le_bytes()).collect();
+    std::fs::write(&path, bytes).ok();
+    p
+}
+
+fn encode_weights(w: &PresampleWeights) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + w.vertex.len() * 8 + w.edge.len() * 4);
+    out.extend((w.vertex.len() as u64).to_le_bytes());
+    out.extend((w.edge.len() as u64).to_le_bytes());
+    out.extend((w.epochs as u64).to_le_bytes());
+    for &v in &w.vertex {
+        out.extend(v.to_le_bytes());
+    }
+    for &e in &w.edge {
+        out.extend(e.to_le_bytes());
+    }
+    out
+}
+
+fn decode_weights(buf: &[u8], ds: &Dataset) -> Option<PresampleWeights> {
+    if buf.len() < 24 {
+        return None;
+    }
+    let nv = u64::from_le_bytes(buf[0..8].try_into().ok()?) as usize;
+    let ne = u64::from_le_bytes(buf[8..16].try_into().ok()?) as usize;
+    let epochs = u64::from_le_bytes(buf[16..24].try_into().ok()?) as usize;
+    if nv != ds.graph.num_vertices()
+        || ne != ds.graph.num_edges()
+        || buf.len() != 24 + nv * 8 + ne * 4
+    {
+        return None;
+    }
+    let vertex = buf[24..24 + nv * 8].chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+    let edge = buf[24 + nv * 8..].chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    Some(PresampleWeights { vertex, edge, epochs })
+}
+
+/// Run one epoch with an iteration cap; the modeled time is scaled up to
+/// the full epoch (counters are NOT scaled — callers using counters should
+/// pass `usize::MAX`).
+pub fn epoch_time(
+    engine: &mut dyn Engine,
+    ctx: &EngineCtx,
+    batch: usize,
+    epoch_seed: u64,
+    cap: usize,
+) -> (IterCounters, PhaseBreakdown) {
+    let targets = ctx.ds.epoch_targets(epoch_seed);
+    let total_iters = targets.len().div_ceil(batch).max(1);
+    let run_iters = total_iters.min(cap);
+    let mut counters = IterCounters::new(ctx.k());
+    let mut time = PhaseBreakdown::default();
+    for (i, chunk) in targets.chunks(batch).take(run_iters).enumerate() {
+        let c = engine.iteration(ctx, chunk, derive_seed(epoch_seed, &[i as u64]));
+        time.add(iter_time(&c, &ctx.topo));
+        counters.merge(&c);
+    }
+    let scale = total_iters as f64 / run_iters as f64;
+    time.sampling *= scale;
+    time.loading *= scale;
+    time.fb *= scale;
+    (counters, time)
+}
+
+/// Build the GSplit engine (presample → partition → engine).
+pub fn build_gsplit(ctx: &EngineCtx, strategy: Strategy, batch: usize) -> SplitParallel {
+    let w = presample_cached(ctx.ds, PRESAMPLE_EPOCHS, ctx.fanouts[0], ctx.fanouts.len());
+    let part = partition_cached(ctx.ds, &w, strategy, ctx.k());
+    SplitParallel::new(ctx, part, &w.vertex, batch)
+}
+
+pub fn all_datasets() -> Vec<Dataset> {
+    StandIn::all_paper().iter().map(|s| s.load().expect("dataset")).collect()
+}
+
+/// Format a speedup column like the paper ("4.4×"; empty for the baseline).
+pub fn speedup(other_total: f64, gsplit_total: f64) -> String {
+    format!("{:.1}x", other_total / gsplit_total)
+}

@@ -1,0 +1,77 @@
+//! **Figure 3** — epoch time breakdown of existing systems.
+//!
+//! (a) S / L / FB per epoch for DGL, Quiver, and P3* on Orkut and
+//!     Papers100M with GraphSage and GAT (the motivation figure: loading
+//!     dominates DGL; P3* trades loading for shuffle-heavy FB).
+//! (b) percentage breakdown for Quiver on Orkut and Papers100M with
+//!     GraphSage (loading stays significant even with distributed caching).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::*;
+use gsplit::devices::Topology;
+use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull};
+use gsplit::graph::StandIn;
+use gsplit::model::GnnKind;
+use gsplit::util::{fmt_secs, Table};
+
+fn main() {
+    println!("Figure 3(a) — epoch breakdown of DGL / Quiver / P3* (modeled seconds)\n");
+    let mut table =
+        Table::new(&["Graph", "Model", "System", "S", "L", "FB", "Total(s)", "L %"]).left(0).left(1).left(2);
+    let mut quiver_pct: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    for standin in [StandIn::OrkutS, StandIn::PapersS] {
+        let ds = standin.load().expect("dataset");
+        for kind in [GnnKind::GraphSage, GnnKind::Gat] {
+            let ctx = EngineCtx::new(
+                &ds,
+                Topology::p3_8xlarge(ds.spec.scale_divisor),
+                kind,
+                HIDDEN,
+                LAYERS,
+                FANOUT,
+            );
+            let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
+            let mut run = |name: &str, e: &mut dyn Engine| {
+                let (_, t) = epoch_time(e, &ctx, BATCH, SEED, iter_cap());
+                table.row(vec![
+                    ds.spec.paper_name.to_string(),
+                    kind.name().to_string(),
+                    name.to_string(),
+                    fmt_secs(t.sampling),
+                    fmt_secs(t.loading),
+                    fmt_secs(t.fb),
+                    fmt_secs(t.total()),
+                    format!("{:.0}%", 100.0 * t.loading / t.total()),
+                ]);
+                t
+            };
+            run("DGL", &mut DataParallel::dgl(&ctx));
+            let tq = run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH));
+            run("P3*", &mut PushPull::new(&ctx, BATCH));
+            table.sep();
+            if kind == GnnKind::GraphSage {
+                quiver_pct.push((
+                    ds.spec.paper_name.to_string(),
+                    tq.sampling / tq.total() * 100.0,
+                    tq.loading / tq.total() * 100.0,
+                    tq.fb / tq.total() * 100.0,
+                ));
+            }
+        }
+    }
+    table.print();
+
+    println!("\nFigure 3(b) — Quiver phase percentages (GraphSage)\n");
+    let mut t2 = Table::new(&["Graph", "Sampling %", "Loading %", "Training %"]).left(0);
+    for (g, s, l, fb) in quiver_pct {
+        t2.row(vec![g, format!("{s:.0}%"), format!("{l:.0}%"), format!("{fb:.0}%")]);
+    }
+    t2.print();
+    println!(
+        "\nPaper: DGL loading >60% of epoch time; Quiver cuts Orkut loading via NVLink cache\n\
+         but Papers100M loading stays high (~30%); P3* has lowest L but highest FB."
+    );
+}

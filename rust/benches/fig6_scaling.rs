@@ -1,0 +1,81 @@
+//! **Figure 6(a)/(b)** — scalability.
+//!
+//! (a) Single host, 2 / 4 / 8 GPUs (8-GPU host is the NVLink hybrid cube
+//!     mesh where not every pair is directly connected — Quiver must
+//!     replicate its cache across the two 4-cliques, GSplit need not).
+//! (b) Multi-host: 1 / 2 / 4 hosts × 4 GPUs; GSplit = data parallelism
+//!     across hosts × split parallelism within each host.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::*;
+use gsplit::devices::Topology;
+use gsplit::exec::{DataParallel, EngineCtx, SplitParallel};
+use gsplit::model::GnnKind;
+use gsplit::partition::Strategy;
+use gsplit::util::{fmt_secs, Table};
+
+fn main() {
+    let kind = GnnKind::GraphSage;
+    println!("Figure 6(a) — single-host scaling (epoch seconds; speedup = system/GSplit)\n");
+    let mut ta =
+        Table::new(&["Graph", "GPUs", "DGL", "Quiver", "GSplit", "DGL x", "Quiver x"]).left(0);
+    for ds in all_datasets() {
+        for gpus in [2usize, 4, 8] {
+            let topo = Topology::for_gpus(gpus, ds.spec.scale_divisor);
+            let ctx = EngineCtx::new(&ds, topo, kind, HIDDEN, LAYERS, FANOUT);
+            let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
+            let t_dgl = epoch_time(&mut DataParallel::dgl(&ctx), &ctx, BATCH, SEED, iter_cap()).1;
+            let t_q =
+                epoch_time(&mut DataParallel::quiver(&ctx, &w, BATCH), &ctx, BATCH, SEED, iter_cap()).1;
+            let part = partition_cached(&ds, &w, Strategy::GSplit, gpus);
+            let mut gs = SplitParallel::new(&ctx, part, &w.vertex, BATCH);
+            let t_g = epoch_time(&mut gs, &ctx, BATCH, SEED, iter_cap()).1;
+            ta.row(vec![
+                ds.spec.paper_name.to_string(),
+                gpus.to_string(),
+                fmt_secs(t_dgl.total()),
+                fmt_secs(t_q.total()),
+                fmt_secs(t_g.total()),
+                speedup(t_dgl.total(), t_g.total()),
+                speedup(t_q.total(), t_g.total()),
+            ]);
+        }
+        ta.sep();
+    }
+    ta.print();
+
+    println!("\nFigure 6(b) — multi-host scaling (hosts × 4 GPUs; GraphSage)\n");
+    let mut tb =
+        Table::new(&["Graph", "Hosts", "DGL", "Quiver", "GSplit", "DGL x", "Quiver x"]).left(0);
+    for ds in all_datasets() {
+        for hosts in [1usize, 2, 4] {
+            let topo = Topology::multi_host(hosts, ds.spec.scale_divisor);
+            let k = topo.num_gpus();
+            let ctx = EngineCtx::new(&ds, topo, kind, HIDDEN, LAYERS, FANOUT);
+            let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
+            let t_dgl = epoch_time(&mut DataParallel::dgl(&ctx), &ctx, BATCH, SEED, iter_cap()).1;
+            let t_q =
+                epoch_time(&mut DataParallel::quiver(&ctx, &w, BATCH), &ctx, BATCH, SEED, iter_cap()).1;
+            let part = partition_cached(&ds, &w, Strategy::GSplit, k);
+            let mut gs = SplitParallel::new(&ctx, part, &w.vertex, BATCH);
+            let t_g = epoch_time(&mut gs, &ctx, BATCH, SEED, iter_cap()).1;
+            tb.row(vec![
+                ds.spec.paper_name.to_string(),
+                hosts.to_string(),
+                fmt_secs(t_dgl.total()),
+                fmt_secs(t_q.total()),
+                fmt_secs(t_g.total()),
+                speedup(t_dgl.total(), t_g.total()),
+                speedup(t_q.total(), t_g.total()),
+            ]);
+        }
+        tb.sep();
+    }
+    tb.print();
+    println!(
+        "\nPaper: GSplit's speedups grow with GPU count (more redundancy to avoid; no cache\n\
+         replication on the 8-GPU cube mesh) and persist across hosts with hybrid parallelism."
+    );
+}

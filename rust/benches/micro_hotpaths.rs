@@ -1,0 +1,82 @@
+//! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md): neighbor
+//! sampling rate, online splitting + shuffle-index build rate, vertex-map
+//! throughput, partitioner wall time, and feature gather bandwidth.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::*;
+use gsplit::bench_harness::{section, Bench};
+use gsplit::graph::StandIn;
+use gsplit::partition::{partition_graph, Strategy};
+use gsplit::presample::PresampleWeights;
+use gsplit::rng::{derive_seed, Pcg32};
+use gsplit::sampling::{Sampler, VertexMap};
+use gsplit::split::SplitSampler;
+use gsplit::Vid;
+
+fn main() {
+    let ds = StandIn::OrkutS.load().expect("dataset");
+    let bench = if quick() { Bench::quick() } else { Bench::default().with_budget(3.0) };
+    let fanouts = vec![FANOUT; LAYERS];
+    let targets: Vec<Vid> = ds.epoch_targets(SEED).into_iter().take(BATCH).collect();
+
+    // --- single-device mini-batch sampling ---
+    section("mini-batch sampling (orkut-s, batch 1024, fanout 15, 3 layers)");
+    let mut sampler = Sampler::new();
+    let mut seed_ctr = 0u64;
+    let mut mb = gsplit::sampling::MiniBatch::default();
+    // Measure edges/s: pre-measure edge count of one batch.
+    let probe = sampler.sample(&ds.graph, &targets, &fanouts, &mut Pcg32::new(1));
+    let edges = probe.total_edges() as f64;
+    bench.run("sample_minibatch", Some(edges), || {
+        seed_ctr += 1;
+        let mut rng = Pcg32::new(derive_seed(SEED, &[seed_ctr]));
+        sampler.sample_into(&ds.graph, &targets, &fanouts, &mut rng, &mut mb);
+    });
+
+    // --- cooperative split-parallel sampling (includes online splitting +
+    //     shuffle-index construction) ---
+    section("split-parallel sampling + shuffle index (4 splits)");
+    let w = PresampleWeights::uniform(&ds.graph);
+    let mask = vec![false; ds.graph.num_vertices()];
+    let part = partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.05, SEED);
+    let mut ss = SplitSampler::new(4);
+    bench.run("split_sample_minibatch", Some(edges), || {
+        seed_ctr += 1;
+        ss.sample(&ds.graph, &targets, &fanouts, &part, seed_ctr)
+    });
+
+    // --- vertex map ---
+    section("VertexMap get_or_insert (1M mixed ops)");
+    let keys: Vec<Vid> = {
+        let mut rng = Pcg32::new(3);
+        (0..1_000_000).map(|_| rng.gen_range(200_000)).collect()
+    };
+    let mut vm = VertexMap::new();
+    bench.run("vertex_map_1M", Some(1e6), || {
+        vm.reset(300_000);
+        let mut acc = 0u32;
+        for &k in &keys {
+            acc ^= vm.get_or_insert(k).0;
+        }
+        acc
+    });
+
+    // --- partitioner ---
+    section("multilevel partitioner (orkut-s, k=4)");
+    let bench_slow = if quick() { Bench::quick() } else { Bench::default().with_budget(10.0) };
+    bench_slow.run("partition_orkut_s", None, || {
+        partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.05, SEED)
+    });
+
+    // --- feature gather (loading path) ---
+    section("feature row gather (orkut-s rows, 512 dims)");
+    let inputs: Vec<Vid> = probe.input_vertices().to_vec();
+    let mut buf = Vec::new();
+    let bytes = inputs.len() as f64 * ds.features.row_bytes() as f64;
+    bench.run("gather_input_rows", Some(bytes), || {
+        ds.features.gather(&inputs, &mut buf);
+        buf.len()
+    });
+}

@@ -1,0 +1,76 @@
+//! **Table 3** — end-to-end epoch time (S / L / FB / Total, speedup vs
+//! GSplit) for DGL, P3*, Quiver, Edge (GSplit with unweighted min-cut
+//! partitioning), and GSplit, on all three graphs × GraphSage and GAT,
+//! at the paper's defaults (4 GPUs, fanout 15, 3 layers, hidden 256,
+//! batch 1024).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::*;
+use gsplit::devices::Topology;
+use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
+use gsplit::model::GnnKind;
+use gsplit::partition::Strategy;
+use gsplit::util::{fmt_secs, Table};
+
+fn main() {
+    println!(
+        "Table 3 — epoch time (modeled seconds on the simulated 4×V100 host).\n\
+         S = sampling, L = loading, FB = forward+backward; speedup = Total / GSplit Total.\n"
+    );
+    let mut table =
+        Table::new(&["Graph", "System", "Model", "S", "L", "FB", "Total(s)", "Speedup"]).left(0).left(1).left(2);
+
+    for ds in all_datasets() {
+        let topo = || Topology::p3_8xlarge(ds.spec.scale_divisor);
+        for kind in [GnnKind::GraphSage, GnnKind::Gat] {
+            let ctx = EngineCtx::new(&ds, topo(), kind, HIDDEN, LAYERS, FANOUT);
+            let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
+
+            let mut rows: Vec<(String, gsplit::costmodel::PhaseBreakdown)> = Vec::new();
+            let mut run = |name: &str, engine: &mut dyn Engine| {
+                let (_, t) = epoch_time(engine, &ctx, BATCH, SEED, iter_cap());
+                rows.push((name.to_string(), t));
+            };
+            run("DGL", &mut DataParallel::dgl(&ctx));
+            run("P3*", &mut PushPull::new(&ctx, BATCH));
+            run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH));
+            {
+                let part = partition_cached(&ds, &w, Strategy::Edge, ctx.k());
+                run("Edge", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH));
+            }
+            {
+                let part = partition_cached(&ds, &w, Strategy::GSplit, ctx.k());
+                run("GSplit", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH));
+            }
+
+            let gsplit_total = rows.last().unwrap().1.total();
+            for (name, t) in &rows {
+                let sp = if name == "GSplit" {
+                    String::new()
+                } else {
+                    speedup(t.total(), gsplit_total)
+                };
+                table.row(vec![
+                    ds.spec.paper_name.to_string(),
+                    name.clone(),
+                    kind.name().to_string(),
+                    fmt_secs(t.sampling),
+                    fmt_secs(t.loading),
+                    fmt_secs(t.fb),
+                    fmt_secs(t.total()),
+                    sp,
+                ]);
+            }
+            table.sep();
+        }
+    }
+    table.print();
+    println!(
+        "\nPaper (Table 3) speedups vs GSplit — Orkut: DGL 4.4x/3.6x, P3* 0.8x/1.9x, Quiver 1.1x/1.1x, Edge 1.7x/1.6x;\n\
+         Papers100M: DGL 1.4x/1.2x, P3* 2.2x/2.2x, Quiver 1.9x/1.4x, Edge 1.5x/1.4x;\n\
+         Friendster: DGL 2.9x/1.7x, P3* 4.1x/3.0x, Quiver 1.6x/1.2x, Edge 1.3x/1.4x (Sage/GAT).\n\
+         Expectation on stand-ins: same ordering and crossovers (absolute seconds are scaled by 1/divisor)."
+    );
+}

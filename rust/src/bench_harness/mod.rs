@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup,
+//! timed iterations, and robust statistics. Used by `rust/benches/*.rs`
+//! (compiled with `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean_s)
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>8.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} K/s", t / 1e3),
+            Some(t) => format!("  {t:>8.2} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<42} {:>10} {:>10} {:>10} {:>4} iters{}",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.median_s),
+            fmt_dur(self.p95_s),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Runner with a time budget per case.
+pub struct Bench {
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    budget_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, min_iters: 5, max_iters: 200, budget_s: 2.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, min_iters: 3, max_iters: 50, budget_s: 0.5 }
+    }
+
+    pub fn with_budget(mut self, s: f64) -> Self {
+        self.budget_s = s;
+        self
+    }
+
+    /// Run `f` repeatedly; `items` sets the throughput denominator.
+    pub fn run<T>(&self, name: &str, items: Option<f64>, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let t_start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && t_start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            median_s: samples[n / 2],
+            p95_s: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            min_s: samples[0],
+            items_per_iter: items,
+        };
+        println!("{}", stats.report_line());
+        stats
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<42} {:>10} {:>10} {:>10}",
+        "case", "mean", "median", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { warmup_iters: 1, min_iters: 3, max_iters: 5, budget_s: 0.05 };
+        let s = b.run("noop", Some(100.0), || 1 + 1);
+        assert!(s.iters >= 3);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(s.report_line().contains("noop"));
+    }
+}

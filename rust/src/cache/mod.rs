@@ -1,0 +1,295 @@
+//! Static GPU feature caches (paper §2.2, §3, §7.1).
+//!
+//! Three placement policies, matching the systems compared in the paper:
+//!
+//! * **None** — DGL: no distributed cache (DGL only caches when everything
+//!   fits on a single GPU, which never holds for the evaluated graphs).
+//! * **Distributed** — Quiver/GNNLab: the hottest vertices (ranked by
+//!   pre-sampling frequency, the criterion of [41] used by both Quiver and
+//!   GSplit in §7.1) are *partitioned* across GPUs that share NVLink, and
+//!   *replicated* across GPU groups with no direct link (§7.4).
+//! * **Partitioned** — GSplit: vertex `v` may be cached **only on the
+//!   device `f_G(v)` that owns it**, keeping the cache consistent with the
+//!   splits; each device caches its hottest owned vertices.
+//!
+//! The cache answers one question on the hot path: *from where does device
+//! `d` obtain the input features of vertex `v`?* — locally, from an NVLink
+//! peer, or from host memory over PCIe.
+
+use crate::devices::Topology;
+use crate::partition::Partitioning;
+use crate::{DeviceId, Vid};
+
+/// Where a feature row is served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchSource {
+    /// Cached on the requesting GPU.
+    Local,
+    /// Cached on an NVLink-connected peer GPU.
+    Peer(DeviceId),
+    /// Not cached anywhere reachable: host memory over PCIe.
+    Host,
+}
+
+/// Immutable cache placement: a per-vertex bitmask of devices holding the
+/// row (supports replication; `k ≤ 32`).
+#[derive(Debug, Clone)]
+pub struct FeatureCache {
+    mask: Vec<u32>,
+    k: usize,
+    /// Rows cached per device (for reporting / capacity assertions).
+    per_dev_rows: Vec<u64>,
+}
+
+impl FeatureCache {
+    /// DGL-style: nothing cached.
+    pub fn none(num_vertices: usize, k: usize) -> Self {
+        FeatureCache { mask: vec![0; num_vertices], k, per_dev_rows: vec![0; k] }
+    }
+
+    /// Quiver-style distributed cache. `capacity_rows` is the per-GPU
+    /// budget. Hot vertices (by `ranking` weight, descending) are
+    /// partitioned round-robin within each NVLink clique and replicated
+    /// across cliques.
+    pub fn distributed(
+        ranking: &[u64],
+        capacity_rows: u64,
+        topo: &Topology,
+    ) -> Self {
+        let k = topo.num_gpus();
+        assert!(k <= 32);
+        let n = ranking.len();
+        let mut cache = FeatureCache { mask: vec![0; n], k, per_dev_rows: vec![0; k] };
+        let order = ranked_order(ranking);
+        let cliques = nvlink_cliques(topo);
+        for clique in &cliques {
+            // Partition the hottest clique.len()×capacity rows round-robin.
+            let mut budget: Vec<u64> = clique.iter().map(|_| capacity_rows).collect();
+            let mut slot = 0usize;
+            for &v in &order {
+                if budget.iter().all(|&b| b == 0) {
+                    break;
+                }
+                // advance to a clique member with remaining budget
+                let mut placed = false;
+                for _ in 0..clique.len() {
+                    let d = clique[slot % clique.len()];
+                    let b = &mut budget[slot % clique.len()];
+                    slot += 1;
+                    if *b > 0 {
+                        cache.mask[v as usize] |= 1 << d;
+                        cache.per_dev_rows[d as usize] += 1;
+                        *b -= 1;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    break;
+                }
+            }
+        }
+        cache
+    }
+
+    /// GSplit-style partitioned cache: device `f_G(v)` caches its hottest
+    /// owned vertices up to `capacity_rows`.
+    pub fn partitioned(
+        ranking: &[u64],
+        capacity_rows: u64,
+        part: &Partitioning,
+    ) -> Self {
+        let k = part.k;
+        assert!(k <= 32);
+        let n = ranking.len();
+        let mut cache = FeatureCache { mask: vec![0; n], k, per_dev_rows: vec![0; k] };
+        let order = ranked_order(ranking);
+        let mut budget = vec![capacity_rows; k];
+        for &v in &order {
+            let d = part.device_of(v) as usize;
+            if budget[d] > 0 {
+                cache.mask[v as usize] |= 1 << d;
+                cache.per_dev_rows[d] += 1;
+                budget[d] -= 1;
+            }
+        }
+        cache
+    }
+
+    #[inline]
+    pub fn is_cached_on(&self, v: Vid, d: DeviceId) -> bool {
+        self.mask[v as usize] & (1 << d) != 0
+    }
+
+    /// Resolve where device `d` fetches `v` from. Peer fetches require a
+    /// direct NVLink (Quiver's constraint, §7.4).
+    #[inline]
+    pub fn fetch_source(&self, v: Vid, d: DeviceId, topo: &Topology) -> FetchSource {
+        let m = self.mask[v as usize];
+        if m == 0 {
+            return FetchSource::Host;
+        }
+        if m & (1 << d) != 0 {
+            return FetchSource::Local;
+        }
+        let mut bits = m;
+        while bits != 0 {
+            let o = bits.trailing_zeros() as DeviceId;
+            bits &= bits - 1;
+            if topo.has_nvlink(d, o) {
+                return FetchSource::Peer(o);
+            }
+        }
+        FetchSource::Host
+    }
+
+    /// Fraction of all vertices cached on ≥1 device.
+    pub fn coverage(&self) -> f64 {
+        let cached = self.mask.iter().filter(|&&m| m != 0).count();
+        cached as f64 / self.mask.len().max(1) as f64
+    }
+
+    pub fn rows_on(&self, d: DeviceId) -> u64 {
+        self.per_dev_rows[d as usize]
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Vertices in descending ranking order (stable: ties by vertex id).
+fn ranked_order(ranking: &[u64]) -> Vec<Vid> {
+    let mut order: Vec<Vid> = (0..ranking.len() as Vid).collect();
+    order.sort_by_key(|&v| std::cmp::Reverse((ranking[v as usize], std::cmp::Reverse(v))));
+    order
+}
+
+/// Greedy NVLink clique cover: groups of GPUs that are pairwise
+/// NVLink-connected. On p3.8xlarge this is one clique of 4; on the
+/// p3.16xlarge cube mesh it yields two cliques of 4 (matching Quiver's
+/// replication behaviour described in §7.4).
+pub fn nvlink_cliques(topo: &Topology) -> Vec<Vec<DeviceId>> {
+    let k = topo.num_gpus();
+    let mut assigned = vec![false; k];
+    let mut cliques = Vec::new();
+    for seed in 0..k {
+        if assigned[seed] {
+            continue;
+        }
+        let mut clique = vec![seed as DeviceId];
+        assigned[seed] = true;
+        for cand in (seed + 1)..k {
+            if assigned[cand] {
+                continue;
+            }
+            if clique.iter().all(|&m| topo.has_nvlink(m, cand as DeviceId)) {
+                clique.push(cand as DeviceId);
+                assigned[cand] = true;
+            }
+        }
+        cliques.push(clique);
+    }
+    cliques
+}
+
+/// Per-GPU cache capacity in rows, derived from device memory minus the
+/// topology share and a training workspace reserve (the paper configures
+/// systems to "maximize the memory available for caching while allocating
+/// sufficient memory to sample and train", §7.1).
+pub fn cache_capacity_rows(
+    gpu_mem: u64,
+    feat_bytes_per_row: u64,
+    topology_share: u64,
+    workspace: u64,
+) -> u64 {
+    gpu_mem.saturating_sub(topology_share).saturating_sub(workspace) / feat_bytes_per_row.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+    use crate::partition::{partition_graph, Strategy};
+    use crate::presample::PresampleWeights;
+
+    #[test]
+    fn none_cache_always_misses() {
+        let topo = Topology::p3_8xlarge(32.0);
+        let c = FeatureCache::none(100, 4);
+        assert_eq!(c.fetch_source(5, 0, &topo), FetchSource::Host);
+        assert_eq!(c.coverage(), 0.0);
+    }
+
+    #[test]
+    fn distributed_partitions_within_clique() {
+        let topo = Topology::p3_8xlarge(32.0);
+        let ranking: Vec<u64> = (0..100).map(|v| 100 - v as u64).collect();
+        let c = FeatureCache::distributed(&ranking, 10, &topo);
+        // 4 GPUs × 10 rows = hottest 40 vertices cached exactly once.
+        for v in 0..40u32 {
+            let m = (0..4).filter(|&d| c.is_cached_on(v, d)).count();
+            assert_eq!(m, 1, "vertex {v} cached {m} times");
+        }
+        for v in 40..100u32 {
+            assert_eq!(c.fetch_source(v, 0, &topo), FetchSource::Host);
+        }
+        // Any GPU can reach any cached row (all-NVLink host).
+        for v in 0..40u32 {
+            for d in 0..4u16 {
+                assert_ne!(c.fetch_source(v, d, &topo), FetchSource::Host, "v={v} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_replicates_across_cliques() {
+        let topo = Topology::p3_16xlarge(32.0);
+        let cliques = nvlink_cliques(&topo);
+        assert_eq!(cliques.len(), 2, "cube mesh should give two 4-cliques: {cliques:?}");
+        assert!(cliques.iter().all(|c| c.len() == 4));
+        let ranking: Vec<u64> = (0..100).map(|v| 100 - v as u64).collect();
+        let c = FeatureCache::distributed(&ranking, 5, &topo);
+        // Hottest 20 are cached once per clique = twice total (replication).
+        for v in 0..20u32 {
+            let copies = (0..8).filter(|&d| c.is_cached_on(v, d)).count();
+            assert_eq!(copies, 2, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn partitioned_cache_respects_ownership() {
+        let g = rmat(&GenParams { num_vertices: 1000, num_edges: 4000, seed: 3 });
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; 1000];
+        let p = partition_graph(&g, &w, &mask, Strategy::Edge, 4, 0.1, 5);
+        let ranking: Vec<u64> = (0..1000).map(|v| 1000 - v as u64).collect();
+        let c = FeatureCache::partitioned(&ranking, 50, &p);
+        for v in 0..1000u32 {
+            for d in 0..4u16 {
+                if c.is_cached_on(v, d) {
+                    assert_eq!(p.device_of(v), d, "vertex {v} cached off-owner");
+                }
+            }
+        }
+        // Budgets respected.
+        for d in 0..4u16 {
+            assert!(c.rows_on(d) <= 50);
+        }
+    }
+
+    #[test]
+    fn capacity_rows_math() {
+        assert_eq!(cache_capacity_rows(1000, 10, 200, 300), 50);
+        assert_eq!(cache_capacity_rows(100, 10, 200, 0), 0, "saturating");
+    }
+
+    #[test]
+    fn ranked_order_is_descending() {
+        let r = vec![5u64, 9, 1, 9];
+        let o = ranked_order(&r);
+        assert_eq!(o[..2], [1, 3], "ties broken by id");
+        assert_eq!(o[2], 0);
+        assert_eq!(o[3], 2);
+    }
+}

@@ -1,0 +1,173 @@
+//! Hand-rolled command-line parsing (the offline registry has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares the options it understands; unknown options are an
+//! error (typos must not silently fall back to defaults).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: options plus positionals, with typed accessors.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for validation and `--help` output.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv[1..]` against a spec. `--help` prints usage and exits.
+    pub fn parse(argv: impl Iterator<Item = String>, spec: &[OptSpec], about: &str) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                print_help(spec, about);
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name} (see --help)"))?;
+                if s.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{name} expects a value"))?,
+                    };
+                    args.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skipping argv[0] and, for `cargo bench`
+    /// invocations, the `--bench` flag cargo appends).
+    pub fn from_env(spec: &[OptSpec], about: &str) -> Result<Args> {
+        let argv = std::env::args().skip(1).filter(|a| a != "--bench");
+        Self::parse(argv, spec, about)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<u64>().map_err(|_| anyhow!("--{name} expects an integer, got `{v}`"))
+            }
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse::<f64>().map_err(|_| anyhow!("--{name} expects a number, got `{v}`"))
+            }
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.opts.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+fn print_help(spec: &[OptSpec], about: &str) {
+    println!("{about}\n\nOptions:");
+    for s in spec {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        println!("  {arg:24} {}", s.help);
+    }
+    println!("  {:24} print this help", "--help");
+}
+
+/// Shorthand for building specs.
+#[macro_export]
+macro_rules! opts {
+    ($(($name:literal, $takes:expr, $help:literal)),* $(,)?) => {
+        &[$($crate::cli::OptSpec { name: $name, takes_value: $takes, help: $help }),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "gpus", takes_value: true, help: "" },
+            OptSpec { name: "verbose", takes_value: false, help: "" },
+            OptSpec { name: "lr", takes_value: true, help: "" },
+        ]
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), &spec(), "t")
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = parse(&["--gpus", "8", "--verbose", "pos1", "--lr=0.01"]).unwrap();
+        assert_eq!(a.get_usize("gpus", 4).unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("gpus", 4).unwrap(), 4);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--gpus"]).is_err());
+        assert!(parse(&["--verbose=1"]).is_err());
+        assert!(parse(&["--gpus", "abc"]).unwrap().get_usize("gpus", 1).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Experiment configuration: a TOML-subset parser plus the typed config
+//! structs consumed by the CLI, the trainer, and every bench.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use anyhow::{bail, Result};
+
+use crate::graph::StandIn;
+use crate::model::GnnKind;
+
+/// Hyperparameters for one training run — the paper's defaults (§7.1):
+/// fanout 15 per layer, 3 layers, hidden 256, batch 1024.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub model: GnnKind,
+    pub num_layers: usize,
+    pub fanout: usize,
+    pub hidden: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: GnnKind::GraphSage,
+            num_layers: 3,
+            fanout: 15,
+            hidden: 256,
+            batch_size: 1024,
+            lr: 0.003,
+            epochs: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Per-layer fanouts, bottom layer first (uniform fanout, as the paper's
+    /// default neighborhood sampling).
+    pub fn fanouts(&self) -> Vec<usize> {
+        vec![self.fanout; self.num_layers]
+    }
+}
+
+/// A full experiment description parsed from TOML.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub dataset: StandIn,
+    pub train: TrainConfig,
+    pub num_gpus: usize,
+    pub num_hosts: usize,
+    pub system: String,
+    pub partitioner: String,
+    pub presample_epochs: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            dataset: StandIn::Tiny,
+            train: TrainConfig::default(),
+            num_gpus: 4,
+            num_hosts: 1,
+            system: "gsplit".into(),
+            partitioner: "gsplit".into(),
+            presample_epochs: 10,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Parse from a TOML document. Unknown keys are rejected so typos in
+    /// experiment files fail loudly rather than silently running defaults.
+    pub fn from_toml(text: &str) -> Result<ExpConfig> {
+        let doc = parse_toml(text)?;
+        let mut cfg = ExpConfig::default();
+        for (key, val) in doc.iter() {
+            match key.as_str() {
+                "dataset" => cfg.dataset = parse_dataset(val.as_str_or(key)?)?,
+                "model" => cfg.train.model = parse_model(val.as_str_or(key)?)?,
+                "layers" => cfg.train.num_layers = val.as_usize_or(key)?,
+                "fanout" => cfg.train.fanout = val.as_usize_or(key)?,
+                "hidden" => cfg.train.hidden = val.as_usize_or(key)?,
+                "batch_size" => cfg.train.batch_size = val.as_usize_or(key)?,
+                "lr" => cfg.train.lr = val.as_f64_or(key)? as f32,
+                "epochs" => cfg.train.epochs = val.as_usize_or(key)?,
+                "seed" => cfg.train.seed = val.as_usize_or(key)? as u64,
+                "gpus" => cfg.num_gpus = val.as_usize_or(key)?,
+                "hosts" => cfg.num_hosts = val.as_usize_or(key)?,
+                "system" => cfg.system = val.as_str_or(key)?.to_string(),
+                "partitioner" => cfg.partitioner = val.as_str_or(key)?.to_string(),
+                "presample_epochs" => cfg.presample_epochs = val.as_usize_or(key)?,
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+pub fn parse_dataset(s: &str) -> Result<StandIn> {
+    Ok(match s {
+        "orkut-s" | "orkut" => StandIn::OrkutS,
+        "papers-s" | "papers100m" => StandIn::PapersS,
+        "friendster-s" | "friendster" => StandIn::FriendsterS,
+        "tiny" => StandIn::Tiny,
+        other => bail!("unknown dataset `{other}` (orkut-s|papers-s|friendster-s|tiny)"),
+    })
+}
+
+pub fn parse_model(s: &str) -> Result<GnnKind> {
+    Ok(match s {
+        "sage" | "graphsage" => GnnKind::GraphSage,
+        "gat" => GnnKind::Gat,
+        other => bail!("unknown model `{other}` (sage|gat)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExpConfig::from_toml(
+            r#"
+            # experiment: table 3 row
+            dataset = "papers-s"
+            model = "gat"
+            layers = 3
+            fanout = 15
+            hidden = 256
+            batch_size = 1024
+            gpus = 4
+            system = "gsplit"
+            partitioner = "edge"
+            presample_epochs = 10
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, StandIn::PapersS);
+        assert_eq!(cfg.train.model, GnnKind::Gat);
+        assert_eq!(cfg.train.hidden, 256);
+        assert_eq!(cfg.partitioner, "edge");
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(ExpConfig::from_toml("basch_size = 12").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dataset() {
+        assert!(ExpConfig::from_toml(r#"dataset = "ogbn-nope""#).is_err());
+    }
+
+    #[test]
+    fn default_matches_paper_defaults() {
+        let t = TrainConfig::default();
+        assert_eq!(t.fanouts(), vec![15, 15, 15]);
+        assert_eq!(t.hidden, 256);
+        assert_eq!(t.batch_size, 1024);
+    }
+}

@@ -1,0 +1,189 @@
+//! A TOML-subset parser: top-level `key = value` pairs and `[section]`
+//! headers (flattened to `section.key`), with string / integer / float /
+//! boolean / inline-array values and `#` comments. Covers everything the
+//! experiment files need; the full TOML grammar (dates, nested tables,
+//! multi-line strings) is intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str_or(&self, key: &str) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("config key `{key}` expects a string, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize_or(&self, key: &str) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("config key `{key}` expects a non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64_or(&self, key: &str) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("config key `{key}` expects a number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool_or(&self, key: &str) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("config key `{key}` expects a boolean, got {other:?}"),
+        }
+    }
+}
+
+/// Parse a TOML-subset document into a flat, ordered key → value map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        if out.insert(full_key.clone(), value).is_some() {
+            bail!("line {}: duplicate key `{full_key}`", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quotes are not supported");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let p = part.trim();
+                if p.is_empty() {
+                    continue; // allow trailing comma
+                }
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse_toml(
+            r#"
+            a = 1
+            b = "two"   # trailing comment
+            c = 3.5
+            d = true
+            [sec]
+            e = [1, 2, 3,]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["a"], TomlValue::Int(1));
+        assert_eq!(doc["b"], TomlValue::Str("two".into()));
+        assert_eq!(doc["c"], TomlValue::Float(3.5));
+        assert_eq!(doc["d"], TomlValue::Bool(true));
+        assert_eq!(
+            doc["sec.e"],
+            TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc["k"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = parse_toml("n = 1_000_000").unwrap();
+        assert_eq!(doc["n"], TomlValue::Int(1_000_000));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("good = 1\nbad value").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+    }
+}

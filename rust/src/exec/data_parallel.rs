@@ -1,0 +1,160 @@
+//! Data-parallel engines: DGL (no distributed cache) and Quiver
+//! (distributed NVLink cache with cross-clique replication).
+//!
+//! Each GPU independently samples its own micro-batch of the mini-batch's
+//! target vertices and loads the input features of *all* vertices in its
+//! bottom layer — the redundant loading/computation the paper's Table 1
+//! quantifies and GSplit eliminates.
+
+use crate::cache::{FeatureCache, FetchSource};
+use crate::costmodel::IterCounters;
+use crate::exec::{add_grad_allreduce, micro_batches, Engine, EngineCtx};
+use crate::presample::PresampleWeights;
+use crate::rng::{derive_seed, Pcg32};
+use crate::sampling::Sampler;
+use crate::{DeviceId, Vid};
+
+/// Which cache policy the data-parallel engine runs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Policy {
+    Dgl,
+    Quiver,
+}
+
+pub struct DataParallel {
+    policy: Policy,
+    cache: FeatureCache,
+    samplers: Vec<Sampler>,
+}
+
+impl DataParallel {
+    /// DGL: no distributed cache (DGL only caches graphs that fully fit on
+    /// one GPU, which never holds for the evaluated graphs — §7.1).
+    pub fn dgl(ctx: &EngineCtx) -> Self {
+        DataParallel {
+            policy: Policy::Dgl,
+            cache: FeatureCache::none(ctx.ds.graph.num_vertices(), ctx.k()),
+            samplers: (0..ctx.k()).map(|_| Sampler::new()).collect(),
+        }
+    }
+
+    /// Quiver: hottest vertices (pre-sampling frequency ranking, the
+    /// GNNLab criterion both Quiver and GSplit use in §7.1) partitioned
+    /// across NVLink cliques and replicated across them.
+    pub fn quiver(ctx: &EngineCtx, weights: &PresampleWeights, batch_size: usize) -> Self {
+        let rows = ctx.cache_rows(batch_size);
+        DataParallel {
+            policy: Policy::Quiver,
+            cache: FeatureCache::distributed(&weights.vertex, rows, &ctx.topo),
+            samplers: (0..ctx.k()).map(|_| Sampler::new()).collect(),
+        }
+    }
+
+    pub fn cache(&self) -> &FeatureCache {
+        &self.cache
+    }
+}
+
+impl Engine for DataParallel {
+    fn name(&self) -> &'static str {
+        match self.policy {
+            Policy::Dgl => "DGL",
+            Policy::Quiver => "Quiver",
+        }
+    }
+
+    fn iteration(&mut self, ctx: &EngineCtx, targets: &[Vid], seed: u64) -> IterCounters {
+        let k = ctx.k();
+        let mut c = IterCounters::new(k);
+        let row_bytes = ctx.ds.features.row_bytes();
+        let micro = micro_batches(targets, k);
+        for (d, mtargets) in micro.iter().enumerate() {
+            if mtargets.is_empty() {
+                continue;
+            }
+            let mut rng = Pcg32::new(derive_seed(seed, &[d as u64]));
+            let mb = self.samplers[d].sample(&ctx.ds.graph, mtargets, &ctx.fanouts, &mut rng);
+            // --- sampling work ---
+            c.sampled_edges[d] = mb.total_edges();
+            // --- loading: every bottom-layer source, from cache or host ---
+            for &v in mb.input_vertices() {
+                match self.cache.fetch_source(v, d as DeviceId, &ctx.topo) {
+                    FetchSource::Local => {}
+                    FetchSource::Peer(o) => c.peer_load.add(o, d as DeviceId, row_bytes),
+                    FetchSource::Host => c.host_load_bytes[d] += row_bytes,
+                }
+            }
+            // --- forward compute (per layer) ---
+            for (i, layer) in mb.layers.iter().enumerate() {
+                let l = ctx.model_layer(i);
+                c.fwd_flops[d] +=
+                    ctx.model.layer_fwd_flops(l, layer.num_dst() as u64, layer.num_edges());
+                c.agg_bytes[d] +=
+                    ctx.model.layer_agg_bytes(l, layer.num_dst() as u64, layer.num_edges());
+            }
+        }
+        add_grad_allreduce(&mut c, ctx.param_bytes());
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Topology;
+    use crate::graph::StandIn;
+    use crate::model::GnnKind;
+
+    fn ctx(ds: &crate::graph::Dataset) -> EngineCtx<'_> {
+        EngineCtx::new(ds, Topology::p3_8xlarge(1.0), GnnKind::GraphSage, 64, 2, 5)
+    }
+
+    #[test]
+    fn dgl_loads_everything_from_host() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let ctx = ctx(&ds);
+        let mut e = DataParallel::dgl(&ctx);
+        let targets: Vec<Vid> = (0..128).collect();
+        let c = e.iteration(&ctx, &targets, 1);
+        assert!(c.host_load_bytes.iter().sum::<u64>() > 0);
+        assert_eq!(c.peer_load.total_remote(), 0, "DGL has no distributed cache");
+        assert!(c.sampled_edges.iter().all(|&e| e > 0));
+        assert!(c.fwd_flops.iter().all(|&f| f > 0));
+    }
+
+    #[test]
+    fn quiver_cache_cuts_host_loads() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let ctx = ctx(&ds);
+        let weights = PresampleWeights::uniform(&ds.graph);
+        let mut dgl = DataParallel::dgl(&ctx);
+        let mut quiver = DataParallel::quiver(&ctx, &weights, 128);
+        assert!(quiver.cache().coverage() > 0.9, "tiny graph should fully fit");
+        let targets: Vec<Vid> = (0..128).collect();
+        let cd = dgl.iteration(&ctx, &targets, 1);
+        let cq = quiver.iteration(&ctx, &targets, 1);
+        let (hd, hq) = (
+            cd.host_load_bytes.iter().sum::<u64>(),
+            cq.host_load_bytes.iter().sum::<u64>(),
+        );
+        assert!(hq < hd / 10, "quiver host loads {hq} should be ≪ dgl {hd}");
+        assert!(cq.peer_load.total_remote() > 0, "quiver uses NVLink peers");
+        // Sampling and compute identical (same micro-batches, same seed).
+        assert_eq!(cd.sampled_edges, cq.sampled_edges);
+        assert_eq!(cd.fwd_flops, cq.fwd_flops);
+    }
+
+    #[test]
+    fn iterations_are_deterministic() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let ctx = ctx(&ds);
+        let mut e = DataParallel::dgl(&ctx);
+        let targets: Vec<Vid> = (50..150).collect();
+        let a = e.iteration(&ctx, &targets, 7);
+        let b = e.iteration(&ctx, &targets, 7);
+        assert_eq!(a.sampled_edges, b.sampled_edges);
+        assert_eq!(a.host_load_bytes, b.host_load_bytes);
+        let c = e.iteration(&ctx, &targets, 8);
+        assert_ne!(a.sampled_edges, c.sampled_edges);
+    }
+}

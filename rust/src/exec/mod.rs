@@ -1,0 +1,216 @@
+//! Training engines — one per system in the paper's evaluation (§7.1):
+//!
+//! | Engine | Paper system | Parallelism | Cache |
+//! |---|---|---|---|
+//! | [`DataParallel::dgl`]    | DGL    | data parallel | none |
+//! | [`DataParallel::quiver`] | Quiver | data parallel | distributed (NVLink, replicated across cliques) |
+//! | [`PushPull`]             | P3\*   | push-pull hybrid | feature slices (full graphs only) |
+//! | [`SplitParallel`]        | GSplit | split parallel | partitioned, consistent with `f_G` |
+//!
+//! Engines execute the *real* sampling / splitting / cache-lookup / shuffle
+//! logic and record exact counts into [`IterCounters`]; the cost model
+//! turns counts into the paper's S/L/FB seconds. The same structures drive
+//! the real-compute training path (`train/`).
+
+mod data_parallel;
+mod push_pull;
+mod split_parallel;
+
+pub use data_parallel::DataParallel;
+pub use push_pull::PushPull;
+pub use split_parallel::SplitParallel;
+
+use crate::costmodel::{iter_time, IterCounters, PhaseBreakdown};
+use crate::devices::Topology;
+use crate::graph::Dataset;
+use crate::model::{GnnKind, ModelConfig};
+use crate::rng::derive_seed;
+use crate::{DeviceId, Vid};
+
+/// Everything an engine needs besides its own state.
+pub struct EngineCtx<'a> {
+    pub ds: &'a Dataset,
+    pub topo: Topology,
+    pub model: ModelConfig,
+    /// Per-layer fanouts, top layer first (uniform in the paper).
+    pub fanouts: Vec<usize>,
+}
+
+impl<'a> EngineCtx<'a> {
+    pub fn new(
+        ds: &'a Dataset,
+        topo: Topology,
+        kind: GnnKind,
+        hidden: usize,
+        num_layers: usize,
+        fanout: usize,
+    ) -> Self {
+        let model = ModelConfig {
+            kind,
+            feat_dim: ds.spec.feat_dim,
+            hidden,
+            // Stand-in labels use 16 classes; only affects the top layer's
+            // (tiny) output dim in the cost accounting.
+            num_classes: 16,
+            num_layers,
+        };
+        EngineCtx { ds, topo, model, fanouts: vec![fanout; num_layers] }
+    }
+
+    pub fn k(&self) -> usize {
+        self.topo.num_gpus()
+    }
+
+    /// Map a sampled-layer index (0 = top) to the model layer index
+    /// (0 = bottom) used for dims/FLOPs.
+    pub fn model_layer(&self, sampled_idx: usize) -> usize {
+        self.model.num_layers - 1 - sampled_idx
+    }
+
+    /// Total parameter bytes (for the gradient all-reduce accounting).
+    pub fn param_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        for l in 0..self.model.num_layers {
+            let (din, dout) = (self.model.in_dim(l) as u64, self.model.out_dim(l) as u64);
+            total += match self.model.kind {
+                GnnKind::GraphSage => 2 * din * dout + dout,
+                GnnKind::Gat => din * dout + 3 * dout,
+            };
+        }
+        total * 4
+    }
+
+    /// Per-GPU training workspace estimate (bytes): activations and sample
+    /// structures for one in-flight mini-batch (paper §7.1: systems
+    /// "allocate sufficient memory to sample and train without OOM").
+    ///
+    /// This is a **paper-scale** quantity: the mini-batch (and therefore
+    /// the workspace) does not shrink with the dataset stand-in — batch
+    /// size and fanout are the paper's. All memory budgeting happens at
+    /// paper scale and only the final cache row count is divided by the
+    /// dataset's `scale_divisor` (see `cache_rows`).
+    pub fn workspace_bytes(&self, batch_size: usize) -> u64 {
+        let mut rows = batch_size as u64;
+        let mut total_rows = rows;
+        for &f in &self.fanouts {
+            rows *= (f + 1) as u64;
+            total_rows += rows;
+        }
+        // Activations (hidden width) + input features at the bottom +
+        // index structures; 3× slack for fwd+bwd temporaries.
+        let per_gpu_rows = total_rows / self.k() as u64;
+        3 * per_gpu_rows * (self.model.hidden.max(self.model.feat_dim) as u64 * 4 + 16)
+    }
+
+    /// Per-GPU memory left for caching, in bytes, **at paper scale**
+    /// (16 GB V100 minus the topology share and the training workspace).
+    pub fn paper_scale_cache_budget(&self, batch_size: usize) -> u64 {
+        let div = self.ds.spec.scale_divisor;
+        let gpu_full = (self.topo.hw.gpu_mem as f64 * div) as u64;
+        let topo_full =
+            ((self.ds.graph.topology_bytes() as f64 * div) as u64) / self.k() as u64;
+        gpu_full
+            .saturating_sub(topo_full)
+            .saturating_sub(self.workspace_bytes(batch_size))
+    }
+
+    /// Per-GPU cache capacity in feature rows at stand-in scale: the
+    /// paper-scale row budget divided by the dataset's scale factor, so
+    /// the *cache-fit fraction* matches the paper's testbed.
+    pub fn cache_rows(&self, batch_size: usize) -> u64 {
+        let budget = self.paper_scale_cache_budget(batch_size);
+        let rows_full = budget / self.ds.features.row_bytes().max(1);
+        (rows_full as f64 / self.ds.spec.scale_divisor) as u64
+    }
+}
+
+/// A mini-batch training engine.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Execute one mini-batch iteration (counting only — the real-compute
+    /// path lives in `train/`). `seed` must be unique per iteration.
+    fn iteration(&mut self, ctx: &EngineCtx, targets: &[Vid], seed: u64) -> IterCounters;
+}
+
+/// Run one epoch: shuffled targets, `batch_size` chunks, summed counters
+/// and modeled S/L/FB time.
+pub fn run_epoch(
+    engine: &mut dyn Engine,
+    ctx: &EngineCtx,
+    batch_size: usize,
+    epoch_seed: u64,
+) -> (IterCounters, PhaseBreakdown) {
+    let targets = ctx.ds.epoch_targets(epoch_seed);
+    let mut total = IterCounters::new(ctx.k());
+    let mut time = PhaseBreakdown::default();
+    for (i, chunk) in targets.chunks(batch_size).enumerate() {
+        let c = engine.iteration(ctx, chunk, derive_seed(epoch_seed, &[i as u64]));
+        time.add(iter_time(&c, &ctx.topo));
+        total.merge(&c);
+    }
+    (total, time)
+}
+
+/// Add the synchronous gradient all-reduce to the FB communication: ring
+/// all-reduce moves `2·P·(k-1)/k` bytes per GPU along the ring.
+pub(crate) fn add_grad_allreduce(c: &mut IterCounters, param_bytes: u64) {
+    let k = c.k;
+    if k <= 1 {
+        return;
+    }
+    let per_link = 2 * param_bytes * (k as u64 - 1) / k as u64;
+    for d in 0..k {
+        let next = ((d + 1) % k) as DeviceId;
+        c.train_comm.add(d as DeviceId, next, per_link);
+    }
+}
+
+/// Round-robin partition of the mini-batch targets into `k` micro-batches
+/// (data-parallel systems; the paper partitions targets among GPUs).
+pub(crate) fn micro_batches(targets: &[Vid], k: usize) -> Vec<Vec<Vid>> {
+    let mut out = vec![Vec::with_capacity(targets.len() / k + 1); k];
+    for (i, &t) in targets.iter().enumerate() {
+        out[i % k].push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::StandIn;
+
+    #[test]
+    fn micro_batches_cover_targets() {
+        let t: Vec<Vid> = (0..10).collect();
+        let mb = micro_batches(&t, 4);
+        assert_eq!(mb.len(), 4);
+        assert_eq!(mb[0], vec![0, 4, 8]);
+        assert_eq!(mb[3], vec![3, 7]);
+        let total: usize = mb.iter().map(Vec::len).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn grad_allreduce_scales_with_k() {
+        let mut c2 = IterCounters::new(2);
+        add_grad_allreduce(&mut c2, 1000);
+        assert_eq!(c2.train_comm.total_remote(), 2 * 1000); // 2 links × P
+        let mut c1 = IterCounters::new(1);
+        add_grad_allreduce(&mut c1, 1000);
+        assert_eq!(c1.train_comm.total_remote(), 0);
+    }
+
+    #[test]
+    fn ctx_basics() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let topo = Topology::p3_8xlarge(1.0);
+        let ctx = EngineCtx::new(&ds, topo, GnnKind::GraphSage, 64, 3, 5);
+        assert_eq!(ctx.k(), 4);
+        assert_eq!(ctx.model_layer(0), 2);
+        assert_eq!(ctx.model_layer(2), 0);
+        assert!(ctx.param_bytes() > 0);
+        assert!(ctx.cache_rows(256) > 0);
+    }
+}

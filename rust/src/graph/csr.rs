@@ -1,0 +1,238 @@
+//! Immutable CSR (compressed sparse row) graph.
+//!
+//! Sampling reads `neighbors(v)` billions of times per experiment, so the
+//! layout is the classic two-array CSR: `offsets: [u64; n+1]` and
+//! `adj: [u32; m]`. Graphs are treated as directed adjacency from
+//! destination → in-neighbors (GNN aggregation pulls from in-neighbors);
+//! generators emit symmetric edges for the undirected social graphs the
+//! paper uses.
+
+use crate::{Eid, Vid};
+
+/// An immutable CSR graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrGraph {
+    offsets: Vec<u64>,
+    adj: Vec<Vid>,
+}
+
+impl CsrGraph {
+    /// Build from raw CSR arrays. Panics if the arrays are inconsistent —
+    /// this is an internal constructor; external inputs go through
+    /// [`GraphBuilder`] or [`super::load_graph`].
+    pub fn from_raw(offsets: Vec<u64>, adj: Vec<Vid>) -> Self {
+        assert!(!offsets.is_empty(), "offsets must have n+1 entries");
+        assert_eq!(*offsets.last().unwrap() as usize, adj.len(), "offsets/adj mismatch");
+        debug_assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets not monotone");
+        CsrGraph { offsets, adj }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vid) -> u32 {
+        let v = v as usize;
+        (self.offsets[v + 1] - self.offsets[v]) as u32
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: Vid) -> &[Vid] {
+        let v = v as usize;
+        &self.adj[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Global edge id of the `i`-th neighbor of `v` (CSR slot index). Used
+    /// by pre-sampling to accumulate per-edge visit counts.
+    #[inline]
+    pub fn edge_id(&self, v: Vid, i: u32) -> Eid {
+        self.offsets[v as usize] + i as u64
+    }
+
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    pub fn adj(&self) -> &[Vid] {
+        &self.adj
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_vertices() as Vid).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Approximate resident bytes of the topology.
+    pub fn topology_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.adj.len() * 4) as u64
+    }
+}
+
+/// Accumulates an edge list and finalizes it into a [`CsrGraph`].
+///
+/// Deduplicates parallel edges and drops self-loops (matching the cleaning
+/// step applied to SNAP social graphs in GNN benchmarks).
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(Vid, Vid)>,
+    symmetric: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        GraphBuilder { n: num_vertices, edges: Vec::new(), symmetric: false }
+    }
+
+    /// Mirror every added edge (undirected graph). Social-network datasets
+    /// in the paper are undirected.
+    pub fn symmetric(mut self) -> Self {
+        self.symmetric = true;
+        self
+    }
+
+    pub fn add_edge(&mut self, u: Vid, v: Vid) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u == v {
+            return; // drop self-loops
+        }
+        self.edges.push((u, v));
+        if self.symmetric {
+            self.edges.push((v, u));
+        }
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Counting-sort by source vertex, dedup, and emit CSR.
+    pub fn finish(mut self) -> CsrGraph {
+        let n = self.n;
+        // Counting sort by (src) then sort each row and dedup. Sorting the
+        // full edge list pair-wise is O(m log m); counting sort by src then
+        // per-row sorts is faster and allocation-friendlier for big m.
+        let mut counts = vec![0u64; n + 1];
+        for &(u, _) in &self.edges {
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut adj = vec![0 as Vid; self.edges.len()];
+        let mut cursor = counts.clone();
+        for &(u, v) in &self.edges {
+            let c = &mut cursor[u as usize];
+            adj[*c as usize] = v;
+            *c += 1;
+        }
+        self.edges = Vec::new(); // free early
+        // Per-row sort + dedup, compacting in place.
+        let mut offsets = vec![0u64; n + 1];
+        let mut write = 0usize;
+        for v in 0..n {
+            let (s, e) = (counts[v] as usize, counts[v + 1] as usize);
+            let row = &mut adj[s..e];
+            row.sort_unstable();
+            let mut prev: Option<Vid> = None;
+            let row_start = write;
+            for i in s..e {
+                let x = adj[i];
+                if prev != Some(x) {
+                    adj[write] = x;
+                    write += 1;
+                    prev = Some(x);
+                }
+            }
+            offsets[v] = row_start as u64;
+            let _ = row_start;
+        }
+        // offsets[v] currently holds row starts; set final sentinel and fix
+        // up into standard prefix form.
+        offsets[n] = write as u64;
+        adj.truncate(write);
+        CsrGraph::from_raw(offsets, adj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0-1, 0-2, 1-3, 2-3 undirected
+        let mut b = GraphBuilder::new(4).symmetric();
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(1, 3);
+        b.add_edge(2, 3);
+        b.finish()
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 8);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drops_self_loops_and_duplicates() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(0, 1);
+        b.add_edge(1, 1);
+        b.add_edge(2, 0);
+        let g = b.finish();
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[] as &[Vid]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let mut b = GraphBuilder::new(5);
+        for v in [4u32, 2, 3, 1] {
+            b.add_edge(0, v);
+        }
+        let g = b.finish();
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn edge_ids_are_csr_slots() {
+        let g = diamond();
+        assert_eq!(g.edge_id(0, 0), 0);
+        assert_eq!(g.edge_id(0, 1), 1);
+        assert_eq!(g.edge_id(1, 0), 2);
+        assert_eq!(g.edge_id(3, 1), 7);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(3).finish();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.degree(2), 0);
+    }
+}

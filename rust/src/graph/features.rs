@@ -1,0 +1,186 @@
+//! Synthetic input features and labels.
+//!
+//! The performance experiments only need feature *bytes* to exist (loading
+//! cost is `count × width × 4B`), but the end-to-end training example needs
+//! features that are *learnable*: community-correlated Gaussian mixtures so
+//! a GNN can separate the classes.
+
+use crate::rng::{Pcg32, SplitMix64};
+use crate::Vid;
+
+/// Dense row-major f32 feature matrix `[n, dim]`.
+///
+/// For large perf-only graphs, use [`FeatureStore::lazy`] which synthesizes
+/// rows on demand from the vertex id — the engines only hash/copy row bytes,
+/// so materializing GBs of synthetic features would be pure waste.
+#[derive(Debug, Clone)]
+pub enum FeatureStore {
+    Dense { dim: usize, data: Vec<f32> },
+    /// Procedural features: row `v` is derived from `hash(seed, v)`.
+    Lazy { dim: usize, n: usize, seed: u64 },
+}
+
+impl FeatureStore {
+    pub fn dense(n: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * dim);
+        FeatureStore::Dense { dim, data }
+    }
+
+    pub fn lazy(n: usize, dim: usize, seed: u64) -> Self {
+        FeatureStore::Lazy { dim, n, seed }
+    }
+
+    /// Gaussian-mixture features correlated with `labels`: class c has mean
+    /// direction derived from c; rows get `mean(c) + noise`.
+    pub fn correlated(labels: &[u32], dim: usize, noise: f32, seed: u64) -> Self {
+        let n = labels.len();
+        let mut data = vec![0f32; n * dim];
+        let mut rng = Pcg32::new(seed);
+        // Per-class mean vectors.
+        let num_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+        let mut means = vec![0f32; num_classes * dim];
+        let mut mrng = Pcg32::new(seed ^ 0xABCD);
+        for x in means.iter_mut() {
+            *x = mrng.next_gaussian() as f32;
+        }
+        for (v, &l) in labels.iter().enumerate() {
+            let mrow = &means[l as usize * dim..(l as usize + 1) * dim];
+            let row = &mut data[v * dim..(v + 1) * dim];
+            for (r, m) in row.iter_mut().zip(mrow) {
+                *r = *m + noise * rng.next_gaussian() as f32;
+            }
+        }
+        FeatureStore::Dense { dim, data }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            FeatureStore::Dense { dim, .. } | FeatureStore::Lazy { dim, .. } => *dim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            FeatureStore::Dense { data, dim } => data.len() / dim.max(&1),
+            FeatureStore::Lazy { n, .. } => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn row_bytes(&self) -> u64 {
+        (self.dim() * 4) as u64
+    }
+
+    /// Copy the feature row of `v` into `out` (length `dim`).
+    pub fn copy_row(&self, v: Vid, out: &mut [f32]) {
+        let dim = self.dim();
+        debug_assert_eq!(out.len(), dim);
+        match self {
+            FeatureStore::Dense { data, .. } => {
+                out.copy_from_slice(&data[v as usize * dim..(v as usize + 1) * dim]);
+            }
+            FeatureStore::Lazy { seed, .. } => {
+                let mut sm = SplitMix64::new(seed ^ (v as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                for x in out.iter_mut() {
+                    // Cheap uniform in [-1, 1); numerics don't matter here.
+                    *x = ((sm.next_u64() >> 40) as f32 / (1u32 << 23) as f32) - 1.0;
+                }
+            }
+        }
+    }
+
+    /// Gather rows for `vertices` into a `[len, dim]` row-major buffer.
+    pub fn gather(&self, vertices: &[Vid], out: &mut Vec<f32>) {
+        let dim = self.dim();
+        out.resize(vertices.len() * dim, 0.0);
+        for (i, &v) in vertices.iter().enumerate() {
+            let dst = &mut out[i * dim..(i + 1) * dim];
+            self.copy_row(v, dst);
+        }
+    }
+}
+
+/// Node labels plus train/val split.
+#[derive(Debug, Clone)]
+pub struct LabelStore {
+    pub labels: Vec<u32>,
+    pub num_classes: usize,
+    pub train_set: Vec<Vid>,
+    pub val_set: Vec<Vid>,
+}
+
+impl LabelStore {
+    /// Split vertices into train/val with the given train fraction.
+    pub fn with_split(labels: Vec<u32>, train_frac: f64, seed: u64) -> Self {
+        let num_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+        let mut ids: Vec<Vid> = (0..labels.len() as Vid).collect();
+        let mut rng = Pcg32::new(seed);
+        rng.shuffle(&mut ids);
+        let cut = (labels.len() as f64 * train_frac) as usize;
+        let train_set = ids[..cut].to_vec();
+        let val_set = ids[cut..].to_vec();
+        LabelStore { labels, num_classes, train_set, val_set }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let fs = FeatureStore::dense(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let mut row = [0f32; 2];
+        fs.copy_row(1, &mut row);
+        assert_eq!(row, [3., 4.]);
+        let mut out = Vec::new();
+        fs.gather(&[2, 0], &mut out);
+        assert_eq!(out, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn lazy_rows_deterministic_and_distinct() {
+        let fs = FeatureStore::lazy(100, 8, 42);
+        let mut a = vec![0f32; 8];
+        let mut b = vec![0f32; 8];
+        fs.copy_row(7, &mut a);
+        fs.copy_row(7, &mut b);
+        assert_eq!(a, b);
+        fs.copy_row(8, &mut b);
+        assert_ne!(a, b);
+        assert!(a.iter().all(|x| (-1.0..1.01).contains(x)));
+    }
+
+    #[test]
+    fn correlated_features_are_separable() {
+        // Mean distance between same-class rows should be far below
+        // cross-class distance.
+        let labels: Vec<u32> = (0..200).map(|i| (i % 2) as u32).collect();
+        let fs = FeatureStore::correlated(&labels, 16, 0.1, 5);
+        let mut r0 = vec![0f32; 16];
+        let mut r2 = vec![0f32; 16];
+        let mut r1 = vec![0f32; 16];
+        fs.copy_row(0, &mut r0);
+        fs.copy_row(2, &mut r2); // same class as 0
+        fs.copy_row(1, &mut r1); // other class
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+        };
+        assert!(d(&r0, &r2) < d(&r0, &r1), "same-class rows should be closer");
+    }
+
+    #[test]
+    fn label_split_partitions_vertices() {
+        let labels: Vec<u32> = (0..100).map(|i| (i % 4) as u32).collect();
+        let ls = LabelStore::with_split(labels, 0.8, 3);
+        assert_eq!(ls.num_classes, 4);
+        assert_eq!(ls.train_set.len(), 80);
+        assert_eq!(ls.val_set.len(), 20);
+        let mut all: Vec<Vid> = ls.train_set.iter().chain(&ls.val_set).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,277 @@
+//! Synthetic graph generators.
+//!
+//! * [`rmat`] — R-MAT/Kronecker power-law graphs: degree-skewed social-graph
+//!   stand-ins for Orkut / Papers100M / Friendster.
+//! * [`sbm`] — stochastic block model: community structure with planted
+//!   labels; used by the end-to-end training example where the GNN must
+//!   actually learn something.
+//! * [`erdos_renyi`] — uniform random graphs for tests and worst cases
+//!   (no locality, partitioners can't win).
+
+use crate::graph::{CsrGraph, GraphBuilder};
+use crate::rng::Pcg32;
+use crate::Vid;
+
+/// Parameters shared by the generators.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub seed: u64,
+}
+
+/// R-MAT generator (Chakrabarti et al. 2004) with the standard Graph500
+/// quadrant probabilities (a=0.57, b=0.19, c=0.19, d=0.05) producing a
+/// power-law degree distribution similar to large social graphs.
+///
+/// `num_edges` counts undirected edges before dedup; the returned CSR holds
+/// both directions.
+pub fn rmat(p: &GenParams) -> CsrGraph {
+    rmat_with_probs(p, 0.57, 0.19, 0.19)
+}
+
+pub fn rmat_with_probs(p: &GenParams, a: f64, b: f64, c: f64) -> CsrGraph {
+    assert!(p.num_vertices > 1);
+    let scale = (p.num_vertices as f64).log2().ceil() as u32;
+    let n = p.num_vertices as u64;
+    let mut rng = Pcg32::new(p.seed);
+    let mut builder = GraphBuilder::new(p.num_vertices).symmetric();
+    let mut placed = 0usize;
+    // Some R-MAT picks fall outside [0, n) when n is not a power of two or
+    // are self-loops; retry until we place the requested edge count.
+    let mut guard = 0usize;
+    let budget = p.num_edges * 20 + 1000;
+    while placed < p.num_edges {
+        guard += 1;
+        assert!(guard < budget, "rmat failed to place edges (degenerate params?)");
+        let (mut u, mut v) = (0u64, 0u64);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (bu, bv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if u >= n || v >= n || u == v {
+            continue;
+        }
+        builder.add_edge(u as Vid, v as Vid);
+        placed += 1;
+    }
+    builder.finish()
+}
+
+/// Stochastic block model: `communities` equally-sized blocks; each vertex
+/// draws `intra_deg` neighbors inside its block and `inter_deg` outside.
+/// Returns the graph and the planted community assignment (used as labels).
+pub fn sbm(
+    num_vertices: usize,
+    communities: usize,
+    intra_deg: usize,
+    inter_deg: usize,
+    seed: u64,
+) -> (CsrGraph, Vec<u32>) {
+    assert!(communities >= 1 && num_vertices >= communities);
+    let mut rng = Pcg32::new(seed);
+    let block = num_vertices / communities;
+    let assignment: Vec<u32> =
+        (0..num_vertices).map(|v| ((v / block).min(communities - 1)) as u32).collect();
+    let mut builder = GraphBuilder::new(num_vertices).symmetric();
+    for v in 0..num_vertices {
+        let comm = assignment[v] as usize;
+        let lo = comm * block;
+        let hi = if comm == communities - 1 { num_vertices } else { lo + block };
+        let span = (hi - lo) as u32;
+        for _ in 0..intra_deg {
+            let u = lo as u32 + rng.gen_range(span);
+            builder.add_edge(v as Vid, u);
+        }
+        for _ in 0..inter_deg {
+            let u = rng.gen_range(num_vertices as u32);
+            builder.add_edge(v as Vid, u);
+        }
+    }
+    (builder.finish(), assignment)
+}
+
+/// Community-structured power-law graph: the paper's social graphs (Orkut,
+/// Friendster) and citation graph (Papers100M) all combine heavy-tailed
+/// degrees with strong locality (METIS finds small cuts on them — that is
+/// the premise of GSplit's offline partitioning). Plain R-MAT has the
+/// degree skew but almost no locality, so stand-ins are generated as R-MAT
+/// *within* `communities` blocks plus a fraction `inter_frac` of global
+/// R-MAT edges across blocks.
+pub fn community_rmat(p: &GenParams, communities: usize, inter_frac: f64) -> CsrGraph {
+    assert!(communities >= 1 && p.num_vertices >= communities);
+    let block = p.num_vertices / communities;
+    let inter_edges = (p.num_edges as f64 * inter_frac) as usize;
+    let intra_edges = p.num_edges - inter_edges;
+    let mut rng = Pcg32::new(p.seed);
+    let mut builder = GraphBuilder::new(p.num_vertices).symmetric();
+
+    // Intra-community edges: R-MAT coordinates within each block, block
+    // chosen proportional to size (uniform here).
+    let scale = (block as f64).log2().ceil() as u32;
+    let mut placed = 0usize;
+    let mut guard = 0usize;
+    while placed < intra_edges {
+        guard += 1;
+        assert!(guard < intra_edges * 30 + 1000, "community_rmat stalled");
+        let c = rng.gen_range(communities as u32) as usize;
+        let lo = c * block;
+        let hi = if c == communities - 1 { p.num_vertices } else { lo + block };
+        let span = (hi - lo) as u64;
+        let (mut u, mut v) = (0u64, 0u64);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (bu, bv) = if r < 0.57 {
+                (0, 0)
+            } else if r < 0.76 {
+                (0, 1)
+            } else if r < 0.95 {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if u >= span || v >= span || u == v {
+            continue;
+        }
+        builder.add_edge((lo as u64 + u) as Vid, (lo as u64 + v) as Vid);
+        placed += 1;
+    }
+    // Inter-community edges: uniform random endpoints in different blocks.
+    let n = p.num_vertices as u32;
+    let mut placed = 0usize;
+    while placed < inter_edges {
+        let u = rng.gen_range(n);
+        let v = rng.gen_range(n);
+        if u != v && (u as usize) / block != (v as usize) / block {
+            builder.add_edge(u, v);
+            placed += 1;
+        }
+    }
+    builder.finish()
+}
+
+/// Erdős–Rényi G(n, m): m undirected edges sampled uniformly.
+pub fn erdos_renyi(p: &GenParams) -> CsrGraph {
+    let mut rng = Pcg32::new(p.seed);
+    let n = p.num_vertices as u32;
+    let mut builder = GraphBuilder::new(p.num_vertices).symmetric();
+    let mut placed = 0;
+    while placed < p.num_edges {
+        let u = rng.gen_range(n);
+        let v = rng.gen_range(n);
+        if u != v {
+            builder.add_edge(u, v);
+            placed += 1;
+        }
+    }
+    builder.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_basic_shape() {
+        let g = rmat(&GenParams { num_vertices: 1 << 10, num_edges: 8 << 10, seed: 1 });
+        assert_eq!(g.num_vertices(), 1024);
+        // Symmetric + dedup: strictly fewer than 2*m, but most edges survive.
+        assert!(g.num_edges() > 8 * 1024, "edges={}", g.num_edges());
+        assert!(g.num_edges() <= 16 * 1024);
+    }
+
+    #[test]
+    fn rmat_is_deterministic() {
+        let p = GenParams { num_vertices: 512, num_edges: 2048, seed: 9 };
+        assert_eq!(rmat(&p), rmat(&p));
+        let p2 = GenParams { seed: 10, ..p };
+        assert_ne!(rmat(&p), rmat(&p2));
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // Power-law: max degree should far exceed the average.
+        let g = rmat(&GenParams { num_vertices: 1 << 12, num_edges: 16 << 12, seed: 3 });
+        assert!(
+            (g.max_degree() as f64) > 6.0 * g.avg_degree(),
+            "max={} avg={}",
+            g.max_degree(),
+            g.avg_degree()
+        );
+    }
+
+    #[test]
+    fn sbm_is_community_heavy() {
+        let (g, labels) = sbm(2000, 4, 8, 1, 7);
+        assert_eq!(labels.len(), 2000);
+        // Count intra vs inter community edges.
+        let mut intra = 0u64;
+        let mut inter = 0u64;
+        for v in 0..g.num_vertices() as Vid {
+            for &u in g.neighbors(v) {
+                if labels[u as usize] == labels[v as usize] {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        assert!(intra > 4 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn sbm_labels_balanced() {
+        let (_, labels) = sbm(1000, 5, 4, 1, 2);
+        let mut counts = [0usize; 5];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 1000);
+        assert!(counts.iter().all(|&c| c == 200), "{counts:?}");
+    }
+
+    #[test]
+    fn community_rmat_is_local_and_skewed() {
+        let g = community_rmat(
+            &GenParams { num_vertices: 8192, num_edges: 65536, seed: 4 },
+            32,
+            0.1,
+        );
+        assert_eq!(g.num_vertices(), 8192);
+        // Locality: ≥ 80% of edges stay within a 256-vertex block.
+        let block = 8192 / 32;
+        let mut intra = 0u64;
+        let mut total = 0u64;
+        for v in 0..g.num_vertices() as Vid {
+            for &u in g.neighbors(v) {
+                total += 1;
+                if (u as usize) / block == (v as usize) / block {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra as f64 / total as f64 > 0.8, "intra fraction {}", intra as f64 / total as f64);
+        // Skew: power-law-ish max degree.
+        assert!((g.max_degree() as f64) > 4.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn er_shape() {
+        let g = erdos_renyi(&GenParams { num_vertices: 500, num_edges: 2000, seed: 4 });
+        assert_eq!(g.num_vertices(), 500);
+        assert!(g.num_edges() > 3000 && g.num_edges() <= 4000);
+    }
+}

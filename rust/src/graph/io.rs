@@ -1,0 +1,129 @@
+//! Binary on-disk graph format (`.gsg` — "gsplit graph").
+//!
+//! Layout (little endian):
+//! ```text
+//! magic   u64  = 0x4753504C49545F31 ("GSPLIT_1")
+//! n       u64  number of vertices
+//! m       u64  number of directed edges
+//! offsets (n+1) × u64
+//! adj     m × u32
+//! ```
+//! Used so benches can reuse generated stand-in graphs across runs instead
+//! of regenerating them (RMAT at papers-s scale takes a couple of seconds).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::CsrGraph;
+use crate::Vid;
+
+const MAGIC: u64 = 0x4753_504C_4954_5F31;
+
+pub fn save_graph(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &v in g.adj() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_graph(path: &Path) -> Result<CsrGraph> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let magic = read_u64(&mut r)?;
+    if magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:#x} (not a .gsg graph file)");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let mut offsets = vec![0u64; n + 1];
+    read_u64_slice(&mut r, &mut offsets)?;
+    let mut adj = vec![0 as Vid; m];
+    read_u32_slice(&mut r, &mut adj)?;
+    if offsets.last().copied() != Some(m as u64) {
+        bail!("{path:?}: corrupt offsets (last={:?}, m={m})", offsets.last());
+    }
+    Ok(CsrGraph::from_raw(offsets, adj))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u64_slice(r: &mut impl Read, out: &mut [u64]) -> Result<()> {
+    // Bulk read: interpret the output slice as bytes.
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 8)
+    };
+    r.read_exact(bytes)?;
+    if cfg!(target_endian = "big") {
+        for x in out.iter_mut() {
+            *x = u64::from_le(*x);
+        }
+    }
+    Ok(())
+}
+
+fn read_u32_slice(r: &mut impl Read, out: &mut [u32]) -> Result<()> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    r.read_exact(bytes)?;
+    if cfg!(target_endian = "big") {
+        for x in out.iter_mut() {
+            *x = u32::from_le(*x);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+
+    #[test]
+    fn roundtrip() {
+        let g = rmat(&GenParams { num_vertices: 256, num_edges: 1024, seed: 12 });
+        let dir = std::env::temp_dir().join("gsplit_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.gsg");
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("gsplit_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.gsg");
+        std::fs::write(&path, b"not a graph file at all....").unwrap();
+        assert!(load_graph(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let g = rmat(&GenParams { num_vertices: 64, num_edges: 128, seed: 1 });
+        let dir = std::env::temp_dir().join("gsplit_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.gsg");
+        save_graph(&g, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_graph(&path).is_err());
+    }
+}

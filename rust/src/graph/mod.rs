@@ -1,0 +1,21 @@
+//! Graph substrate: immutable CSR storage, builders, synthetic generators
+//! (RMAT power-law, SBM community graphs, Erdős–Rényi), a binary on-disk
+//! format, and synthetic feature/label generation.
+//!
+//! The paper evaluates on Orkut, Papers100M, and Friendster. Those datasets
+//! (and hosts able to hold them) are not available here, so `datasets.rs`
+//! defines scaled stand-ins that preserve the properties the experiments
+//! depend on — average degree, feature width, skew, and cache-fit ratio
+//! (see DESIGN.md §3).
+
+mod csr;
+mod datasets;
+mod features;
+mod gen;
+mod io;
+
+pub use csr::{CsrGraph, GraphBuilder};
+pub use datasets::{Dataset, DatasetSpec, StandIn};
+pub use features::{FeatureStore, LabelStore};
+pub use gen::{community_rmat, erdos_renyi, rmat, sbm, GenParams};
+pub use io::{load_graph, save_graph};

@@ -1,0 +1,51 @@
+//! # GSplit — split-parallel mini-batch GNN training
+//!
+//! Reproduction of *"GSplit: Scaling Graph Neural Network Training on Large
+//! Graphs via Split-Parallelism"* (Polisetty et al., 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: cooperative split-parallel
+//!   sampling, the online splitting algorithm with its offline pre-sampling +
+//!   weighted min-edge-cut partitioning stages, feature caches, a simulated
+//!   multi-GPU/multi-host device topology with a calibrated transfer cost
+//!   model, and four training engines (DGL-like data parallel, Quiver-like
+//!   cached data parallel, P3*-like push-pull, and GSplit split parallel).
+//! * **L2/L1 (python/, build time only)** — JAX GraphSage/GAT layers over
+//!   Pallas gather/attention kernels, AOT-lowered to HLO text.
+//! * **runtime** — loads the HLO artifacts through PJRT (`xla` crate) and
+//!   executes them from the Rust hot path; Python is never on that path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench_harness;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod costmodel;
+pub mod devices;
+pub mod exec;
+pub mod graph;
+pub mod model;
+pub mod partition;
+pub mod presample;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod split;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Vertex identifier. Graphs in this crate are bounded by `u32::MAX` vertices
+/// (the paper's largest graph, Papers100M, has 111M vertices — comfortably
+/// within range; our scaled stand-ins are far smaller).
+pub type Vid = u32;
+
+/// Edge index into a CSR adjacency array.
+pub type Eid = u64;
+
+/// Device (simulated GPU) identifier.
+pub type DeviceId = u16;

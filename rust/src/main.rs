@@ -1,0 +1,283 @@
+//! `gsplit` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train      end-to-end split-parallel training (real PJRT compute)
+//!   epoch      run one counted epoch of any engine and print S/L/FB
+//!   partition  run the offline splitting pipeline (presample + partition)
+//!   gen        generate and cache a stand-in dataset graph
+//!   info       print dataset/topology/manifest information
+
+use anyhow::{bail, Result};
+use gsplit::cli::Args;
+use gsplit::config::{parse_dataset, parse_model};
+use gsplit::costmodel::PhaseBreakdown;
+use gsplit::devices::Topology;
+use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
+use gsplit::graph::Dataset;
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::opts;
+use gsplit::partition::{partition_graph, Strategy};
+use gsplit::presample::{presample, PresampleConfig};
+use gsplit::runtime::Runtime;
+use gsplit::train::{train_epoch, Trainer};
+use gsplit::util::{fmt_secs, Table};
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let sub = argv.next().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "train" => cmd_train(argv),
+        "epoch" => cmd_epoch(argv),
+        "partition" => cmd_partition(argv),
+        "gen" => cmd_gen(argv),
+        "info" => cmd_info(argv),
+        "version" => {
+            println!("gsplit {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "gsplit — split-parallel GNN training (GSplit reproduction)\n\n\
+                 Subcommands:\n  \
+                 train      end-to-end split-parallel training (real PJRT compute)\n  \
+                 epoch      counted epoch of one engine; prints the S/L/FB breakdown\n  \
+                 partition  offline pipeline: presample + partition, prints quality\n  \
+                 gen        generate and cache a stand-in dataset graph\n  \
+                 info       dataset / topology / artifact info\n\n\
+                 Run `gsplit <subcommand> --help` for options."
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `gsplit help`)"),
+    }
+}
+
+fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![
+        ("iters", true, "training iterations (default 200)"),
+        ("batch", true, "mini-batch size (default 256)"),
+        ("gpus", true, "simulated GPUs (default 4)"),
+        ("lr", true, "learning rate (default 0.2)"),
+        ("vertices", true, "SBM graph size (default 16384)"),
+        ("seed", true, "random seed (default 42)"),
+        ("artifacts", true, "artifacts dir (default artifacts)"),
+    ];
+    let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
+    let rt = Runtime::load(a.get_str("artifacts", "artifacts"))?;
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: rt.manifest.feat_dim,
+        hidden: rt.manifest.hidden,
+        num_classes: rt.manifest.num_classes,
+        num_layers: rt.manifest.layer_dims.len(),
+    };
+    let seed = a.get_u64("seed", 42)?;
+    let ds = Dataset::sbm_learnable(a.get_usize("vertices", 16384)?, cfg.num_classes, cfg.feat_dim, 0.6, seed);
+    let k = a.get_usize("gpus", 4)?;
+    let batch = a.get_usize("batch", 256)?;
+    let iters = a.get_usize("iters", 200)?;
+
+    // Offline stage: presample + weighted min-cut partition.
+    let pw = presample(
+        &ds.graph,
+        &ds.labels.train_set,
+        &PresampleConfig { epochs: 3, batch_size: batch, fanouts: vec![rt.manifest.kernel_fanout; cfg.num_layers], seed },
+    );
+    let mask = train_mask(&ds);
+    let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
+    let mut trainer = Trainer::new(&rt, &cfg, part, a.get_f64("lr", 0.2)? as f32, seed)?;
+
+    println!("step,loss,acc");
+    let mut done = 0usize;
+    let mut epoch = 0u64;
+    while done < iters {
+        for s in train_epoch(&mut trainer, &ds, batch, epoch)? {
+            done += 1;
+            println!("{done},{:.4},{:.4}", s.loss, s.accuracy());
+            if done >= iters {
+                break;
+            }
+        }
+        epoch += 1;
+    }
+    let val = trainer.evaluate(&ds, &ds.labels.val_set[..batch.min(ds.labels.val_set.len())], 9999)?;
+    println!("# final val accuracy {:.4} (random = {:.4})", val.accuracy(), 1.0 / cfg.num_classes as f32);
+    Ok(())
+}
+
+fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![
+        ("dataset", true, "orkut-s|papers-s|friendster-s|tiny (default tiny)"),
+        ("system", true, "dgl|quiver|p3|gsplit (default gsplit)"),
+        ("model", true, "sage|gat (default sage)"),
+        ("gpus", true, "GPUs (default 4)"),
+        ("hosts", true, "hosts of 4 GPUs each (default 1; overrides --gpus)"),
+        ("batch", true, "batch size (default 1024)"),
+        ("fanout", true, "per-layer fanout (default 15)"),
+        ("layers", true, "GNN layers (default 3)"),
+        ("hidden", true, "hidden size (default 256)"),
+        ("seed", true, "seed (default 42)"),
+    ];
+    let a = Args::parse(argv, spec, "run one counted epoch and print the S/L/FB breakdown")?;
+    let ds = parse_dataset(&a.get_str("dataset", "tiny"))?.load()?;
+    let kind = parse_model(&a.get_str("model", "sage"))?;
+    let hosts = a.get_usize("hosts", 1)?;
+    let topo = if hosts > 1 {
+        Topology::multi_host(hosts, ds.spec.scale_divisor)
+    } else {
+        Topology::for_gpus(a.get_usize("gpus", 4)?, ds.spec.scale_divisor)
+    };
+    let batch = a.get_usize("batch", 1024)?;
+    let seed = a.get_u64("seed", 42)?;
+    let ctx = EngineCtx::new(
+        &ds,
+        topo,
+        kind,
+        a.get_usize("hidden", 256)?,
+        a.get_usize("layers", 3)?,
+        a.get_usize("fanout", 15)?,
+    );
+    let pw = presample(
+        &ds.graph,
+        &ds.labels.train_set,
+        &PresampleConfig { epochs: 2, batch_size: batch, fanouts: ctx.fanouts.clone(), seed },
+    );
+    let mask = train_mask(&ds);
+    let sys = a.get_str("system", "gsplit");
+    let mut engine: Box<dyn Engine> = match sys.as_str() {
+        "dgl" => Box::new(DataParallel::dgl(&ctx)),
+        "quiver" => Box::new(DataParallel::quiver(&ctx, &pw, batch)),
+        "p3" | "p3*" => Box::new(PushPull::new(&ctx, batch)),
+        "gsplit" => {
+            let part =
+                partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, ctx.k(), 0.05, seed);
+            Box::new(SplitParallel::new(&ctx, part, &pw.vertex, batch))
+        }
+        other => bail!("unknown system `{other}`"),
+    };
+    let (counters, time) = run_epoch(engine.as_mut(), &ctx, batch, seed);
+    print_breakdown(engine.name(), &ds.spec.name, &time);
+    println!(
+        "loads: host {} | peer {} | shuffle {}",
+        gsplit::util::fmt_bytes(counters.host_load_bytes.iter().sum()),
+        gsplit::util::fmt_bytes(counters.peer_load.total_remote()),
+        gsplit::util::fmt_bytes(counters.train_comm.total_remote()),
+    );
+    Ok(())
+}
+
+fn cmd_partition(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![
+        ("dataset", true, "dataset (default tiny)"),
+        ("strategy", true, "gsplit|node|edge|rand (default gsplit)"),
+        ("parts", true, "number of partitions (default 4)"),
+        ("presample-epochs", true, "pre-sampling epochs (default 10)"),
+        ("batch", true, "pre-sampling batch size (default 1024)"),
+        ("fanout", true, "fanout (default 15)"),
+        ("layers", true, "layers (default 3)"),
+        ("seed", true, "seed (default 42)"),
+    ];
+    let a = Args::parse(argv, spec, "offline splitting pipeline: presample + partition")?;
+    let ds = parse_dataset(&a.get_str("dataset", "tiny"))?.load()?;
+    let strategy = Strategy::parse(&a.get_str("strategy", "gsplit"))?;
+    let seed = a.get_u64("seed", 42)?;
+    let (t_pre, pw) = gsplit::util::timer::timed(|| {
+        presample(
+            &ds.graph,
+            &ds.labels.train_set,
+            &PresampleConfig {
+                epochs: a.get_usize("presample-epochs", 10).unwrap(),
+                batch_size: a.get_usize("batch", 1024).unwrap(),
+                fanouts: vec![a.get_usize("fanout", 15).unwrap(); a.get_usize("layers", 3).unwrap()],
+                seed,
+            },
+        )
+    });
+    let mask = train_mask(&ds);
+    let k = a.get_usize("parts", 4)?;
+    let (t_part, part) =
+        gsplit::util::timer::timed(|| partition_graph(&ds.graph, &pw, &mask, strategy, k, 0.05, seed));
+    let q = gsplit::partition::evaluate_partitioning(&ds.graph, &pw, &part);
+    println!(
+        "dataset={} strategy={strategy:?} k={k}\npresample {:.1}s, partition {:.1}s",
+        ds.spec.name, t_pre, t_part
+    );
+    println!(
+        "expected cut fraction {:.3}, imbalance {:.3}, loads {:?}",
+        q.cut_fraction(),
+        q.imbalance,
+        q.loads
+    );
+    Ok(())
+}
+
+fn cmd_gen(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![("dataset", true, "dataset to generate (default all paper stand-ins)")];
+    let a = Args::parse(argv, spec, "generate and cache stand-in graphs under target/graphs/")?;
+    let list = match a.get("dataset") {
+        Some(d) => vec![parse_dataset(d)?],
+        None => gsplit::graph::StandIn::all_paper().to_vec(),
+    };
+    for s in list {
+        let (t, ds) = gsplit::util::timer::timed(|| s.load());
+        let ds = ds?;
+        println!(
+            "{}: {} vertices, {} edges ({:.1}s)",
+            ds.spec.name,
+            ds.graph.num_vertices(),
+            ds.graph.num_edges(),
+            t
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![("artifacts", true, "artifacts dir (default artifacts)")];
+    let a = Args::parse(argv, spec, "print dataset specs and AOT artifact info")?;
+    let mut t = Table::new(&["Dataset", "Vertices", "Und. edges", "Feat", "Train frac"]).left(0);
+    for s in gsplit::graph::StandIn::all_paper() {
+        let sp = s.spec();
+        t.row(vec![
+            sp.name.into(),
+            sp.num_vertices.to_string(),
+            sp.num_und_edges.to_string(),
+            sp.feat_dim.to_string(),
+            format!("{:.3}", sp.train_frac),
+        ]);
+    }
+    t.print();
+    match Runtime::load(a.get_str("artifacts", "artifacts")) {
+        Ok(rt) => println!(
+            "artifacts: {} entries, fanout {}, dims feat={} hidden={} classes={}",
+            rt.manifest.artifacts.len(),
+            rt.manifest.kernel_fanout,
+            rt.manifest.feat_dim,
+            rt.manifest.hidden,
+            rt.manifest.num_classes
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn train_mask(ds: &Dataset) -> Vec<bool> {
+    let mut m = vec![false; ds.graph.num_vertices()];
+    for &t in &ds.labels.train_set {
+        m[t as usize] = true;
+    }
+    m
+}
+
+fn print_breakdown(system: &str, dataset: &str, t: &PhaseBreakdown) {
+    let mut tab = Table::new(&["System", "Dataset", "S", "L", "FB", "Total(s)"]).left(0).left(1);
+    tab.row(vec![
+        system.to_string(),
+        dataset.to_string(),
+        fmt_secs(t.sampling),
+        fmt_secs(t.loading),
+        fmt_secs(t.fb),
+        fmt_secs(t.total()),
+    ]);
+    tab.print();
+}

@@ -1,0 +1,287 @@
+//! GNN model configuration, FLOP accounting, and the parameter store used
+//! by the real (PJRT) training path.
+//!
+//! The models match the paper's evaluation (§7.1): **GraphSage** (mean
+//! aggregator) and **GAT** (single-head attention; the paper's GAT hidden
+//! size counts the concatenated output). Layer compute itself lives in the
+//! AOT-compiled HLO (L2/L1); this module owns shapes, parameter tensors,
+//! initialization, and the SGD step applied after gradient all-reduce.
+
+use crate::rng::Pcg32;
+
+/// Which GNN architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GnnKind {
+    GraphSage,
+    Gat,
+}
+
+impl GnnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnKind::GraphSage => "GraphSage",
+            GnnKind::Gat => "GAT",
+        }
+    }
+}
+
+/// Full model shape description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub kind: GnnKind,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    pub num_layers: usize,
+}
+
+impl ModelConfig {
+    /// Input dim of layer `l` (0 = bottom).
+    pub fn in_dim(&self, l: usize) -> usize {
+        if l == 0 {
+            self.feat_dim
+        } else {
+            self.hidden
+        }
+    }
+
+    /// Output dim of layer `l`.
+    pub fn out_dim(&self, l: usize) -> usize {
+        if l + 1 == self.num_layers {
+            self.num_classes
+        } else {
+            self.hidden
+        }
+    }
+
+    /// Forward FLOPs to compute `num_dst` outputs of layer `l` from
+    /// `num_edges` aggregated neighbors.
+    ///
+    /// GraphSage: two dense transforms per dst (self + aggregated
+    /// neighbor), aggregation itself is bandwidth-bound (counted in
+    /// `agg_bytes`, not FLOPs).
+    /// GAT: one dense transform per dst plus per-edge attention scoring
+    /// (2·out dot products) and per-edge weighted accumulation.
+    pub fn layer_fwd_flops(&self, l: usize, num_dst: u64, num_edges: u64) -> u64 {
+        let din = self.in_dim(l) as u64;
+        let dout = self.out_dim(l) as u64;
+        match self.kind {
+            GnnKind::GraphSage => num_dst * 2 * (2 * din * dout),
+            GnnKind::Gat => {
+                let dense = num_dst * 2 * din * dout;
+                let attn = num_edges * (4 * dout + 8);
+                let accum = num_edges * 2 * dout;
+                dense + attn + accum
+            }
+        }
+    }
+
+    /// Irregular memory traffic (bytes) of aggregating `num_edges`
+    /// neighbors of width `in_dim(l)` plus writing `num_dst` outputs —
+    /// the gather/scatter part of the layer that the MXU cannot help with.
+    pub fn layer_agg_bytes(&self, l: usize, num_dst: u64, num_edges: u64) -> u64 {
+        let din = self.in_dim(l) as u64 * 4;
+        let dout = self.out_dim(l) as u64 * 4;
+        // GAT touches each edge twice (score pass + weighted-sum pass).
+        let passes = match self.kind {
+            GnnKind::GraphSage => 1,
+            GnnKind::Gat => 2,
+        };
+        num_edges * din * passes + num_dst * (din + dout)
+    }
+
+    /// Bytes of one hidden row *entering* layer `l` (what a training
+    /// shuffle moves at that layer boundary).
+    pub fn row_bytes_in(&self, l: usize) -> u64 {
+        self.in_dim(l) as u64 * 4
+    }
+}
+
+/// One layer's parameters, stored as flat row-major f32 tensors.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// GraphSage: `[w_self (din×dout), w_neigh (din×dout), bias (dout)]`.
+    /// GAT: `[w (din×dout), a_src (dout), a_dst (dout), bias (dout)]`.
+    pub tensors: Vec<Vec<f32>>,
+    pub shapes: Vec<(usize, usize)>,
+}
+
+/// All model parameters (replicated on every device; gradients are
+/// all-reduced before the update, matching synchronous data/split
+/// parallel training).
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub cfg: ModelConfig,
+    pub layers: Vec<LayerParams>,
+}
+
+impl ParamStore {
+    /// Xavier/Glorot-uniform init, deterministic per seed.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut layers = Vec::with_capacity(cfg.num_layers);
+        for l in 0..cfg.num_layers {
+            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
+            let mut tensors = Vec::new();
+            let mut shapes = Vec::new();
+            let mat = |r: usize, c: usize, rng: &mut Pcg32| {
+                let bound = (6.0 / (r + c) as f64).sqrt() as f32;
+                let t: Vec<f32> =
+                    (0..r * c).map(|_| (rng.next_f32() * 2.0 - 1.0) * bound).collect();
+                (t, (r, c))
+            };
+            match cfg.kind {
+                GnnKind::GraphSage => {
+                    for _ in 0..2 {
+                        let (t, s) = mat(din, dout, &mut rng);
+                        tensors.push(t);
+                        shapes.push(s);
+                    }
+                    tensors.push(vec![0.0; dout]);
+                    shapes.push((1, dout));
+                }
+                GnnKind::Gat => {
+                    let (t, s) = mat(din, dout, &mut rng);
+                    tensors.push(t);
+                    shapes.push(s);
+                    for _ in 0..2 {
+                        let (t, s) = mat(1, dout, &mut rng);
+                        tensors.push(t);
+                        shapes.push(s);
+                    }
+                    tensors.push(vec![0.0; dout]);
+                    shapes.push((1, dout));
+                }
+            }
+            layers.push(LayerParams { tensors, shapes });
+        }
+        ParamStore { cfg: cfg.clone(), layers }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().flat_map(|l| l.tensors.iter()).map(Vec::len).sum()
+    }
+
+    /// SGD step: `p -= lr * g` over flat gradients laid out layer by
+    /// layer, tensor by tensor (the gradient layout the runtime produces).
+    pub fn sgd_step(&mut self, grads: &[Vec<Vec<f32>>], lr: f32) {
+        assert_eq!(grads.len(), self.layers.len());
+        for (layer, glayer) in self.layers.iter_mut().zip(grads) {
+            assert_eq!(layer.tensors.len(), glayer.len());
+            for (t, g) in layer.tensors.iter_mut().zip(glayer) {
+                assert_eq!(t.len(), g.len());
+                for (p, gv) in t.iter_mut().zip(g) {
+                    *p -= lr * gv;
+                }
+            }
+        }
+    }
+
+    /// Average several replicas' gradients (the all-reduce of synchronous
+    /// multi-GPU training, simulated).
+    pub fn allreduce_mean(replica_grads: &[Vec<Vec<Vec<f32>>>]) -> Vec<Vec<Vec<f32>>> {
+        assert!(!replica_grads.is_empty());
+        let mut out = replica_grads[0].clone();
+        let n = replica_grads.len() as f32;
+        for rep in &replica_grads[1..] {
+            for (ol, rl) in out.iter_mut().zip(rep) {
+                for (ot, rt) in ol.iter_mut().zip(rl) {
+                    for (o, r) in ot.iter_mut().zip(rt) {
+                        *o += r;
+                    }
+                }
+            }
+        }
+        for l in &mut out {
+            for t in l {
+                for v in t {
+                    *v /= n;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: GnnKind) -> ModelConfig {
+        ModelConfig { kind, feat_dim: 32, hidden: 16, num_classes: 4, num_layers: 3 }
+    }
+
+    #[test]
+    fn dims_chain() {
+        let c = cfg(GnnKind::GraphSage);
+        assert_eq!(c.in_dim(0), 32);
+        assert_eq!(c.out_dim(0), 16);
+        assert_eq!(c.in_dim(1), 16);
+        assert_eq!(c.out_dim(2), 4);
+    }
+
+    #[test]
+    fn gat_costs_more_per_edge() {
+        let s = cfg(GnnKind::GraphSage);
+        let g = cfg(GnnKind::Gat);
+        let (d, e) = (1000, 15000);
+        assert!(g.layer_fwd_flops(1, d, e) > s.layer_fwd_flops(1, d, e) / 2);
+        assert!(g.layer_agg_bytes(1, d, e) > s.layer_agg_bytes(1, d, e));
+        // FLOPs grow with edges for GAT but not for Sage.
+        assert_eq!(s.layer_fwd_flops(1, d, e), s.layer_fwd_flops(1, d, 2 * e));
+        assert!(g.layer_fwd_flops(1, d, 2 * e) > g.layer_fwd_flops(1, d, e));
+    }
+
+    #[test]
+    fn param_store_shapes() {
+        let c = cfg(GnnKind::GraphSage);
+        let p = ParamStore::init(&c, 1);
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.layers[0].shapes[0], (32, 16));
+        assert_eq!(p.layers[2].shapes[1], (16, 4));
+        // Deterministic init.
+        let p2 = ParamStore::init(&c, 1);
+        assert_eq!(p.layers[1].tensors[0], p2.layers[1].tensors[0]);
+        let p3 = ParamStore::init(&c, 2);
+        assert_ne!(p.layers[1].tensors[0], p3.layers[1].tensors[0]);
+    }
+
+    #[test]
+    fn gat_param_layout() {
+        let c = cfg(GnnKind::Gat);
+        let p = ParamStore::init(&c, 3);
+        assert_eq!(p.layers[0].tensors.len(), 4);
+        assert_eq!(p.layers[0].shapes, vec![(32, 16), (1, 16), (1, 16), (1, 16)]);
+    }
+
+    #[test]
+    fn sgd_and_allreduce() {
+        let c = ModelConfig {
+            kind: GnnKind::GraphSage,
+            feat_dim: 2,
+            hidden: 2,
+            num_classes: 2,
+            num_layers: 1,
+        };
+        let mut p = ParamStore::init(&c, 1);
+        let before = p.layers[0].tensors[0].clone();
+        let ones: Vec<Vec<Vec<f32>>> = vec![p
+            .layers[0]
+            .tensors
+            .iter()
+            .map(|t| vec![1.0; t.len()])
+            .collect()];
+        let threes: Vec<Vec<Vec<f32>>> = vec![p
+            .layers[0]
+            .tensors
+            .iter()
+            .map(|t| vec![3.0; t.len()])
+            .collect()];
+        let avg = ParamStore::allreduce_mean(&[ones.clone(), threes]);
+        assert!(avg[0][0].iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        p.sgd_step(&avg, 0.1);
+        for (a, b) in p.layers[0].tensors[0].iter().zip(&before) {
+            assert!((a - (b - 0.2)).abs() < 1e-6);
+        }
+    }
+}

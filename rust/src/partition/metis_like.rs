@@ -1,0 +1,468 @@
+//! Multilevel weighted min-edge-cut partitioner (METIS-family heuristic,
+//! built from scratch — METIS itself is not available offline, and the
+//! paper only requires "a heuristic, for example Metis").
+//!
+//! Three classic phases:
+//! 1. **Coarsening** — heavy-edge matching: repeatedly contract a maximal
+//!    matching that prefers heavy edges, aggregating vertex and edge
+//!    weights, until the graph is small.
+//! 2. **Initial partitioning** — greedy graph growing on the coarsest
+//!    graph: grow each part from a seed, absorbing the boundary vertex
+//!    with the highest connection gain until the part reaches its load
+//!    target.
+//! 3. **Uncoarsening + refinement** — project the assignment back level by
+//!    level and run boundary FM-style refinement: move boundary vertices
+//!    to the neighbor part with maximal cut gain, subject to the (1+ε)
+//!    balance constraint of Eq. 2.
+
+use crate::graph::CsrGraph;
+use crate::rng::Pcg32;
+use crate::{DeviceId, Vid};
+
+#[derive(Debug, Clone)]
+pub struct MultilevelParams {
+    pub k: usize,
+    pub epsilon: f64,
+    pub seed: u64,
+    /// Stop coarsening when the graph has ≤ `coarsen_target_per_part × k`
+    /// vertices.
+    pub coarsen_target_per_part: usize,
+    /// Maximum refinement passes per level.
+    pub refine_passes: usize,
+}
+
+impl Default for MultilevelParams {
+    fn default() -> Self {
+        MultilevelParams {
+            k: 2,
+            epsilon: 0.05,
+            seed: 0,
+            coarsen_target_per_part: 64,
+            refine_passes: 4,
+        }
+    }
+}
+
+/// Internal weighted graph used across coarsening levels (CSR with weights).
+struct WGraph {
+    offsets: Vec<u64>,
+    adj: Vec<Vid>,
+    ew: Vec<u64>,
+    vw: Vec<u64>,
+}
+
+impl WGraph {
+    fn n(&self) -> usize {
+        self.vw.len()
+    }
+
+    #[inline]
+    fn neighbors(&self, v: Vid) -> impl Iterator<Item = (Vid, u64)> + '_ {
+        let (s, e) = (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize);
+        self.adj[s..e].iter().copied().zip(self.ew[s..e].iter().copied())
+    }
+
+    fn total_vw(&self) -> u64 {
+        self.vw.iter().sum()
+    }
+}
+
+/// Entry point: returns the per-vertex part assignment.
+pub fn multilevel_partition(
+    g: &CsrGraph,
+    vw: &[u64],
+    ew: &[u32],
+    params: &MultilevelParams,
+) -> Vec<DeviceId> {
+    assert_eq!(vw.len(), g.num_vertices());
+    assert_eq!(ew.len(), g.num_edges());
+    // Level 0: copy of the input. Edge weights get +1 so that structurally
+    // present but never-pre-sampled edges still discourage cutting slightly
+    // (ties broken toward locality); this matches METIS's behaviour of
+    // requiring positive weights.
+    let base = WGraph {
+        offsets: g.offsets().to_vec(),
+        adj: g.adj().to_vec(),
+        ew: ew.iter().map(|&w| w as u64 + 1).collect(),
+        vw: vw.iter().map(|&w| w + 1).collect(),
+    };
+
+    // --- Phase 1: coarsen ---
+    let mut levels: Vec<WGraph> = vec![base];
+    let mut maps: Vec<Vec<Vid>> = Vec::new(); // fine vertex -> coarse vertex
+    let target = params.coarsen_target_per_part * params.k;
+    let mut rng = Pcg32::new(params.seed ^ 0xC0A5);
+    loop {
+        let cur = levels.last().unwrap();
+        if cur.n() <= target {
+            break;
+        }
+        let (map, coarse_n) = heavy_edge_matching(cur, &mut rng);
+        // Stalled (e.g. star graphs where matching can't shrink much).
+        if coarse_n as f64 > cur.n() as f64 * 0.95 {
+            break;
+        }
+        let coarse = contract(cur, &map, coarse_n);
+        maps.push(map);
+        levels.push(coarse);
+    }
+
+    // --- Phase 2: initial partition on the coarsest graph ---
+    let coarsest = levels.last().unwrap();
+    let mut assign = greedy_growing(coarsest, params, &mut rng);
+    refine(coarsest, &mut assign, params);
+
+    // --- Phase 3: uncoarsen + refine ---
+    for lvl in (0..maps.len()).rev() {
+        let fine = &levels[lvl];
+        let map = &maps[lvl];
+        let mut fine_assign = vec![0 as DeviceId; fine.n()];
+        for v in 0..fine.n() {
+            fine_assign[v] = assign[map[v] as usize];
+        }
+        assign = fine_assign;
+        refine(fine, &mut assign, params);
+    }
+    assign
+}
+
+/// Heavy-edge matching: visit vertices in random order; match each
+/// unmatched vertex with its unmatched neighbor of maximal edge weight.
+/// Returns (fine→coarse map, number of coarse vertices).
+fn heavy_edge_matching(g: &WGraph, rng: &mut Pcg32) -> (Vec<Vid>, usize) {
+    let n = g.n();
+    let mut order: Vec<Vid> = (0..n as Vid).collect();
+    rng.shuffle(&mut order);
+    let mut mate: Vec<Vid> = vec![Vid::MAX; n];
+    for &v in &order {
+        if mate[v as usize] != Vid::MAX {
+            continue;
+        }
+        let mut best: Option<(Vid, u64)> = None;
+        for (u, w) in g.neighbors(v) {
+            if u != v && mate[u as usize] == Vid::MAX && best.map(|(_, bw)| w > bw).unwrap_or(true)
+            {
+                best = Some((u, w));
+            }
+        }
+        match best {
+            Some((u, _)) => {
+                mate[v as usize] = u;
+                mate[u as usize] = v;
+            }
+            None => mate[v as usize] = v, // self-matched (stays single)
+        }
+    }
+    // Assign coarse ids.
+    let mut map = vec![Vid::MAX; n];
+    let mut next = 0 as Vid;
+    for v in 0..n as Vid {
+        if map[v as usize] != Vid::MAX {
+            continue;
+        }
+        let m = mate[v as usize];
+        map[v as usize] = next;
+        if m != Vid::MAX && m != v {
+            map[m as usize] = next;
+        }
+        next += 1;
+    }
+    (map, next as usize)
+}
+
+/// Contract matched pairs into a coarse WGraph, summing weights and merging
+/// parallel edges.
+fn contract(g: &WGraph, map: &[Vid], coarse_n: usize) -> WGraph {
+    let mut vw = vec![0u64; coarse_n];
+    for v in 0..g.n() {
+        vw[map[v] as usize] += g.vw[v];
+    }
+    // Count coarse degrees (upper bound: sum of member degrees).
+    let mut counts = vec![0u64; coarse_n + 1];
+    for v in 0..g.n() as Vid {
+        let c = map[v as usize] as usize;
+        let deg = (g.offsets[v as usize + 1] - g.offsets[v as usize]) as u64;
+        counts[c + 1] += deg;
+    }
+    for i in 0..coarse_n {
+        counts[i + 1] += counts[i];
+    }
+    let total = counts[coarse_n] as usize;
+    let mut adj = vec![0 as Vid; total];
+    let mut ew = vec![0u64; total];
+    let mut cursor = counts.clone();
+    for v in 0..g.n() as Vid {
+        let cv = map[v as usize];
+        for (u, w) in g.neighbors(v) {
+            let cu = map[u as usize];
+            if cu == cv {
+                continue; // contracted edge disappears
+            }
+            let slot = &mut cursor[cv as usize];
+            adj[*slot as usize] = cu;
+            ew[*slot as usize] = w;
+            *slot += 1;
+        }
+    }
+    // Per-row sort + merge duplicates, then rebuild tight CSR.
+    let mut new_offsets = vec![0u64; coarse_n + 1];
+    let mut write = 0usize;
+    for c in 0..coarse_n {
+        let (s, e) = (counts[c] as usize, cursor[c] as usize);
+        // sort the row by neighbor id (pair sort over (adj, ew))
+        let mut row: Vec<(Vid, u64)> =
+            adj[s..e].iter().copied().zip(ew[s..e].iter().copied()).collect();
+        row.sort_unstable_by_key(|&(u, _)| u);
+        let row_start = write;
+        let mut last: Option<Vid> = None;
+        for (u, w) in row {
+            if last == Some(u) {
+                ew[write - 1] += w;
+            } else {
+                adj[write] = u;
+                ew[write] = w;
+                write += 1;
+                last = Some(u);
+            }
+        }
+        new_offsets[c] = row_start as u64;
+    }
+    new_offsets[coarse_n] = write as u64;
+    adj.truncate(write);
+    ew.truncate(write);
+    WGraph { offsets: new_offsets, adj, ew, vw }
+}
+
+/// Greedy graph growing initial partitioning.
+fn greedy_growing(g: &WGraph, params: &MultilevelParams, rng: &mut Pcg32) -> Vec<DeviceId> {
+    let n = g.n();
+    let k = params.k;
+    let total = g.total_vw();
+    let target = total as f64 / k as f64;
+    let mut assign = vec![DeviceId::MAX; n];
+    let mut loads = vec![0u64; k];
+    for part in 0..k {
+        // Seed: random unassigned vertex.
+        let mut seed = None;
+        for _ in 0..64 {
+            let v = rng.gen_range(n as u32);
+            if assign[v as usize] == DeviceId::MAX {
+                seed = Some(v);
+                break;
+            }
+        }
+        let seed = match seed.or_else(|| {
+            (0..n as Vid).find(|&v| assign[v as usize] == DeviceId::MAX)
+        }) {
+            Some(s) => s,
+            None => break,
+        };
+        // Grow: frontier of candidate vertices with gains = connection
+        // weight to this part. Simple binary-heap growing.
+        use std::collections::BinaryHeap;
+        let mut heap: BinaryHeap<(u64, Vid)> = BinaryHeap::new();
+        heap.push((1, seed));
+        while loads[part] as f64 <= target && !heap.is_empty() {
+            let (_, v) = heap.pop().unwrap();
+            if assign[v as usize] != DeviceId::MAX {
+                continue;
+            }
+            assign[v as usize] = part as DeviceId;
+            loads[part] += g.vw[v as usize];
+            for (u, w) in g.neighbors(v) {
+                if assign[u as usize] == DeviceId::MAX {
+                    heap.push((w, u));
+                }
+            }
+        }
+    }
+    // Leftovers: assign to the lightest part.
+    for v in 0..n {
+        if assign[v] == DeviceId::MAX {
+            let lightest =
+                (0..k).min_by_key(|&p| loads[p]).expect("k >= 1");
+            assign[v] = lightest as DeviceId;
+            loads[lightest] += g.vw[v];
+        }
+    }
+    assign
+}
+
+/// Boundary FM-style refinement: greedy single-vertex moves that improve
+/// the cut while keeping every part ≤ (1+ε)·(total/k).
+fn refine(g: &WGraph, assign: &mut [DeviceId], params: &MultilevelParams) {
+    let n = g.n();
+    let k = params.k;
+    let total = g.total_vw();
+    let max_load = ((total as f64 / k as f64) * (1.0 + params.epsilon)).ceil() as u64;
+    let mut loads = vec![0u64; k];
+    for v in 0..n {
+        loads[assign[v] as usize] += g.vw[v];
+    }
+    // conn[p] reused per-vertex: connection weight of v to part p.
+    let mut conn = vec![0u64; k];
+    for _pass in 0..params.refine_passes {
+        let mut moved = 0usize;
+        for v in 0..n as Vid {
+            let from = assign[v as usize] as usize;
+            // Compute connection weights; skip interior vertices fast.
+            let mut boundary = false;
+            conn.iter_mut().for_each(|c| *c = 0);
+            for (u, w) in g.neighbors(v) {
+                let pu = assign[u as usize] as usize;
+                conn[pu] += w;
+                if pu != from {
+                    boundary = true;
+                }
+            }
+            if !boundary {
+                continue;
+            }
+            // Best destination by gain = conn[to] - conn[from].
+            let mut best: Option<(usize, i64)> = None;
+            for to in 0..k {
+                if to == from {
+                    continue;
+                }
+                if loads[to] + g.vw[v as usize] > max_load {
+                    continue;
+                }
+                let gain = conn[to] as i64 - conn[from] as i64;
+                if gain > 0 && best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                    best = Some((to, gain));
+                }
+            }
+            if let Some((to, _)) = best {
+                assign[v as usize] = to as DeviceId;
+                loads[from] -= g.vw[v as usize];
+                loads[to] += g.vw[v as usize];
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{sbm, rmat, GenParams};
+
+    fn cut_of(g: &CsrGraph, ew: &[u32], assign: &[DeviceId]) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..g.num_vertices() as Vid {
+            for (i, &u) in g.neighbors(v).iter().enumerate() {
+                if assign[u as usize] != assign[v as usize] {
+                    cut += ew[g.edge_id(v, i as u32) as usize] as u64;
+                }
+            }
+        }
+        cut
+    }
+
+    fn balance_of(vw: &[u64], assign: &[DeviceId], k: usize) -> f64 {
+        let mut loads = vec![0u64; k];
+        for (v, &p) in assign.iter().enumerate() {
+            loads[p as usize] += vw[v] + 1; // +1 matches internal weighting
+        }
+        let total: u64 = loads.iter().sum();
+        let max = *loads.iter().max().unwrap() as f64;
+        max / (total as f64 / k as f64)
+    }
+
+    #[test]
+    fn recovers_sbm_communities() {
+        let (g, labels) = sbm(2000, 4, 10, 1, 3);
+        let vw = vec![1u64; g.num_vertices()];
+        let ew = vec![1u32; g.num_edges()];
+        let params = MultilevelParams { k: 4, epsilon: 0.05, seed: 1, ..Default::default() };
+        let assign = multilevel_partition(&g, &vw, &ew, &params);
+        // The cut should be close to the number of inter-community edges,
+        // i.e. far below a random 4-way cut (≈ 75% of edges).
+        let cut = cut_of(&g, &ew, &assign);
+        let m = g.num_edges() as u64;
+        assert!(cut < m / 4, "cut={cut} of m={m}");
+        // Most pairs within a community should be co-located.
+        let mut agree = 0u64;
+        let mut total = 0u64;
+        for v in 0..g.num_vertices() {
+            for u in 0..100 {
+                if labels[v] == labels[u] {
+                    total += 1;
+                    if assign[v] == assign[u] {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+        assert!(agree as f64 / total as f64 > 0.5, "{agree}/{total}");
+    }
+
+    #[test]
+    fn respects_balance_constraint() {
+        let g = rmat(&GenParams { num_vertices: 3000, num_edges: 15000, seed: 6 });
+        let vw = vec![1u64; g.num_vertices()];
+        let ew = vec![1u32; g.num_edges()];
+        for k in [2, 4, 8] {
+            let params = MultilevelParams { k, epsilon: 0.05, seed: 2, ..Default::default() };
+            let assign = multilevel_partition(&g, &vw, &ew, &params);
+            let bal = balance_of(&vw, &assign, k);
+            // Initial growing can overshoot slightly before refinement, so
+            // allow modest slack over (1+ε).
+            assert!(bal < 1.25, "k={k} balance={bal}");
+            // All parts non-empty.
+            let mut sizes = vec![0; k];
+            for &p in &assign {
+                sizes[p as usize] += 1;
+            }
+            assert!(sizes.iter().all(|&s| s > 0), "k={k} sizes={sizes:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_edges_steer_the_cut() {
+        // Two cliques joined by heavy edges within and light across:
+        // partitioner must cut the light edges.
+        let mut b = crate::graph::GraphBuilder::new(20).symmetric();
+        for i in 0..10u32 {
+            for j in (i + 1)..10 {
+                b.add_edge(i, j);
+                b.add_edge(i + 10, j + 10);
+            }
+        }
+        // bridges
+        b.add_edge(0, 10);
+        b.add_edge(5, 15);
+        let g = b.finish();
+        let vw = vec![1u64; 20];
+        let ew = vec![1u32; g.num_edges()];
+        let params = MultilevelParams { k: 2, epsilon: 0.3, seed: 3, ..Default::default() };
+        let assign = multilevel_partition(&g, &vw, &ew, &params);
+        // Each clique must land in one part.
+        for i in 1..10 {
+            assert_eq!(assign[i], assign[0], "clique A split");
+            assert_eq!(assign[i + 10], assign[10], "clique B split");
+        }
+        assert_ne!(assign[0], assign[10]);
+    }
+
+    #[test]
+    fn heavy_vertices_count_toward_balance() {
+        // One vertex with huge weight: its part should get few others.
+        let g = rmat(&GenParams { num_vertices: 1000, num_edges: 4000, seed: 8 });
+        let mut vw = vec![1u64; 1000];
+        vw[0] = 400; // ≈ half the total load by itself
+        let ew = vec![1u32; g.num_edges()];
+        let params = MultilevelParams { k: 2, epsilon: 0.10, seed: 4, ..Default::default() };
+        let assign = multilevel_partition(&g, &vw, &ew, &params);
+        let part0 = assign[0];
+        let light_in_part0 =
+            (1..1000).filter(|&v| assign[v] == part0).count();
+        assert!(
+            light_in_part0 < 700,
+            "heavy vertex's part also got {light_in_part0} light vertices"
+        );
+    }
+}

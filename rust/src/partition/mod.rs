@@ -1,0 +1,219 @@
+//! Offline graph partitioning (paper §5, second stage): weighted
+//! min-edge-cut partitioning of the pre-sampled weighted graph `G_w`,
+//! producing the global partitioning function `f_G : V → D` used online by
+//! the splitter and by the cache placement.
+//!
+//! Four strategies, matching the paper's §7.3 comparison:
+//! * [`Strategy::GSplit`] — pre-sampled vertex **and** edge weights
+//!   (the paper's algorithm with probabilistic guarantees).
+//! * [`Strategy::Node`]  — pre-sampled vertex weights, unweighted edges.
+//! * [`Strategy::Edge`]  — no pre-sampling: balances edges + target
+//!   vertices while min-cutting edge count (the common data-parallel
+//!   partitioning, e.g. DistDGL).
+//! * [`Strategy::Rand`]  — uniform random assignment.
+
+mod metis_like;
+mod quality;
+
+pub use metis_like::{multilevel_partition, MultilevelParams};
+pub use quality::{evaluate_minibatch, evaluate_partitioning, MiniBatchQuality, PartitionQuality};
+
+use crate::graph::CsrGraph;
+use crate::presample::PresampleWeights;
+use crate::rng::Pcg32;
+use crate::{DeviceId, Vid};
+
+/// Partitioning strategy (paper §7.3 naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    GSplit,
+    Node,
+    Edge,
+    Rand,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        Ok(match s {
+            "gsplit" => Strategy::GSplit,
+            "node" => Strategy::Node,
+            "edge" => Strategy::Edge,
+            "rand" | "random" => Strategy::Rand,
+            other => anyhow::bail!("unknown partitioner `{other}` (gsplit|node|edge|rand)"),
+        })
+    }
+}
+
+/// The global partitioning function `f_G`: a static vertex → device map.
+#[derive(Debug, Clone)]
+pub struct Partitioning {
+    pub assignment: Vec<DeviceId>,
+    pub k: usize,
+}
+
+impl Partitioning {
+    /// O(1) online lookup — the heart of "embarrassingly parallel
+    /// constant-time splitting" (paper §5).
+    #[inline]
+    pub fn device_of(&self, v: Vid) -> DeviceId {
+        self.assignment[v as usize]
+    }
+
+    /// Vertices per partition.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &d in &self.assignment {
+            sizes[d as usize] += 1;
+        }
+        sizes
+    }
+}
+
+/// Balance slack ε of Eq. 2; the conventional METIS default.
+pub const DEFAULT_EPSILON: f64 = 0.05;
+
+/// Compute `f_G` for the given strategy.
+///
+/// * `weights` — pre-sampling counts (used by GSplit/Node; Edge/Rand ignore
+///   them).
+/// * `train_mask` — Edge additionally balances target (train) vertices, as
+///   data-parallel systems do.
+pub fn partition_graph(
+    g: &CsrGraph,
+    weights: &PresampleWeights,
+    train_mask: &[bool],
+    strategy: Strategy,
+    k: usize,
+    epsilon: f64,
+    seed: u64,
+) -> Partitioning {
+    assert!(k >= 1 && k <= DeviceId::MAX as usize);
+    assert_eq!(train_mask.len(), g.num_vertices());
+    if k == 1 {
+        return Partitioning { assignment: vec![0; g.num_vertices()], k };
+    }
+    match strategy {
+        Strategy::Rand => {
+            let mut rng = Pcg32::new(seed);
+            let assignment =
+                (0..g.num_vertices()).map(|_| rng.gen_range(k as u32) as DeviceId).collect();
+            Partitioning { assignment, k }
+        }
+        Strategy::GSplit => {
+            // Vertex load = k_v, edge weight = k_e (Eq. 2). Vertices never
+            // sampled still need a home for caching: give them weight 0 —
+            // they cost nothing during training — and edge weight 0 edges
+            // are free to cut.
+            let vw: Vec<u64> = weights.vertex.clone();
+            let ew: Vec<u32> = weights.edge.clone();
+            run_multilevel(g, vw, ew, k, epsilon, seed)
+        }
+        Strategy::Node => {
+            let vw: Vec<u64> = weights.vertex.clone();
+            let ew: Vec<u32> = vec![1; g.num_edges()];
+            run_multilevel(g, vw, ew, k, epsilon, seed)
+        }
+        Strategy::Edge => {
+            // Balance edges + target vertices (DistDGL-style): vertex load
+            // = degree + λ·is_train with λ = avg degree, so a target vertex
+            // "costs" about as much as an average vertex's edges.
+            let lambda = g.avg_degree().ceil() as u64;
+            let vw: Vec<u64> = (0..g.num_vertices())
+                .map(|v| g.degree(v as Vid) as u64 + if train_mask[v] { lambda } else { 0 })
+                .collect();
+            let ew: Vec<u32> = vec![1; g.num_edges()];
+            run_multilevel(g, vw, ew, k, epsilon, seed)
+        }
+    }
+}
+
+fn run_multilevel(
+    g: &CsrGraph,
+    vw: Vec<u64>,
+    ew: Vec<u32>,
+    k: usize,
+    epsilon: f64,
+    seed: u64,
+) -> Partitioning {
+    let params = MultilevelParams { k, epsilon, seed, ..Default::default() };
+    let assignment = multilevel_partition(g, &vw, &ew, &params);
+    Partitioning { assignment, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, sbm, GenParams};
+
+    fn weights_for(g: &CsrGraph) -> PresampleWeights {
+        PresampleWeights::uniform(g)
+    }
+
+    #[test]
+    fn rand_covers_all_partitions() {
+        let g = rmat(&GenParams { num_vertices: 4000, num_edges: 16000, seed: 2 });
+        let w = weights_for(&g);
+        let mask = vec![false; g.num_vertices()];
+        let p = partition_graph(&g, &w, &mask, Strategy::Rand, 4, 0.05, 1);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 4000);
+        for s in sizes {
+            assert!(s > 800, "random partition badly skewed: {s}");
+        }
+    }
+
+    #[test]
+    fn k1_is_trivial() {
+        let g = rmat(&GenParams { num_vertices: 100, num_edges: 400, seed: 3 });
+        let w = weights_for(&g);
+        let mask = vec![false; 100];
+        let p = partition_graph(&g, &w, &mask, Strategy::GSplit, 1, 0.05, 1);
+        assert!(p.assignment.iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn edge_strategy_beats_rand_on_communities() {
+        // On an SBM graph the min-cut partitioner should cut far fewer
+        // edges than random assignment.
+        let (g, _) = sbm(4000, 4, 8, 1, 5);
+        let w = weights_for(&g);
+        let mask = vec![true; g.num_vertices()];
+        let rand = partition_graph(&g, &w, &mask, Strategy::Rand, 4, 0.05, 1);
+        let edge = partition_graph(&g, &w, &mask, Strategy::Edge, 4, 0.05, 1);
+        let cut = |p: &Partitioning| -> u64 {
+            let mut c = 0;
+            for v in 0..g.num_vertices() as Vid {
+                for &u in g.neighbors(v) {
+                    if p.device_of(u) != p.device_of(v) {
+                        c += 1;
+                    }
+                }
+            }
+            c
+        };
+        let (cr, ce) = (cut(&rand), cut(&edge));
+        assert!(
+            (ce as f64) < 0.5 * cr as f64,
+            "edge cut {ce} should be far below random cut {cr}"
+        );
+    }
+
+    #[test]
+    fn strategies_are_deterministic() {
+        let g = rmat(&GenParams { num_vertices: 1000, num_edges: 5000, seed: 9 });
+        let w = weights_for(&g);
+        let mask = vec![false; 1000];
+        for s in [Strategy::GSplit, Strategy::Node, Strategy::Edge, Strategy::Rand] {
+            let a = partition_graph(&g, &w, &mask, s, 4, 0.05, 77);
+            let b = partition_graph(&g, &w, &mask, s, 4, 0.05, 77);
+            assert_eq!(a.assignment, b.assignment, "{s:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(Strategy::parse("gsplit").unwrap(), Strategy::GSplit);
+        assert_eq!(Strategy::parse("rand").unwrap(), Strategy::Rand);
+        assert!(Strategy::parse("metis??").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Partitioning quality metrics: expected cut, expected load balance, and
+//! per-mini-batch realized metrics (the quantities plotted in Figure 5).
+
+use crate::graph::CsrGraph;
+use crate::partition::Partitioning;
+use crate::presample::PresampleWeights;
+use crate::sampling::MiniBatch;
+use crate::Vid;
+
+/// Offline (expected) quality of a partitioning under pre-sample weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionQuality {
+    /// Σ_{e ∈ C} k_e — the objective of Eq. 2 (∝ E[Y]).
+    pub expected_cut: u64,
+    /// Σ k_e over all edges (for reporting the cut as a fraction).
+    pub total_edge_weight: u64,
+    /// L_i = Σ_{v ∈ P_i} k_v.
+    pub loads: Vec<u64>,
+    /// max_i L_i / (L / k): 1.0 is perfect balance.
+    pub imbalance: f64,
+}
+
+impl PartitionQuality {
+    pub fn cut_fraction(&self) -> f64 {
+        if self.total_edge_weight == 0 {
+            0.0
+        } else {
+            self.expected_cut as f64 / self.total_edge_weight as f64
+        }
+    }
+}
+
+/// Evaluate the Eq. 2 objective and constraint for a partitioning.
+pub fn evaluate_partitioning(
+    g: &CsrGraph,
+    w: &PresampleWeights,
+    p: &Partitioning,
+) -> PartitionQuality {
+    let mut expected_cut = 0u64;
+    let mut total_edge_weight = 0u64;
+    for v in 0..g.num_vertices() as Vid {
+        let pv = p.device_of(v);
+        for (i, &u) in g.neighbors(v).iter().enumerate() {
+            let we = w.edge[g.edge_id(v, i as u32) as usize] as u64;
+            total_edge_weight += we;
+            if p.device_of(u) != pv {
+                expected_cut += we;
+            }
+        }
+    }
+    let mut loads = vec![0u64; p.k];
+    for v in 0..g.num_vertices() {
+        loads[p.assignment[v] as usize] += w.vertex[v];
+    }
+    let total: u64 = loads.iter().sum();
+    let imbalance = if total == 0 {
+        1.0
+    } else {
+        *loads.iter().max().unwrap() as f64 / (total as f64 / p.k as f64)
+    };
+    PartitionQuality { expected_cut, total_edge_weight, loads, imbalance }
+}
+
+/// Realized per-mini-batch metrics (Figure 5): workload imbalance = max
+/// edges per split / average, communication = fraction of sampled edges
+/// whose endpoints fall in different splits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MiniBatchQuality {
+    pub imbalance: f64,
+    pub cross_edge_fraction: f64,
+}
+
+/// Measure the realized split quality of a sampled mini-batch under `p`.
+pub fn evaluate_minibatch(mb: &MiniBatch, p: &Partitioning) -> MiniBatchQuality {
+    let mut edges_per_split = vec![0u64; p.k];
+    let mut cross = 0u64;
+    let mut total = 0u64;
+    for layer in &mb.layers {
+        for (i, &d) in layer.dst.iter().enumerate() {
+            let pd = p.device_of(d);
+            // Edges of d are processed by d's split (its GPU aggregates
+            // them), so they count toward that split's load.
+            let cnt = layer.neigh_len[i] as u64;
+            edges_per_split[pd as usize] += cnt;
+            total += cnt;
+            for &j in layer.neighbors_of(i) {
+                if p.device_of(layer.src[j as usize]) != pd {
+                    cross += 1;
+                }
+            }
+        }
+    }
+    let avg = total as f64 / p.k as f64;
+    let max = *edges_per_split.iter().max().unwrap_or(&0) as f64;
+    MiniBatchQuality {
+        imbalance: if avg > 0.0 { max / avg } else { 1.0 },
+        cross_edge_fraction: if total > 0 { cross as f64 / total as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+    use crate::partition::{partition_graph, Strategy};
+    use crate::rng::Pcg32;
+    use crate::sampling::Sampler;
+
+    #[test]
+    fn expected_cut_zero_for_k1() {
+        let g = rmat(&GenParams { num_vertices: 500, num_edges: 2500, seed: 4 });
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; 500];
+        let p = partition_graph(&g, &w, &mask, Strategy::GSplit, 1, 0.05, 1);
+        let q = evaluate_partitioning(&g, &w, &p);
+        assert_eq!(q.expected_cut, 0);
+        assert!((q.imbalance - 1.0).abs() < 1e-9);
+        assert_eq!(q.cut_fraction(), 0.0);
+    }
+
+    #[test]
+    fn rand_cut_fraction_near_three_quarters() {
+        // Random 4-way assignment cuts ~75% of edges (the Fig. 5 anchor).
+        let g = rmat(&GenParams { num_vertices: 4000, num_edges: 20000, seed: 5 });
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; 4000];
+        let p = partition_graph(&g, &w, &mask, Strategy::Rand, 4, 0.05, 2);
+        let q = evaluate_partitioning(&g, &w, &p);
+        assert!(
+            (q.cut_fraction() - 0.75).abs() < 0.03,
+            "cut fraction {}",
+            q.cut_fraction()
+        );
+    }
+
+    #[test]
+    fn minibatch_metrics_in_range() {
+        let g = rmat(&GenParams { num_vertices: 2000, num_edges: 10000, seed: 6 });
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; 2000];
+        let p = partition_graph(&g, &w, &mask, Strategy::Rand, 4, 0.05, 3);
+        let mut s = Sampler::new();
+        let mut rng = Pcg32::new(1);
+        let targets: Vec<Vid> = (0..256).collect();
+        let mb = s.sample(&g, &targets, &[5, 5], &mut rng);
+        let q = evaluate_minibatch(&mb, &p);
+        assert!(q.imbalance >= 1.0);
+        assert!((0.0..=1.0).contains(&q.cross_edge_fraction));
+        // Random split of a random graph: expect lots of cross edges.
+        assert!(q.cross_edge_fraction > 0.5, "{}", q.cross_edge_fraction);
+    }
+}

@@ -1,0 +1,217 @@
+//! Offline pre-sampling (paper §5, "Finding the global partitioning
+//! function", first stage).
+//!
+//! Runs the *same* sampling algorithm used during training for a fixed
+//! number of epochs and accumulates, for every vertex `v`, the count `k_v`
+//! of times it appears at a layer l > 0 (i.e. as a destination of any
+//! sampled layer), and for every CSR edge slot `e`, the count `k_e` of
+//! times that edge is sampled. The weights `w_V(v) = k_v / N` and
+//! `w_E(e) = k_e / N` turn the input graph into the weighted graph `G_w`
+//! that the min-edge-cut partitioner consumes; by the law-of-large-numbers
+//! argument in the paper's Analysis, partitioning `G_w` minimizes the
+//! *expected* shuffle volume and balances the *expected* per-split load of
+//! a random mini-batch.
+
+use crate::graph::CsrGraph;
+use crate::rng::{derive_seed, Pcg32};
+use crate::sampling::Sampler;
+use crate::Vid;
+
+/// Accumulated pre-sampling statistics (raw counts; weights are counts / N,
+/// but the partitioner is scale-invariant so we keep integers).
+#[derive(Debug, Clone)]
+pub struct PresampleWeights {
+    /// `k_v` per vertex: appearances as a layer-(l>0) destination.
+    pub vertex: Vec<u64>,
+    /// `k_e` per CSR edge slot (directed dst→src sampling events).
+    pub edge: Vec<u32>,
+    /// Number of pre-sampling epochs that produced these counts.
+    pub epochs: usize,
+}
+
+impl PresampleWeights {
+    pub fn uniform(g: &CsrGraph) -> Self {
+        PresampleWeights {
+            vertex: vec![1; g.num_vertices()],
+            edge: vec![1; g.num_edges()],
+            epochs: 0,
+        }
+    }
+}
+
+/// Configuration for the pre-sampling stage.
+#[derive(Debug, Clone)]
+pub struct PresampleConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub fanouts: Vec<usize>,
+    pub seed: u64,
+}
+
+/// Run pre-sampling: `epochs` passes over the training targets, sampling
+/// mini-batches exactly as the trainer does and accumulating visit counts.
+///
+/// Multi-threaded: epochs × batches are sharded over worker threads, each
+/// with a deterministic RNG stream (results are independent of the thread
+/// count).
+pub fn presample(
+    g: &CsrGraph,
+    train_targets: &[Vid],
+    cfg: &PresampleConfig,
+) -> PresampleWeights {
+    let num_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+    // Work items: (epoch, batch_index, target range).
+    let mut batches: Vec<(usize, usize)> = Vec::new();
+    let iters = train_targets.len().div_ceil(cfg.batch_size).max(1);
+    for e in 0..cfg.epochs {
+        for b in 0..iters {
+            batches.push((e, b));
+        }
+    }
+    let vertex_len = g.num_vertices();
+    let edge_len = g.num_edges();
+
+    let partials: Vec<(Vec<u64>, Vec<u32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..num_threads {
+            let batches = &batches;
+            let handle = scope.spawn(move || {
+                let mut vw = vec![0u64; vertex_len];
+                let mut ew = vec![0u32; edge_len];
+                let mut sampler = Sampler::new();
+                let mut scratch = Vec::new();
+                for &(epoch, batch) in batches.iter().skip(t).step_by(num_threads) {
+                    // Epoch target permutation must match the trainer's.
+                    let mut targets = train_targets.to_vec();
+                    let mut erng = Pcg32::new(derive_seed(cfg.seed, &[epoch as u64]));
+                    erng.shuffle(&mut targets);
+                    let lo = batch * cfg.batch_size;
+                    let hi = (lo + cfg.batch_size).min(targets.len());
+                    let mut brng = Pcg32::new(derive_seed(
+                        cfg.seed,
+                        &[epoch as u64, batch as u64, 0xbeef],
+                    ));
+                    accumulate_batch(
+                        g,
+                        &targets[lo..hi],
+                        &cfg.fanouts,
+                        &mut sampler,
+                        &mut brng,
+                        &mut vw,
+                        &mut ew,
+                        &mut scratch,
+                    );
+                }
+                (vw, ew)
+            });
+            handles.push(handle);
+        }
+        handles.into_iter().map(|h| h.join().expect("presample worker panicked")).collect()
+    });
+
+    let mut vertex = vec![0u64; vertex_len];
+    let mut edge = vec![0u32; edge_len];
+    for (vw, ew) in partials {
+        for (a, b) in vertex.iter_mut().zip(&vw) {
+            *a += b;
+        }
+        for (a, b) in edge.iter_mut().zip(&ew) {
+            *a += b;
+        }
+    }
+    PresampleWeights { vertex, edge, epochs: cfg.epochs }
+}
+
+/// Sample one mini-batch and accumulate its visit counts.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_batch(
+    g: &CsrGraph,
+    targets: &[Vid],
+    fanouts: &[usize],
+    sampler: &mut Sampler,
+    rng: &mut Pcg32,
+    vw: &mut [u64],
+    ew: &mut [u32],
+    scratch: &mut Vec<u32>,
+) {
+    let _ = scratch;
+    let mb = sampler.sample(g, targets, fanouts, rng);
+    for layer in &mb.layers {
+        for (i, &d) in layer.dst.iter().enumerate() {
+            // Destination of a sampled layer ⇒ k_v event (layer l > 0 in
+            // the paper's bottom-up numbering: every dst set is at l > 0).
+            vw[d as usize] += 1;
+            // Every sampled edge ⇒ k_e event. The local neighbor index j
+            // refers to layer.src; we need the CSR slot of (d → src[j]).
+            // Recover it by scanning d's (sorted) adjacency with binary
+            // search — O(log deg) per edge, done offline.
+            let nbrs = g.neighbors(d);
+            for &j in layer.neighbors_of(i) {
+                let u = layer.src[j as usize];
+                if let Ok(pos) = nbrs.binary_search(&u) {
+                    ew[g.edge_id(d, pos as u32) as usize] += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+
+    fn setup() -> (CsrGraph, Vec<Vid>) {
+        let g = rmat(&GenParams { num_vertices: 2048, num_edges: 16384, seed: 21 });
+        let targets: Vec<Vid> = (0..512).collect();
+        (g, targets)
+    }
+
+    #[test]
+    fn counts_are_positive_and_bounded() {
+        let (g, targets) = setup();
+        let cfg = PresampleConfig { epochs: 3, batch_size: 128, fanouts: vec![5, 5], seed: 7 };
+        let w = presample(&g, &targets, &cfg);
+        // Every target appears as a top-layer dst exactly once per epoch,
+        // so its count is at least epochs.
+        for &t in &targets {
+            assert!(w.vertex[t as usize] >= cfg.epochs as u64, "target {t}");
+        }
+        // Total edge count equals what the sampler reports.
+        let total_e: u64 = w.edge.iter().map(|&x| x as u64).sum();
+        assert!(total_e > 0);
+        // fanout bounds: per epoch each target row samples ≤ 5 + 5·(≤6 srcs)…
+        // just sanity-bound total: epochs × batch × (5 + 30·5)
+        let bound = cfg.epochs as u64 * targets.len() as u64 * (5 + 6 * 5) as u64;
+        assert!(total_e <= bound, "total_e={total_e} bound={bound}");
+    }
+
+    #[test]
+    fn deterministic_across_thread_schedules() {
+        let (g, targets) = setup();
+        let cfg = PresampleConfig { epochs: 2, batch_size: 64, fanouts: vec![4, 4], seed: 11 };
+        let a = presample(&g, &targets, &cfg);
+        let b = presample(&g, &targets, &cfg);
+        assert_eq!(a.vertex, b.vertex);
+        assert_eq!(a.edge, b.edge);
+    }
+
+    #[test]
+    fn more_epochs_more_counts() {
+        let (g, targets) = setup();
+        let mk = |e| PresampleConfig { epochs: e, batch_size: 128, fanouts: vec![5], seed: 3 };
+        let w1 = presample(&g, &targets, &mk(1));
+        let w4 = presample(&g, &targets, &mk(4));
+        let s1: u64 = w1.vertex.iter().sum();
+        let s4: u64 = w4.vertex.iter().sum();
+        assert!(s4 > 3 * s1, "s1={s1} s4={s4}");
+    }
+
+    #[test]
+    fn uniform_weights_shape() {
+        let (g, _) = setup();
+        let w = PresampleWeights::uniform(&g);
+        assert_eq!(w.vertex.len(), g.num_vertices());
+        assert_eq!(w.edge.len(), g.num_edges());
+    }
+}

@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` parsing — the compile-time contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::GnnKind;
+use crate::util::JsonValue;
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "layer_fwd" | "layer_bwd" | "loss".
+    pub kind: String,
+    pub model: Option<GnnKind>,
+    pub din: usize,
+    pub dout: usize,
+    pub relu: bool,
+    /// Destination-row bucket (or batch bucket for loss).
+    pub m: usize,
+    /// Mixed-frontier capacity (layer artifacts).
+    pub n: usize,
+    /// Neighbor fanout (layer artifacts).
+    pub k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kernel_fanout: usize,
+    pub m_buckets: Vec<usize>,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    /// (din, dout, relu) bottom→top of the default exported model.
+    pub layer_dims: Vec<(usize, usize, bool)>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = JsonValue::parse(text)?;
+        let version = v.get("version")?.as_u64().unwrap_or(0);
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let layer_dims = v
+            .get("layer_dims")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layer_dims not an array"))?
+            .iter()
+            .map(|e| {
+                let a = e.as_arr().ok_or_else(|| anyhow!("layer_dims entry"))?;
+                Ok((
+                    a[0].as_usize().unwrap(),
+                    a[1].as_usize().unwrap(),
+                    a[2].as_bool().or(a[2].as_u64().map(|x| x != 0)).unwrap_or(false),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = Vec::new();
+        for e in v.get("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts"))? {
+            let get_usize = |k: &str| e.get(k).ok().and_then(|x| x.as_usize()).unwrap_or(0);
+            let model = match e.get("model").ok().and_then(|m| m.as_str()) {
+                Some("sage") => Some(GnnKind::GraphSage),
+                Some("gat") => Some(GnnKind::Gat),
+                _ => None,
+            };
+            artifacts.push(ArtifactMeta {
+                name: e.get("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+                file: e.get("file")?.as_str().ok_or_else(|| anyhow!("file"))?.to_string(),
+                kind: e.get("kind")?.as_str().ok_or_else(|| anyhow!("kind"))?.to_string(),
+                model,
+                din: get_usize("din"),
+                dout: get_usize("dout"),
+                relu: e.get("relu").ok().and_then(|x| x.as_bool()).unwrap_or(false),
+                m: get_usize("m").max(get_usize("b")),
+                n: get_usize("n"),
+                k: get_usize("k"),
+            });
+        }
+        Ok(Manifest {
+            kernel_fanout: v.get("kernel_fanout")?.as_usize().unwrap_or(0),
+            m_buckets: v
+                .get("m_buckets")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("m_buckets"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            feat_dim: v.get("feat_dim")?.as_usize().unwrap_or(0),
+            hidden: v.get("hidden")?.as_usize().unwrap_or(0),
+            num_classes: v.get("num_classes")?.as_usize().unwrap_or(0),
+            layer_dims,
+            artifacts,
+        })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest layer bucket with `m ≥ m_need` for the signature.
+    pub fn pick_layer(
+        &self,
+        kind: &str,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        m_need: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind
+                    && a.model == Some(model)
+                    && a.din == din
+                    && a.dout == dout
+                    && a.relu == relu
+                    && a.m >= m_need
+            })
+            .min_by_key(|a| a.m)
+    }
+
+    /// Smallest loss bucket with `b ≥ b_need` and matching class count.
+    pub fn pick_loss(&self, b_need: usize, c: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "loss" && a.dout == 0 && a.m >= b_need && self.num_classes == c)
+            .min_by_key(|a| a.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "kernel_fanout": 5, "m_buckets": [256, 1024],
+      "loss_buckets": [256], "feat_dim": 32, "hidden": 64, "num_classes": 8,
+      "layer_dims": [[32, 64, true], [64, 8, false]],
+      "artifacts": [
+        {"name": "sage_32x64_r1_m256_fwd", "file": "a.hlo.txt", "kind": "layer_fwd",
+         "model": "sage", "din": 32, "dout": 64, "relu": true, "m": 256, "n": 1536, "k": 5},
+        {"name": "sage_32x64_r1_m1024_fwd", "file": "b.hlo.txt", "kind": "layer_fwd",
+         "model": "sage", "din": 32, "dout": 64, "relu": true, "m": 1024, "n": 6144, "k": 5},
+        {"name": "loss_b256_c8", "file": "l.hlo.txt", "kind": "loss", "b": 256, "c": 8}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.kernel_fanout, 5);
+        assert_eq!(m.layer_dims, vec![(32, 64, true), (64, 8, false)]);
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.by_name("loss_b256_c8").unwrap().m, 256);
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.pick_layer("layer_fwd", GnnKind::GraphSage, 32, 64, true, 100).unwrap();
+        assert_eq!(a.m, 256);
+        let a = m.pick_layer("layer_fwd", GnnKind::GraphSage, 32, 64, true, 257).unwrap();
+        assert_eq!(a.m, 1024);
+        assert!(m.pick_layer("layer_fwd", GnnKind::GraphSage, 32, 64, true, 5000).is_none());
+        assert!(m.pick_layer("layer_fwd", GnnKind::Gat, 32, 64, true, 10).is_none());
+    }
+
+    #[test]
+    fn picks_loss() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.pick_loss(100, 8).is_some());
+        assert!(m.pick_loss(300, 8).is_none());
+        assert!(m.pick_loss(100, 4).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 9}"#).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Literal construction/extraction helpers around the `xla` crate.
+
+use anyhow::{anyhow, Result};
+
+/// Build an f32 literal of the given dims from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "lit_f32: {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape f32 {dims:?}: {e}"))
+}
+
+/// Build an i32 literal of the given dims from a flat row-major slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(expect as usize == data.len(), "lit_i32: {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape i32 {dims:?}: {e}"))
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(lit_i32(&[1; 7], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let l = lit_i32(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

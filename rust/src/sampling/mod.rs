@@ -1,0 +1,300 @@
+//! Layer-wise mini-batch neighborhood sampling (the paper's "standard
+//! neighborhood sampling", §7.1: uniform fanout per layer, without
+//! replacement — DGL `NeighborSampler` semantics).
+//!
+//! Sampling proceeds **top-down**: layer L holds the target vertices; each
+//! step samples ≤ `fanout` in-neighbors of every frontier vertex, and the
+//! next frontier is the deduplicated union of the current frontier and the
+//! sampled neighbors (GNN layers need each destination's own previous-layer
+//! feature for the self term, so destinations are always part of the source
+//! set — DGL "block" convention, `src[..num_dst] == dst`).
+
+mod vmap;
+
+pub use vmap::VertexMap;
+
+use crate::graph::CsrGraph;
+use crate::rng::{sample_without_replacement, Pcg32};
+use crate::Vid;
+
+/// Sentinel local index marking a padded (absent) neighbor slot.
+pub const NO_NEIGHBOR: u32 = u32::MAX;
+
+/// One sampled GNN layer ("block"): edges from a source vertex set to a
+/// destination vertex set, stored as a dense `[num_dst, fanout]` neighbor
+/// table of local indices into `src`.
+#[derive(Debug, Clone, Default)]
+pub struct LayerSample {
+    /// Destination vertices (global ids). The hidden features of these are
+    /// computed by this layer.
+    pub dst: Vec<Vid>,
+    /// Source vertices (global ids); `src[..dst.len()] == dst`.
+    pub src: Vec<Vid>,
+    /// `[num_dst × fanout]` local indices into `src`; `NO_NEIGHBOR` pads
+    /// rows of vertices with degree < fanout.
+    pub neigh: Vec<u32>,
+    /// Actual neighbor count per destination.
+    pub neigh_len: Vec<u32>,
+    /// Fanout this layer was sampled with (row stride of `neigh`).
+    pub fanout: usize,
+}
+
+impl LayerSample {
+    pub fn num_dst(&self) -> usize {
+        self.dst.len()
+    }
+
+    pub fn num_src(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Number of sampled edges (excluding the implicit self edges).
+    pub fn num_edges(&self) -> u64 {
+        self.neigh_len.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Neighbor row (local indices into `src`) of destination `i`.
+    pub fn neighbors_of(&self, i: usize) -> &[u32] {
+        &self.neigh[i * self.fanout..i * self.fanout + self.neigh_len[i] as usize]
+    }
+
+    fn clear(&mut self) {
+        self.dst.clear();
+        self.src.clear();
+        self.neigh.clear();
+        self.neigh_len.clear();
+    }
+}
+
+/// A fully sampled mini-batch: `layers[0]` is the top layer (destinations =
+/// targets), `layers.last()` the bottom layer whose `src` set needs input
+/// features loaded.
+#[derive(Debug, Clone, Default)]
+pub struct MiniBatch {
+    pub layers: Vec<LayerSample>,
+}
+
+impl MiniBatch {
+    /// Vertices whose input features must be loaded (bottom-layer sources).
+    pub fn input_vertices(&self) -> &[Vid] {
+        &self.layers.last().expect("empty mini-batch").src
+    }
+
+    /// Total sampled edges across layers — the paper's "# edges computed"
+    /// redundancy metric (Table 1).
+    pub fn total_edges(&self) -> u64 {
+        self.layers.iter().map(LayerSample::num_edges).sum()
+    }
+
+    /// Total destination vertices at layers l > 0 — the computation-load
+    /// metric X_i of the splitting problem (Eq. 1).
+    pub fn total_hidden_vertices(&self) -> u64 {
+        self.layers.iter().map(|l| l.num_dst() as u64).sum()
+    }
+}
+
+/// Reusable sampler: owns scratch buffers so per-iteration sampling is
+/// allocation-free after warmup (hot-path requirement, see DESIGN.md §Perf).
+pub struct Sampler {
+    vmap: VertexMap,
+    scratch: Vec<u32>,
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sampler {
+    pub fn new() -> Self {
+        Sampler { vmap: VertexMap::new(), scratch: Vec::with_capacity(64) }
+    }
+
+    /// Sample a mini-batch of `fanouts.len()` layers starting from
+    /// `targets`. `fanouts[0]` is the fanout of the **top** layer.
+    pub fn sample(
+        &mut self,
+        graph: &CsrGraph,
+        targets: &[Vid],
+        fanouts: &[usize],
+        rng: &mut Pcg32,
+    ) -> MiniBatch {
+        let mut mb = MiniBatch { layers: Vec::with_capacity(fanouts.len()) };
+        self.sample_into(graph, targets, fanouts, rng, &mut mb);
+        mb
+    }
+
+    /// Like [`Self::sample`] but reuses the layer buffers of `out`.
+    pub fn sample_into(
+        &mut self,
+        graph: &CsrGraph,
+        targets: &[Vid],
+        fanouts: &[usize],
+        rng: &mut Pcg32,
+        out: &mut MiniBatch,
+    ) {
+        out.layers.resize_with(fanouts.len(), LayerSample::default);
+        // The frontier of the first layer is the target set itself.
+        let mut frontier: Vec<Vid> = targets.to_vec();
+        for (l, &fanout) in fanouts.iter().enumerate() {
+            let layer = &mut out.layers[l];
+            layer.clear();
+            layer.fanout = fanout;
+            self.sample_layer(graph, &frontier, fanout, rng, layer);
+            frontier.clear();
+            frontier.extend_from_slice(&layer.src);
+        }
+    }
+
+    /// Sample one layer: neighbors of `frontier`, building the local-index
+    /// table. This is the `sample_layer` of Algorithm 1 in the paper.
+    pub fn sample_layer(
+        &mut self,
+        graph: &CsrGraph,
+        frontier: &[Vid],
+        fanout: usize,
+        rng: &mut Pcg32,
+        layer: &mut LayerSample,
+    ) {
+        let vmap = &mut self.vmap;
+        vmap.reset(frontier.len() * (fanout + 1));
+        layer.dst.extend_from_slice(frontier);
+        // Destinations occupy the first local slots, in order.
+        for &v in frontier {
+            let (idx, fresh) = vmap.get_or_insert(v);
+            debug_assert!(fresh, "duplicate vertex {v} in frontier");
+            debug_assert_eq!(idx as usize, layer.src.len());
+            layer.src.push(v);
+        }
+        // Write each neighbor row exactly once (sampled prefix + padded
+        // tail) instead of pre-filling the whole table with NO_NEIGHBOR —
+        // the table is the largest per-iteration buffer (M×K×4 bytes) and
+        // double-writing it showed up in profiles (§Perf).
+        layer.neigh.reserve(frontier.len() * fanout);
+        unsafe { layer.neigh.set_len(frontier.len() * fanout) };
+        layer.neigh_len.resize(frontier.len(), 0);
+        for (i, &v) in frontier.iter().enumerate() {
+            let nbrs = graph.neighbors(v);
+            sample_without_replacement(rng, nbrs.len() as u32, fanout as u32, &mut self.scratch);
+            let row = &mut layer.neigh[i * fanout..(i + 1) * fanout];
+            for (j, &slot) in self.scratch.iter().enumerate() {
+                let u = nbrs[slot as usize];
+                let (idx, fresh) = vmap.get_or_insert(u);
+                if fresh {
+                    layer.src.push(u);
+                }
+                row[j] = idx;
+            }
+            row[self.scratch.len()..].fill(NO_NEIGHBOR);
+            layer.neigh_len[i] = self.scratch.len() as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+
+    fn test_graph() -> CsrGraph {
+        rmat(&GenParams { num_vertices: 1024, num_edges: 8192, seed: 5 })
+    }
+
+    #[test]
+    fn block_invariants() {
+        let g = test_graph();
+        let mut s = Sampler::new();
+        let mut rng = Pcg32::new(1);
+        let targets: Vec<Vid> = (0..64).collect();
+        let mb = s.sample(&g, &targets, &[5, 5, 5], &mut rng);
+        assert_eq!(mb.layers.len(), 3);
+        assert_eq!(mb.layers[0].dst, targets);
+        for (l, layer) in mb.layers.iter().enumerate() {
+            // dst is a prefix of src
+            assert_eq!(&layer.src[..layer.num_dst()], &layer.dst[..], "layer {l}");
+            // src has no duplicates
+            let mut sorted = layer.src.clone();
+            sorted.sort_unstable();
+            let before = sorted.len();
+            sorted.dedup();
+            assert_eq!(before, sorted.len(), "layer {l} has duplicate srcs");
+            // every neighbor index is valid and every real edge exists
+            for i in 0..layer.num_dst() {
+                for &j in layer.neighbors_of(i) {
+                    assert!((j as usize) < layer.num_src());
+                    let (d, srcv) = (layer.dst[i], layer.src[j as usize]);
+                    assert!(g.neighbors(d).contains(&srcv), "{srcv} not a neighbor of {d}");
+                }
+                // padded slots are NO_NEIGHBOR
+                let row = &layer.neigh[i * layer.fanout..(i + 1) * layer.fanout];
+                for &x in &row[layer.neigh_len[i] as usize..] {
+                    assert_eq!(x, NO_NEIGHBOR);
+                }
+            }
+            // layer l+1 frontier == layer l src
+            if l + 1 < mb.layers.len() {
+                assert_eq!(mb.layers[l + 1].dst, layer.src, "frontier chaining at layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_fanout_and_degree() {
+        let g = test_graph();
+        let mut s = Sampler::new();
+        let mut rng = Pcg32::new(2);
+        let targets: Vec<Vid> = (100..160).collect();
+        let mb = s.sample(&g, &targets, &[7], &mut rng);
+        let layer = &mb.layers[0];
+        for (i, &v) in layer.dst.iter().enumerate() {
+            let expect = (g.degree(v) as usize).min(7);
+            assert_eq!(layer.neigh_len[i] as usize, expect, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = test_graph();
+        let targets: Vec<Vid> = (0..32).collect();
+        let mut s1 = Sampler::new();
+        let mut s2 = Sampler::new();
+        let a = s1.sample(&g, &targets, &[5, 5], &mut Pcg32::new(9));
+        let b = s2.sample(&g, &targets, &[5, 5], &mut Pcg32::new(9));
+        assert_eq!(a.layers[1].src, b.layers[1].src);
+        assert_eq!(a.layers[1].neigh, b.layers[1].neigh);
+        let c = s1.sample(&g, &targets, &[5, 5], &mut Pcg32::new(10));
+        assert_ne!(a.layers[1].neigh, c.layers[1].neigh);
+    }
+
+    #[test]
+    fn edge_counts_are_consistent() {
+        let g = test_graph();
+        let mut s = Sampler::new();
+        let mut rng = Pcg32::new(3);
+        let targets: Vec<Vid> = (0..128).collect();
+        let mb = s.sample(&g, &targets, &[5, 5], &mut rng);
+        let manual: u64 = mb
+            .layers
+            .iter()
+            .map(|l| (0..l.num_dst()).map(|i| l.neighbors_of(i).len() as u64).sum::<u64>())
+            .sum();
+        assert_eq!(mb.total_edges(), manual);
+        assert!(mb.total_edges() > 0);
+    }
+
+    #[test]
+    fn sample_into_reuses_buffers() {
+        let g = test_graph();
+        let mut s = Sampler::new();
+        let mut rng = Pcg32::new(4);
+        let mut mb = MiniBatch::default();
+        let t1: Vec<Vid> = (0..16).collect();
+        s.sample_into(&g, &t1, &[3, 3], &mut rng, &mut mb);
+        let first_src = mb.layers[1].src.clone();
+        let t2: Vec<Vid> = (500..516).collect();
+        s.sample_into(&g, &t2, &[3, 3], &mut rng, &mut mb);
+        assert_eq!(mb.layers[0].dst, t2);
+        assert_ne!(mb.layers[1].src, first_src);
+    }
+}

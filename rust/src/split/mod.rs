@@ -1,0 +1,439 @@
+//! Online splitting and cooperative split-parallel sampling (paper §4–§5)
+//! plus the shuffle-index construction that the training phase reuses
+//! (paper §6, Algorithms 1 & 2).
+//!
+//! One `SplitPlan` describes one mini-batch iteration executed
+//! cooperatively by `k` devices:
+//!
+//! * every device owns the **local dst** vertices of each layer (assigned
+//!   by the constant-time global partitioning function `f_G`),
+//! * sampling produces per-device **mixed frontiers** (sources that may be
+//!   owned by other devices),
+//! * a per-layer [`ShuffleIndex`] records exactly which owned rows each
+//!   device must send to each other device so that every mixed frontier
+//!   can be materialized with a single all-to-all per layer — during both
+//!   sampling (vertex ids) and training (hidden features, reused in the
+//!   backward direction for gradients).
+
+use crate::partition::Partitioning;
+use crate::rng::{derive_seed, sample_without_replacement, Pcg32};
+use crate::sampling::{VertexMap, NO_NEIGHBOR};
+use crate::graph::CsrGraph;
+use crate::Vid;
+
+/// Per-device slice of one sampled GNN layer.
+#[derive(Debug, Clone, Default)]
+pub struct DevLayer {
+    /// Destination vertices owned by this device at this layer.
+    pub dst: Vec<Vid>,
+    /// Mixed frontier: `mixed_src[..dst.len()] == dst`, followed by sampled
+    /// neighbors (local or remote). Neighbor table indices point here.
+    pub mixed_src: Vec<Vid>,
+    /// `[dst.len() × fanout]` indices into `mixed_src` (NO_NEIGHBOR pads).
+    pub neigh: Vec<u32>,
+    pub neigh_len: Vec<u32>,
+    pub fanout: usize,
+}
+
+impl DevLayer {
+    pub fn num_dst(&self) -> usize {
+        self.dst.len()
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.neigh_len.iter().map(|&c| c as u64).sum()
+    }
+
+    pub fn neighbors_of(&self, i: usize) -> &[u32] {
+        &self.neigh[i * self.fanout..i * self.fanout + self.neigh_len[i] as usize]
+    }
+}
+
+/// All-to-all exchange plan for one layer.
+///
+/// `send[from][to]` — indices into `from`'s *owned row buffer* of the layer
+/// below (its `dst` list there, or the input frontier for the bottom
+/// layer). `recv[to][from]` — the positions in `to`'s `mixed_src` where the
+/// corresponding rows land. `send[d][d]`/`recv[d][d]` describe local copies
+/// (free of communication cost).
+#[derive(Debug, Clone, Default)]
+pub struct ShuffleIndex {
+    pub send: Vec<Vec<Vec<u32>>>,
+    pub recv: Vec<Vec<Vec<u32>>>,
+}
+
+impl ShuffleIndex {
+    fn new(k: usize) -> Self {
+        ShuffleIndex {
+            send: vec![vec![Vec::new(); k]; k],
+            recv: vec![vec![Vec::new(); k]; k],
+        }
+    }
+
+    /// Number of rows crossing between distinct devices.
+    pub fn remote_rows(&self) -> u64 {
+        let k = self.send.len();
+        let mut n = 0u64;
+        for from in 0..k {
+            for to in 0..k {
+                if from != to {
+                    n += self.send[from][to].len() as u64;
+                }
+            }
+        }
+        n
+    }
+
+    /// Rows received by `to` from remote devices.
+    pub fn remote_rows_into(&self, to: usize) -> u64 {
+        self.recv[to]
+            .iter()
+            .enumerate()
+            .filter(|(from, _)| *from != to)
+            .map(|(_, v)| v.len() as u64)
+            .sum()
+    }
+}
+
+/// One split layer: per-device slices plus the shuffle wiring that fills
+/// every device's mixed frontier from owned rows of the layer below.
+#[derive(Debug, Clone, Default)]
+pub struct SplitLayer {
+    pub per_dev: Vec<DevLayer>,
+    pub shuffle: ShuffleIndex,
+}
+
+impl SplitLayer {
+    pub fn total_edges(&self) -> u64 {
+        self.per_dev.iter().map(DevLayer::num_edges).sum()
+    }
+
+    pub fn edges_per_dev(&self) -> Vec<u64> {
+        self.per_dev.iter().map(DevLayer::num_edges).collect()
+    }
+}
+
+/// The full cooperative plan of one mini-batch iteration.
+#[derive(Debug, Clone, Default)]
+pub struct SplitPlan {
+    pub k: usize,
+    /// `layers[0]` = top (targets), `layers.last()` = bottom.
+    pub layers: Vec<SplitLayer>,
+    /// Input frontier per device: the vertices whose **input features** the
+    /// device owns and must provide (load or cache-hit) for the bottom
+    /// layer. Orders match the bottom layer's shuffle `send` indices.
+    pub input_frontier: Vec<Vec<Vid>>,
+}
+
+impl SplitPlan {
+    /// Total input feature vectors loaded across devices — non-overlapping
+    /// by construction (the paper's headline property).
+    pub fn total_inputs(&self) -> u64 {
+        self.input_frontier.iter().map(|f| f.len() as u64).sum()
+    }
+
+    pub fn total_edges(&self) -> u64 {
+        self.layers.iter().map(SplitLayer::total_edges).sum()
+    }
+
+    /// Owned hidden rows produced by `dev` at layer `l` (its dst there).
+    pub fn owned_rows(&self, l: usize, dev: usize) -> &[Vid] {
+        if l + 1 < self.layers.len() {
+            &self.layers[l + 1].per_dev[dev].dst
+        } else {
+            &self.input_frontier[dev]
+        }
+    }
+}
+
+/// Split-parallel cooperative sampler (Algorithm 1). Owns reusable scratch.
+pub struct SplitSampler {
+    vmaps: Vec<VertexMap>,
+    owner_pos: Vec<VertexMap>,
+    scratch: Vec<u32>,
+}
+
+impl SplitSampler {
+    pub fn new(k: usize) -> Self {
+        SplitSampler {
+            vmaps: (0..k).map(|_| VertexMap::new()).collect(),
+            owner_pos: (0..k).map(|_| VertexMap::new()).collect(),
+            scratch: Vec::with_capacity(64),
+        }
+    }
+
+    /// Cooperatively sample and split one mini-batch.
+    ///
+    /// `seed` must be unique per iteration; per-device RNG streams are
+    /// derived from it, so the result is independent of execution order.
+    pub fn sample(
+        &mut self,
+        g: &CsrGraph,
+        targets: &[Vid],
+        fanouts: &[usize],
+        part: &Partitioning,
+        seed: u64,
+    ) -> SplitPlan {
+        let k = part.k;
+        assert_eq!(self.vmaps.len(), k, "SplitSampler built for different k");
+        let num_layers = fanouts.len();
+        let mut plan = SplitPlan {
+            k,
+            layers: Vec::with_capacity(num_layers),
+            input_frontier: vec![Vec::new(); k],
+        };
+
+        // Split the targets by owner (constant-time lookups — this is the
+        // "embarrassingly parallel" online step).
+        let mut frontier: Vec<Vec<Vid>> = vec![Vec::new(); k];
+        for &t in targets {
+            frontier[part.device_of(t) as usize].push(t);
+        }
+
+        let mut rngs: Vec<Pcg32> =
+            (0..k).map(|d| Pcg32::new(derive_seed(seed, &[d as u64]))).collect();
+
+        for &fanout in fanouts.iter() {
+            let mut layer = SplitLayer {
+                per_dev: Vec::with_capacity(k),
+                shuffle: ShuffleIndex::new(k),
+            };
+            // --- per-device neighbor sampling into mixed frontiers ---
+            for d in 0..k {
+                let dl = sample_dev_layer(
+                    g,
+                    &frontier[d],
+                    fanout,
+                    &mut rngs[d],
+                    &mut self.vmaps[d],
+                    &mut self.scratch,
+                );
+                layer.per_dev.push(dl);
+            }
+            // --- build the next frontier: vertices of each owner appearing
+            // in any mixed frontier, deduplicated in deterministic order ---
+            let mut next: Vec<Vec<Vid>> = vec![Vec::new(); k];
+            for (o, pos) in self.owner_pos.iter_mut().enumerate() {
+                let expected: usize =
+                    layer.per_dev.iter().map(|dl| dl.mixed_src.len()).sum::<usize>() / k + 8;
+                pos.reset(expected.max(16));
+                let _ = o;
+            }
+            for dl in &layer.per_dev {
+                for &v in &dl.mixed_src {
+                    let o = part.device_of(v) as usize;
+                    let (idx, fresh) = self.owner_pos[o].get_or_insert(v);
+                    debug_assert_eq!(!fresh || idx as usize == next[o].len(), true);
+                    if fresh {
+                        next[o].push(v);
+                    }
+                }
+            }
+            // --- shuffle index: owned row position -> mixed_src position ---
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                for (row, &v) in dl.mixed_src.iter().enumerate() {
+                    let o = part.device_of(v) as usize;
+                    let pos = self.owner_pos[o].get(v).expect("owner map populated above");
+                    layer.shuffle.send[o][d].push(pos);
+                    layer.shuffle.recv[d][o].push(row as u32);
+                }
+            }
+            plan.layers.push(layer);
+            frontier = next;
+        }
+        plan.input_frontier = frontier;
+        plan
+    }
+}
+
+fn sample_dev_layer(
+    g: &CsrGraph,
+    frontier: &[Vid],
+    fanout: usize,
+    rng: &mut Pcg32,
+    vmap: &mut VertexMap,
+    scratch: &mut Vec<u32>,
+) -> DevLayer {
+    // Neighbor rows are written exactly once below (sampled prefix +
+    // padded tail), so the table starts uninitialized (§Perf: it is the
+    // largest per-iteration buffer).
+    let mut neigh = Vec::with_capacity(frontier.len() * fanout);
+    unsafe { neigh.set_len(frontier.len() * fanout) };
+    let mut dl = DevLayer {
+        dst: frontier.to_vec(),
+        mixed_src: Vec::with_capacity(frontier.len() * (fanout + 1)),
+        neigh,
+        neigh_len: vec![0; frontier.len()],
+        fanout,
+    };
+    vmap.reset(frontier.len() * (fanout + 1));
+    for &v in frontier {
+        let (idx, fresh) = vmap.get_or_insert(v);
+        debug_assert!(fresh);
+        debug_assert_eq!(idx as usize, dl.mixed_src.len());
+        dl.mixed_src.push(v);
+    }
+    for (i, &v) in frontier.iter().enumerate() {
+        let nbrs = g.neighbors(v);
+        sample_without_replacement(rng, nbrs.len() as u32, fanout as u32, scratch);
+        let row = &mut dl.neigh[i * fanout..(i + 1) * fanout];
+        for (j, &slot) in scratch.iter().enumerate() {
+            let u = nbrs[slot as usize];
+            let (idx, fresh) = vmap.get_or_insert(u);
+            if fresh {
+                dl.mixed_src.push(u);
+            }
+            row[j] = idx;
+        }
+        row[scratch.len()..].fill(NO_NEIGHBOR);
+        dl.neigh_len[i] = scratch.len() as u32;
+    }
+    dl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, GenParams};
+    use crate::partition::{partition_graph, Strategy};
+    use crate::presample::PresampleWeights;
+
+    fn setup(k: usize) -> (CsrGraph, Partitioning) {
+        let g = rmat(&GenParams { num_vertices: 2048, num_edges: 16384, seed: 13 });
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; g.num_vertices()];
+        let p = partition_graph(&g, &w, &mask, Strategy::Edge, k, 0.1, 7);
+        (g, p)
+    }
+
+    fn plan_for(g: &CsrGraph, p: &Partitioning, seed: u64) -> SplitPlan {
+        let targets: Vec<Vid> = (0..256).collect();
+        let mut s = SplitSampler::new(p.k);
+        s.sample(g, &targets, &[5, 5, 5], p, seed)
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_cover_targets() {
+        let (g, p) = setup(4);
+        let plan = plan_for(&g, &p, 1);
+        // Top-layer dst sets partition the targets.
+        let mut seen: Vec<Vid> =
+            plan.layers[0].per_dev.iter().flat_map(|dl| dl.dst.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..256).collect::<Vec<_>>());
+        // Ownership consistency: every dst is owned by its device.
+        for (l, layer) in plan.layers.iter().enumerate() {
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                for &v in &dl.dst {
+                    assert_eq!(p.device_of(v) as usize, d, "layer {l} dev {d} vertex {v}");
+                }
+            }
+        }
+        // Input frontiers are disjoint (no redundant loads — the paper's
+        // key property).
+        let mut inputs: Vec<Vid> =
+            plan.input_frontier.iter().flat_map(|f| f.iter().copied()).collect();
+        let before = inputs.len();
+        inputs.sort_unstable();
+        inputs.dedup();
+        assert_eq!(before, inputs.len(), "redundant input features");
+        assert_eq!(plan.total_inputs(), before as u64);
+    }
+
+    #[test]
+    fn shuffle_index_is_a_bijection_onto_mixed_frontiers() {
+        let (g, p) = setup(4);
+        let plan = plan_for(&g, &p, 2);
+        for (l, layer) in plan.layers.iter().enumerate() {
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                // Every mixed_src row is received exactly once.
+                let mut filled = vec![false; dl.mixed_src.len()];
+                for from in 0..plan.k {
+                    let send = &layer.shuffle.send[from][d];
+                    let recv = &layer.shuffle.recv[d][from];
+                    assert_eq!(send.len(), recv.len());
+                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
+                        // The row sent is the row that lands.
+                        let owned = plan.owned_rows(l, from);
+                        assert_eq!(
+                            owned[s_idx as usize], dl.mixed_src[r_idx as usize],
+                            "layer {l} {from}->{d}"
+                        );
+                        assert!(!filled[r_idx as usize], "double fill");
+                        filled[r_idx as usize] = true;
+                    }
+                }
+                assert!(filled.iter().all(|&b| b), "unfilled mixed row (layer {l} dev {d})");
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_chaining_matches_owned_rows() {
+        let (g, p) = setup(3);
+        let plan = plan_for(&g, &p, 3);
+        // Every vertex in a mixed frontier at layer l appears in its
+        // owner's dst at layer l+1 (or input frontier at the bottom).
+        for l in 0..plan.layers.len() {
+            for dl in &plan.layers[l].per_dev {
+                for &v in &dl.mixed_src {
+                    let o = p.device_of(v) as usize;
+                    assert!(
+                        plan.owned_rows(l, o).contains(&v),
+                        "layer {l}: {v} missing from owner {o}'s rows"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (g, p) = setup(4);
+        let a = plan_for(&g, &p, 9);
+        let b = plan_for(&g, &p, 9);
+        assert_eq!(a.total_edges(), b.total_edges());
+        assert_eq!(a.input_frontier, b.input_frontier);
+        let c = plan_for(&g, &p, 10);
+        assert_ne!(
+            a.layers[2].per_dev[0].mixed_src, c.layers[2].per_dev[0].mixed_src,
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn k1_plan_has_no_remote_traffic() {
+        let (g, p) = setup(1);
+        let plan = plan_for(&g, &p, 4);
+        for layer in &plan.layers {
+            assert_eq!(layer.shuffle.remote_rows(), 0);
+        }
+        assert!(plan.total_inputs() > 0);
+    }
+
+    #[test]
+    fn split_edges_match_sampled_edges() {
+        let (g, p) = setup(4);
+        let plan = plan_for(&g, &p, 5);
+        for layer in &plan.layers {
+            for dl in &layer.per_dev {
+                for i in 0..dl.num_dst() {
+                    for &j in dl.neighbors_of(i) {
+                        let (d, s) = (dl.dst[i], dl.mixed_src[j as usize]);
+                        assert!(g.neighbors(d).contains(&s), "sampled non-edge {d}->{s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn remote_rows_counts_match_recv() {
+        let (g, p) = setup(4);
+        let plan = plan_for(&g, &p, 6);
+        for layer in &plan.layers {
+            let total: u64 = (0..plan.k).map(|d| layer.shuffle.remote_rows_into(d)).sum();
+            assert_eq!(total, layer.shuffle.remote_rows());
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Property-testing helpers (a `proptest`-lite: the real crate is not in
+//! the offline registry). Runs an invariant over many seeded random cases
+//! and reports the first failing seed so failures are reproducible.
+
+use crate::rng::Pcg32;
+
+/// Run `check(rng, case_index)` for `cases` deterministic random cases.
+/// Panics with the failing case's seed on the first violation so the case
+/// can be replayed in isolation.
+pub fn for_all_seeds(name: &str, cases: u64, mut check: impl FnMut(&mut Pcg32, u64)) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Pcg32::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, case)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Draw a random subset of `0..n` of the given size (distinct, sorted).
+pub fn random_subset(rng: &mut Pcg32, n: u32, size: usize) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..n).collect();
+    rng.shuffle(&mut v);
+    v.truncate(size.min(n as usize));
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_invariant_holds() {
+        for_all_seeds("sum-commutes", 20, |rng, _| {
+            let a = rng.gen_range(100) as i64;
+            let b = rng.gen_range(100) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed at case 0")]
+    fn reports_failing_case() {
+        for_all_seeds("always-fails", 5, |_, _| panic!("boom"));
+    }
+
+    #[test]
+    fn random_subset_properties() {
+        for_all_seeds("subset", 20, |rng, _| {
+            let s = random_subset(rng, 50, 10);
+            assert_eq!(s.len(), 10);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&x| x < 50));
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! Tiny leveled logger (stderr). `GSPLIT_LOG=debug|info|warn|error` selects
+//! verbosity; defaults to `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn ensure_init() {
+    INIT.get_or_init(|| {
+        let lvl = match std::env::var("GSPLIT_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("warn") => Level::Warn,
+            Ok("error") => Level::Error,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+pub fn enabled(level: Level) -> bool {
+    ensure_init();
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[gsplit {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*)) };
+}

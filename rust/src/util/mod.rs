@@ -1,0 +1,81 @@
+//! Small self-contained utilities: JSON reading/writing, ASCII table
+//! rendering, timing, and logging. These exist in-tree because the build
+//! environment's crate registry does not carry `serde`/`serde_json`/`clap`
+//! (see DESIGN.md §3).
+
+pub mod json;
+pub mod log;
+pub mod table;
+pub mod timer;
+
+pub use json::JsonValue;
+pub use table::Table;
+pub use timer::Stopwatch;
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with SI-style suffixes (K/M/B), matching how the
+/// paper reports edge and feature-vector counts in Table 1.
+pub fn fmt_count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.0}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 10.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(926_000_000), "926M");
+        assert_eq!(fmt_count(13_400_000_000), "13.4B");
+        assert_eq!(fmt_count(751), "751");
+        assert_eq!(fmt_count(4_200), "4.2K");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(283.4), "283");
+        assert_eq!(fmt_secs(62.7), "62.7");
+        assert_eq!(fmt_secs(1.5), "1.50");
+    }
+}

@@ -1,0 +1,131 @@
+//! ASCII table renderer used by every bench binary to print paper-style
+//! tables (Table 1, Table 3, …) to stdout.
+
+/// A simple left/right-aligned ASCII table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// Columns that should be right-aligned (numeric columns).
+    right: Vec<bool>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            right: header.iter().map(|_| true).collect(),
+        }
+    }
+
+    /// Mark column `i` as left-aligned (labels). All columns default to
+    /// right-aligned since most table content is numeric.
+    pub fn left(mut self, i: usize) -> Self {
+        if i < self.right.len() {
+            self.right[i] = false;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    /// A horizontal separator row.
+    pub fn sep(&mut self) {
+        self.rows.push(Vec::new());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = width[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let hline = |out: &mut String| {
+            out.push('+');
+            for w in &width {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let fmt_row = |out: &mut String, cells: &[String], right: &[bool]| {
+            out.push('|');
+            for i in 0..ncols {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = width[i] - cell.chars().count();
+                if right.get(i).copied().unwrap_or(false) {
+                    out.push_str(&format!(" {}{} |", " ".repeat(pad), cell));
+                } else {
+                    out.push_str(&format!(" {}{} |", cell, " ".repeat(pad)));
+                }
+            }
+            out.push('\n');
+        };
+        hline(&mut out);
+        let left_hdr: Vec<bool> = self.header.iter().map(|_| false).collect();
+        fmt_row(&mut out, &self.header, &left_hdr);
+        hline(&mut out);
+        for row in &self.rows {
+            if row.is_empty() {
+                hline(&mut out);
+            } else {
+                fmt_row(&mut out, row, &self.right);
+            }
+        }
+        hline(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Convenience macro for building a row of strings.
+#[macro_export]
+macro_rules! table_row {
+    ($($cell:expr),* $(,)?) => {
+        vec![$($cell.to_string()),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["System", "Total(s)", "Speedup"]).left(0);
+        t.row(vec!["DGL".into(), "73.4".into(), "4.4x".into()]);
+        t.row(vec!["GSplit".into(), "16.7".into(), "".into()]);
+        let s = t.render();
+        assert!(s.contains("| System | Total(s) | Speedup |"));
+        assert!(s.contains("| DGL    |     73.4 |    4.4x |"));
+        // Every line is equally wide.
+        let widths: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Wall-clock timing helpers used by the engines and the bench harness.
+
+use std::time::Instant;
+
+/// A restartable stopwatch that accumulates elapsed seconds across
+/// start/stop pairs. Engines keep one per training phase (S / L / FB).
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { total: 0.0, started: None }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Accumulated seconds (not counting a currently-running interval).
+    pub fn secs(&self) -> f64 {
+        self.total
+    }
+
+    pub fn reset(&mut self) {
+        self.total = 0.0;
+        self.started = None;
+    }
+
+    /// Time a closure and add its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Measure a closure once, returning (seconds, value).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed().as_secs_f64(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "got {}", sw.secs());
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (secs, v) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

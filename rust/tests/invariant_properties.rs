@@ -1,0 +1,201 @@
+//! Randomized property tests over the coordinator's core invariants
+//! (proptest-lite: seeded random cases via `gsplit::testing`).
+
+use gsplit::graph::{rmat, GenParams};
+use gsplit::partition::{partition_graph, Partitioning, Strategy};
+use gsplit::presample::PresampleWeights;
+use gsplit::rng::Pcg32;
+use gsplit::sampling::Sampler;
+use gsplit::split::SplitSampler;
+use gsplit::testing::for_all_seeds;
+use gsplit::Vid;
+
+fn random_graph(rng: &mut Pcg32) -> gsplit::graph::CsrGraph {
+    let n = 200 + rng.gen_range(2000) as usize;
+    let m = n * (2 + rng.gen_range(6) as usize);
+    rmat(&GenParams { num_vertices: n, num_edges: m, seed: rng.next_u64() })
+}
+
+fn random_targets(rng: &mut Pcg32, n: usize) -> Vec<Vid> {
+    let count = 16 + rng.gen_range(128) as usize;
+    let mut seen = std::collections::BTreeSet::new();
+    while seen.len() < count.min(n) {
+        seen.insert(rng.gen_range(n as u32));
+    }
+    seen.into_iter().collect()
+}
+
+#[test]
+fn property_split_plan_preserves_sampled_structure() {
+    for_all_seeds("split-plan-structure", 12, |rng, _| {
+        let g = random_graph(rng);
+        let k = 1 + rng.gen_range(7) as usize;
+        let part = Partitioning {
+            assignment: (0..g.num_vertices())
+                .map(|_| rng.gen_range(k as u32) as u16)
+                .collect(),
+            k,
+        };
+        let targets = random_targets(rng, g.num_vertices());
+        let fanouts = vec![1 + rng.gen_range(8) as usize; 1 + rng.gen_range(3) as usize];
+        let mut ss = SplitSampler::new(k);
+        let plan = ss.sample(&g, &targets, &fanouts, &part, rng.next_u64());
+
+        // (1) target cover: top dsts partition the targets
+        let mut tops: Vec<Vid> =
+            plan.layers[0].per_dev.iter().flat_map(|d| d.dst.iter().copied()).collect();
+        tops.sort_unstable();
+        let mut want = targets.clone();
+        want.sort_unstable();
+        assert_eq!(tops, want);
+
+        // (2) inputs are globally disjoint
+        let mut inputs: Vec<Vid> =
+            plan.input_frontier.iter().flat_map(|f| f.iter().copied()).collect();
+        let len = inputs.len();
+        inputs.sort_unstable();
+        inputs.dedup();
+        assert_eq!(len, inputs.len(), "redundant input load");
+
+        // (3) ownership: every dst owned by its device, every mixed vertex
+        //     present in its owner's rows below
+        for (l, layer) in plan.layers.iter().enumerate() {
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                for &v in &dl.dst {
+                    assert_eq!(part.device_of(v) as usize, d);
+                }
+                for &v in &dl.mixed_src {
+                    let o = part.device_of(v) as usize;
+                    assert!(plan.owned_rows(l, o).contains(&v));
+                }
+            }
+            // (4) shuffle bijection
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                let mut filled = vec![false; dl.mixed_src.len()];
+                for from in 0..k {
+                    for (&s, &r) in layer.shuffle.send[from][d]
+                        .iter()
+                        .zip(&layer.shuffle.recv[d][from])
+                    {
+                        assert_eq!(
+                            plan.owned_rows(l, from)[s as usize],
+                            dl.mixed_src[r as usize]
+                        );
+                        assert!(!filled[r as usize]);
+                        filled[r as usize] = true;
+                    }
+                }
+                assert!(filled.iter().all(|&x| x));
+            }
+        }
+    });
+}
+
+#[test]
+fn property_split_counts_match_single_device_distribution() {
+    // Split-parallel sampling with k devices must produce a mini-batch with
+    // the same structure *distribution* as single-device sampling: same
+    // per-layer destination counts is too strong (different RNG streams),
+    // but the frontier growth bound must hold and edges must be real.
+    for_all_seeds("split-counts", 10, |rng, _| {
+        let g = random_graph(rng);
+        let k = 1 + rng.gen_range(4) as usize;
+        let part = Partitioning {
+            assignment: (0..g.num_vertices())
+                .map(|_| rng.gen_range(k as u32) as u16)
+                .collect(),
+            k,
+        };
+        let targets = random_targets(rng, g.num_vertices());
+        let fanout = 1 + rng.gen_range(6) as usize;
+        let mut ss = SplitSampler::new(k);
+        let plan = ss.sample(&g, &targets, &[fanout, fanout], &part, rng.next_u64());
+        // Frontier growth bound: layer dst count ≤ previous × (fanout+1).
+        let mut prev = targets.len() as u64;
+        for layer in &plan.layers {
+            let dst: u64 = layer.per_dev.iter().map(|d| d.num_dst() as u64).sum();
+            assert!(dst <= prev, "dst layer can't exceed mixed rows above");
+            let mixed: u64 = layer.per_dev.iter().map(|d| d.mixed_src.len() as u64).sum();
+            assert!(mixed <= prev * (fanout as u64 + 1));
+            prev = mixed;
+        }
+        // Edge reality: spot-check up to 100 edges.
+        let mut checked = 0;
+        'outer: for layer in &plan.layers {
+            for dl in &layer.per_dev {
+                for i in 0..dl.num_dst() {
+                    for &j in dl.neighbors_of(i) {
+                        assert!(g.neighbors(dl.dst[i]).contains(&dl.mixed_src[j as usize]));
+                        checked += 1;
+                        if checked > 100 {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn property_partitioners_respect_balance_and_cover() {
+    for_all_seeds("partition-balance", 8, |rng, _| {
+        let g = random_graph(rng);
+        let w = PresampleWeights::uniform(&g);
+        let mask = vec![false; g.num_vertices()];
+        let k = 2 + rng.gen_range(6) as usize;
+        for strat in [Strategy::GSplit, Strategy::Node, Strategy::Edge, Strategy::Rand] {
+            let p = partition_graph(&g, &w, &mask, strat, k, 0.1, rng.next_u64());
+            assert_eq!(p.assignment.len(), g.num_vertices());
+            assert!(p.assignment.iter().all(|&d| (d as usize) < k), "{strat:?}");
+            let sizes = p.sizes();
+            assert_eq!(sizes.iter().sum::<usize>(), g.num_vertices());
+            // Each strategy balances its own load measure: vertex counts
+            // for GSplit/Node under uniform weights, degree for Edge.
+            match strat {
+                Strategy::GSplit | Strategy::Node => {
+                    let avg = g.num_vertices() as f64 / k as f64;
+                    let max = *sizes.iter().max().unwrap() as f64;
+                    assert!(max / avg < 1.6, "{strat:?} sizes {sizes:?}");
+                }
+                Strategy::Edge => {
+                    let mut deg = vec![0u64; k];
+                    for v in 0..g.num_vertices() {
+                        deg[p.assignment[v] as usize] += g.degree(v as Vid) as u64;
+                    }
+                    let total: u64 = deg.iter().sum();
+                    let avg = total as f64 / k as f64;
+                    let max = *deg.iter().max().unwrap() as f64;
+                    assert!(max / avg < 1.6, "Edge degree loads {deg:?}");
+                }
+                Strategy::Rand => {}
+            }
+        }
+    });
+}
+
+#[test]
+fn property_single_device_sampler_equals_split_with_k1() {
+    // With one device the cooperative sampler must produce exactly the
+    // classic mini-batch: same frontier sets, same edges.
+    for_all_seeds("k1-equivalence", 10, |rng, _| {
+        let g = random_graph(rng);
+        let targets = random_targets(rng, g.num_vertices());
+        let fanouts = vec![1 + rng.gen_range(5) as usize; 2];
+        let part = Partitioning { assignment: vec![0; g.num_vertices()], k: 1 };
+        let seed = rng.next_u64();
+        let mut ss = SplitSampler::new(1);
+        let plan = ss.sample(&g, &targets, &fanouts, &part, seed);
+        // Single-device Sampler with the derived per-device stream:
+        let mut s = Sampler::new();
+        let mut drng = Pcg32::new(gsplit::rng::derive_seed(seed, &[0]));
+        let mb = s.sample(&g, &targets, &fanouts, &mut drng);
+        for (l, layer) in mb.layers.iter().enumerate() {
+            let dl = &plan.layers[l].per_dev[0];
+            assert_eq!(dl.dst, layer.dst, "layer {l} dst");
+            assert_eq!(dl.mixed_src, layer.src, "layer {l} src");
+            assert_eq!(dl.neigh, layer.neigh, "layer {l} neigh");
+        }
+        assert_eq!(plan.input_frontier[0], *mb.input_vertices());
+    });
+}

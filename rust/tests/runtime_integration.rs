@@ -1,0 +1,274 @@
+//! Integration tests over the PJRT runtime: load real artifacts, execute
+//! them, and verify numerics against the golden values `aot.py` computed
+//! in JAX — this pins the whole L1→L2→HLO→PJRT→Rust chain.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so plain
+//! `cargo test` without artifacts still passes the pure-Rust suite).
+
+use gsplit::model::{GnnKind, LayerParams, ModelConfig, ParamStore};
+use gsplit::runtime::Runtime;
+use gsplit::sampling::NO_NEIGHBOR;
+use gsplit::util::JsonValue;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+/// The deterministic "ramp" pattern aot.py uses for goldens:
+/// v(i) = ((i*37 + 11) % 97)/97 * scale - scale/2.
+fn ramp(len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
+}
+
+fn golden() -> Option<JsonValue> {
+    let dir = artifacts_dir()?;
+    let text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+    Some(JsonValue::parse(&text).unwrap())
+}
+
+#[test]
+fn layer_fwd_matches_jax_golden() {
+    let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let k = rt.manifest.kernel_fanout;
+    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+    let m_real = g.get("layer").unwrap().get("m_real").unwrap().as_usize().unwrap();
+
+    // Rebuild the exact inputs aot.write_goldens used.
+    let n_real = m_real * (k + 1);
+    let x = ramp(n_real * din, 2.0);
+    let mut neigh = vec![NO_NEIGHBOR; m_real * k];
+    for i in 0..m_real {
+        for j in 0..k {
+            if (i + j) % 4 != 3 {
+                neigh[i * k + j] = (m_real + i * k + j) as u32;
+            }
+        }
+    }
+    // Param tensors: ramp(0.5) in aot order (w_self, w_neigh, bias).
+    let params = LayerParams {
+        tensors: vec![ramp(din * dout, 0.5), ramp(din * dout, 0.5), ramp(dout, 0.5)],
+        shapes: vec![(din, dout), (din, dout), (1, dout)],
+    };
+    let out = rt
+        .layer_fwd(GnnKind::GraphSage, din, dout, true, &x, n_real, &neigh, m_real, k, &params)
+        .unwrap();
+    let want: Vec<f64> = g
+        .get("layer")
+        .unwrap()
+        .get("out_rows")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(out.len(), m_real * dout);
+    for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+        assert!(
+            (*a as f64 - b).abs() < 1e-4 * (1.0 + b.abs()),
+            "row value {i}: rust={a} jax={b}"
+        );
+    }
+}
+
+#[test]
+fn loss_matches_jax_golden() {
+    let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let c = rt.manifest.num_classes;
+    let b = 256usize;
+    let logits = ramp(b * c, 4.0);
+    let labels: Vec<i32> = (0..b).map(|i| ((i * 7 + 3) % c) as i32).collect();
+    // golden used valid = first 16 rows; emulate by passing b_real = 16.
+    let b_real = 16;
+    let (out, g_logits) = rt.loss(&logits[..b_real * c], &labels[..b_real], b_real, c).unwrap();
+    let gl = g.get("loss").unwrap();
+    let want_loss = gl.get("loss").unwrap().as_f64().unwrap();
+    let want_correct = gl.get("correct").unwrap().as_f64().unwrap();
+    assert!((out.loss as f64 - want_loss).abs() < 1e-4, "{} vs {want_loss}", out.loss);
+    assert!((out.correct as f64 - want_correct).abs() < 1e-6);
+    let want_g: Vec<f64> = gl
+        .get("g_logits_head")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    for (a, b) in g_logits[..want_g.len()].iter().zip(&want_g) {
+        assert!((*a as f64 - b).abs() < 1e-5, "g_logits {a} vs {b}");
+    }
+}
+
+#[test]
+fn bwd_grads_flow_and_match_finite_difference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let k = rt.manifest.kernel_fanout;
+    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: din,
+        hidden: dout,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let store = ParamStore::init(&cfg, 7);
+    let params = &store.layers[0];
+    let m_real = 4usize;
+    let n_real = m_real * (k + 1);
+    let x = ramp(n_real * din, 1.0);
+    let mut neigh = vec![NO_NEIGHBOR; m_real * k];
+    for i in 0..m_real {
+        for j in 0..k.min(3) {
+            neigh[i * k + j] = (m_real + i * k + j) as u32;
+        }
+    }
+    // Scalar objective: sum of outputs. g_out = ones.
+    let g_out = vec![1f32; m_real * dout];
+    let grads = rt
+        .layer_bwd(
+            GnnKind::GraphSage,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &g_out,
+            params,
+        )
+        .unwrap();
+    assert_eq!(grads.g_x.len(), n_real * din);
+    assert_eq!(grads.g_params.len(), 3);
+
+    // Finite-difference check on one input coordinate that feeds a real
+    // neighbor slot (row m_real = first neighbor of dst 0).
+    let probe = m_real * din + 3;
+    let f = |x: &[f32]| -> f32 {
+        rt.layer_fwd(GnnKind::GraphSage, din, dout, true, x, n_real, &neigh, m_real, k, params)
+            .unwrap()
+            .iter()
+            .sum()
+    };
+    let eps = 1e-2f32;
+    let mut xp = x.clone();
+    xp[probe] += eps;
+    let mut xm = x.clone();
+    xm[probe] -= eps;
+    let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+    let an = grads.g_x[probe];
+    assert!(
+        (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+        "finite-diff {fd} vs analytic {an}"
+    );
+}
+
+#[test]
+fn bucket_selection_handles_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let k = rt.manifest.kernel_fanout;
+    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: din,
+        hidden: dout,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let store = ParamStore::init(&cfg, 9);
+    // m_real = 300 forces the 1024 bucket.
+    let m_real = 300usize;
+    let n_real = m_real; // no neighbors at all: isolated rows
+    let x = ramp(n_real * din, 1.0);
+    let neigh = vec![NO_NEIGHBOR; m_real * k];
+    let out = rt
+        .layer_fwd(
+            GnnKind::GraphSage,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &store.layers[0],
+        )
+        .unwrap();
+    assert_eq!(out.len(), m_real * dout);
+    // Isolated rows: agg = 0, so out = relu(x_self @ w_self + bias); just
+    // check a known-zero case: zero input row → relu(bias).
+    // (x row 0 is not zero, so instead verify determinism.)
+    let out2 = rt
+        .layer_fwd(
+            GnnKind::GraphSage,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &store.layers[0],
+        )
+        .unwrap();
+    assert_eq!(out, out2);
+}
+
+#[test]
+fn gat_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let k = rt.manifest.kernel_fanout;
+    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+    let cfg = ModelConfig {
+        kind: GnnKind::Gat,
+        feat_dim: din,
+        hidden: dout,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let store = ParamStore::init(&cfg, 11);
+    let m_real = 8usize;
+    let n_real = m_real * 2;
+    let x = ramp(n_real * din, 1.0);
+    let mut neigh = vec![NO_NEIGHBOR; m_real * k];
+    for i in 0..m_real {
+        neigh[i * k] = (m_real + i) as u32;
+    }
+    let out = rt
+        .layer_fwd(GnnKind::Gat, din, dout, true, &x, n_real, &neigh, m_real, k, &store.layers[0])
+        .unwrap();
+    assert_eq!(out.len(), m_real * dout);
+    assert!(out.iter().all(|v| v.is_finite() && *v >= 0.0));
+    let g_out = vec![0.5f32; m_real * dout];
+    let grads = rt
+        .layer_bwd(
+            GnnKind::Gat,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &g_out,
+            &store.layers[0],
+        )
+        .unwrap();
+    assert_eq!(grads.g_params.len(), 4);
+    assert!(grads.g_x.iter().any(|v| *v != 0.0), "gradient should flow to inputs");
+}
