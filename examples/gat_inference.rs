@@ -1,8 +1,9 @@
 //! GAT through the same layer-centric API (paper §6): the point of
 //! GSplit's split/shuffle abstraction is that attention models reuse the
-//! exact same single-device kernels as GraphSage — here we run a
-//! split-parallel **GAT** forward pass (real Pallas-derived attention
-//! executables) and report per-split latency and shuffle volumes.
+//! exact same single-device kernels as GraphSage — here we run
+//! split-parallel **GAT** evaluation and training through the `Backend`
+//! trait (native attention forward/backward) and report per-batch latency
+//! and loss.
 //!
 //! Run: `cargo run --release --example gat_inference`
 
@@ -11,26 +12,30 @@ use gsplit::graph::Dataset;
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::PresampleWeights;
-use gsplit::runtime::Runtime;
+use gsplit::runtime::NativeBackend;
 use gsplit::train::Trainer;
 use gsplit::util::Table;
 
 fn main() -> Result<()> {
-    let rt = Runtime::load("artifacts")?;
+    let backend = NativeBackend::new();
+    let fanout = 5usize;
     let cfg = ModelConfig {
         kind: GnnKind::Gat,
-        feat_dim: rt.manifest.feat_dim,
-        hidden: rt.manifest.hidden,
-        num_classes: rt.manifest.num_classes,
-        num_layers: rt.manifest.layer_dims.len(),
+        feat_dim: 32,
+        hidden: 32,
+        num_classes: 8,
+        num_layers: 3,
     };
     let ds = Dataset::sbm_learnable(16384, cfg.num_classes, cfg.feat_dim, 0.5, 3);
     let w = PresampleWeights::uniform(&ds.graph);
     let mask = vec![false; ds.graph.num_vertices()];
     let part = partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.05, 3);
-    let mut trainer = Trainer::new(&rt, &cfg, part, 0.1, 3)?;
+    let mut trainer = Trainer::new(&backend, &cfg, fanout, part, 0.1, 3)?;
 
-    println!("split-parallel GAT ({} layers, hidden {}) — batched evaluation\n", cfg.num_layers, cfg.hidden);
+    println!(
+        "split-parallel GAT ({} layers, hidden {}) — batched evaluation\n",
+        cfg.num_layers, cfg.hidden
+    );
     let mut table = Table::new(&["Batch", "Loss", "Acc", "Latency (ms)"]).left(0);
     for (i, &batch) in [64usize, 128, 256].iter().enumerate() {
         let targets = &ds.epoch_targets(i as u64)[..batch];
@@ -47,7 +52,7 @@ fn main() -> Result<()> {
     table.print();
 
     // A few training steps to show GAT backward works through the same
-    // split/shuffle machinery (custom-vjp attention kernels).
+    // split/shuffle machinery (attention softmax + LeakyReLU VJP).
     let before = trainer.evaluate(&ds, &ds.epoch_targets(99)[..256], 99)?;
     for step in 0..20 {
         let targets = ds.epoch_targets(step as u64);
@@ -55,7 +60,7 @@ fn main() -> Result<()> {
     }
     let after = trainer.evaluate(&ds, &ds.epoch_targets(99)[..256], 99)?;
     println!(
-        "\n20 GAT training steps: loss {:.4} → {:.4} (attention kernels train end-to-end)",
+        "\n20 GAT training steps: loss {:.4} → {:.4} (attention trains end-to-end)",
         before.loss, after.loss
     );
     Ok(())

@@ -1,8 +1,13 @@
-//! **End-to-end validation driver** (EXPERIMENTS.md §E2E): train a 3-layer
-//! GraphSage on a synthetic SBM community graph with the split-parallel
-//! engine and real PJRT compute — cooperative sampling, per-layer hidden
-//! shuffles, per-layer VJP backward with reverse shuffles, gradient
-//! all-reduce, SGD — and log the loss curve plus validation accuracy.
+//! **End-to-end validation driver** (paper §7 end-to-end story): train a
+//! 3-layer GraphSage on a synthetic SBM community graph with the
+//! split-parallel engine and real compute — cooperative sampling,
+//! per-layer hidden shuffles, per-layer VJP backward with reverse
+//! shuffles, gradient all-reduce, SGD — and log the loss curve plus
+//! validation accuracy.
+//!
+//! Uses the pure-Rust `NativeBackend`, so it runs on a fresh clone with no
+//! artifacts; build with `--features pjrt` and swap the backend to drive
+//! the AOT executables instead.
 //!
 //! Run: `cargo run --release --example train_sage -- --iters 300`
 
@@ -13,7 +18,7 @@ use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
-use gsplit::runtime::Runtime;
+use gsplit::runtime::NativeBackend;
 use gsplit::train::Trainer;
 use gsplit::util::timer::timed;
 
@@ -23,6 +28,9 @@ fn main() -> Result<()> {
         ("batch", true, "mini-batch size (default 256)"),
         ("gpus", true, "simulated GPUs (default 4)"),
         ("vertices", true, "graph size (default 32768)"),
+        ("hidden", true, "hidden dim (default 64)"),
+        ("classes", true, "SBM communities = classes (default 8)"),
+        ("fanout", true, "neighbor fanout (default 5)"),
         ("lr", true, "learning rate (default 0.25)"),
         ("seed", true, "seed (default 42)"),
     ];
@@ -31,14 +39,15 @@ fn main() -> Result<()> {
     let batch = a.get_usize("batch", 256)?;
     let k = a.get_usize("gpus", 4)?;
     let seed = a.get_u64("seed", 42)?;
+    let fanout = a.get_usize("fanout", 5)?;
 
-    let rt = Runtime::load("artifacts")?;
+    let backend = NativeBackend::new();
     let cfg = ModelConfig {
         kind: GnnKind::GraphSage,
-        feat_dim: rt.manifest.feat_dim,
-        hidden: rt.manifest.hidden,
-        num_classes: rt.manifest.num_classes,
-        num_layers: rt.manifest.layer_dims.len(),
+        feat_dim: 32,
+        hidden: a.get_usize("hidden", 64)?,
+        num_classes: a.get_usize("classes", 8)?,
+        num_layers: 3,
     };
     let ds = Dataset::sbm_learnable(
         a.get_usize("vertices", 32768)?,
@@ -59,7 +68,7 @@ fn main() -> Result<()> {
     );
 
     // Offline stage of the splitting algorithm.
-    let fanouts = vec![rt.manifest.kernel_fanout; cfg.num_layers];
+    let fanouts = vec![fanout; cfg.num_layers];
     let (t_pre, pw) = timed(|| {
         presample(
             &ds.graph,
@@ -72,7 +81,8 @@ fn main() -> Result<()> {
         timed(|| partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed));
     println!("# offline: presample {t_pre:.1}s, partition {t_part:.1}s, k={k}");
 
-    let mut trainer = Trainer::new(&rt, &cfg, part, a.get_f64("lr", 0.25)? as f32, seed)?;
+    let mut trainer =
+        Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?;
     println!("step,loss,batch_acc");
     let t0 = std::time::Instant::now();
     let mut step = 0usize;

@@ -10,12 +10,18 @@
 //!   multi-GPU/multi-host device topology with a calibrated transfer cost
 //!   model, and four training engines (DGL-like data parallel, Quiver-like
 //!   cached data parallel, P3*-like push-pull, and GSplit split parallel).
-//! * **L2/L1 (python/, build time only)** — JAX GraphSage/GAT layers over
-//!   Pallas gather/attention kernels, AOT-lowered to HLO text.
-//! * **runtime** — loads the HLO artifacts through PJRT (`xla` crate) and
-//!   executes them from the Rust hot path; Python is never on that path.
+//! * **runtime** — the numeric [`Backend`](crate::runtime::Backend)
+//!   abstraction behind the trainer. The default build uses the pure-Rust
+//!   [`NativeBackend`](crate::runtime::NativeBackend) (GraphSage/GAT
+//!   forward + backward and the softmax-CE loss head, validated against
+//!   the JAX references), so a fresh clone builds, trains, and tests with
+//!   zero external artifacts.
+//! * **L2/L1 (python/, optional, build time only)** — JAX GraphSage/GAT
+//!   layers over Pallas gather/attention kernels, AOT-lowered to HLO text
+//!   and executed through PJRT when the crate is built with
+//!   `--features pjrt`; Python is never on the training hot path.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! See `README.md` for the architecture map and experiment index.
 
 pub mod bench_harness;
 pub mod cache;

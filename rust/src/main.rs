@@ -1,7 +1,8 @@
 //! `gsplit` — leader entrypoint / CLI.
 //!
 //! Subcommands:
-//!   train      end-to-end split-parallel training (real PJRT compute)
+//!   train      end-to-end split-parallel training (native backend by
+//!              default; `--backend pjrt` with the `pjrt` feature)
 //!   epoch      run one counted epoch of any engine and print S/L/FB
 //!   partition  run the offline splitting pipeline (presample + partition)
 //!   gen        generate and cache a stand-in dataset graph
@@ -14,11 +15,11 @@ use gsplit::costmodel::PhaseBreakdown;
 use gsplit::devices::Topology;
 use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
 use gsplit::graph::Dataset;
-use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::model::ModelConfig;
 use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
-use gsplit::runtime::Runtime;
+use gsplit::runtime::{Backend, NativeBackend};
 use gsplit::train::{train_epoch, Trainer};
 use gsplit::util::{fmt_secs, Table};
 
@@ -39,7 +40,7 @@ fn main() -> Result<()> {
             println!(
                 "gsplit — split-parallel GNN training (GSplit reproduction)\n\n\
                  Subcommands:\n  \
-                 train      end-to-end split-parallel training (real PJRT compute)\n  \
+                 train      end-to-end split-parallel training (real compute)\n  \
                  epoch      counted epoch of one engine; prints the S/L/FB breakdown\n  \
                  partition  offline pipeline: presample + partition, prints quality\n  \
                  gen        generate and cache a stand-in dataset graph\n  \
@@ -52,6 +53,39 @@ fn main() -> Result<()> {
     }
 }
 
+/// Resolve `--backend` into a boxed [`Backend`] plus the model config and
+/// fanout to train with. The native backend takes its shape from the CLI;
+/// the PJRT backend takes it from the artifact manifest.
+fn resolve_backend(a: &Args) -> Result<(Box<dyn Backend>, ModelConfig, usize)> {
+    let kind = parse_model(&a.get_str("model", "sage"))?;
+    match a.get_str("backend", "native").as_str() {
+        "native" => {
+            let cfg = ModelConfig {
+                kind,
+                feat_dim: a.get_usize("feat", 32)?,
+                hidden: a.get_usize("hidden", 64)?,
+                num_classes: a.get_usize("classes", 8)?,
+                num_layers: a.get_usize("layers", 3)?,
+            };
+            let fanout = a.get_usize("fanout", 5)?;
+            Ok((Box::new(NativeBackend::new()), cfg, fanout))
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let rt = gsplit::runtime::Runtime::load(a.get_str("artifacts", "artifacts"))?;
+            let cfg = rt.model_config(kind);
+            let fanout = rt.manifest.kernel_fanout;
+            Ok((Box::new(rt), cfg, fanout))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this binary was built without PJRT support; rebuild with \
+             `cargo build --features pjrt` (see README.md \"PJRT backend\")"
+        ),
+        other => bail!("unknown backend `{other}` (native|pjrt)"),
+    }
+}
+
 fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     let spec = opts![
         ("iters", true, "training iterations (default 200)"),
@@ -60,19 +94,25 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         ("lr", true, "learning rate (default 0.2)"),
         ("vertices", true, "SBM graph size (default 16384)"),
         ("seed", true, "random seed (default 42)"),
-        ("artifacts", true, "artifacts dir (default artifacts)"),
+        ("model", true, "sage|gat (default sage)"),
+        ("feat", true, "input feature dim, native backend (default 32)"),
+        ("hidden", true, "hidden dim, native backend (default 64)"),
+        ("classes", true, "SBM communities = classes, native backend (default 8)"),
+        ("layers", true, "GNN layers, native backend (default 3)"),
+        ("fanout", true, "neighbor fanout, native backend (default 5)"),
+        ("backend", true, "native|pjrt (default native)"),
+        ("artifacts", true, "artifacts dir for --backend pjrt (default artifacts)"),
     ];
     let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
-    let rt = Runtime::load(a.get_str("artifacts", "artifacts"))?;
-    let cfg = ModelConfig {
-        kind: GnnKind::GraphSage,
-        feat_dim: rt.manifest.feat_dim,
-        hidden: rt.manifest.hidden,
-        num_classes: rt.manifest.num_classes,
-        num_layers: rt.manifest.layer_dims.len(),
-    };
+    let (backend, cfg, fanout) = resolve_backend(&a)?;
     let seed = a.get_u64("seed", 42)?;
-    let ds = Dataset::sbm_learnable(a.get_usize("vertices", 16384)?, cfg.num_classes, cfg.feat_dim, 0.6, seed);
+    let ds = Dataset::sbm_learnable(
+        a.get_usize("vertices", 16384)?,
+        cfg.num_classes,
+        cfg.feat_dim,
+        0.6,
+        seed,
+    );
     let k = a.get_usize("gpus", 4)?;
     let batch = a.get_usize("batch", 256)?;
     let iters = a.get_usize("iters", 200)?;
@@ -81,12 +121,27 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     let pw = presample(
         &ds.graph,
         &ds.labels.train_set,
-        &PresampleConfig { epochs: 3, batch_size: batch, fanouts: vec![rt.manifest.kernel_fanout; cfg.num_layers], seed },
+        &PresampleConfig {
+            epochs: 3,
+            batch_size: batch,
+            fanouts: vec![fanout; cfg.num_layers],
+            seed,
+        },
     );
     let mask = train_mask(&ds);
     let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
-    let mut trainer = Trainer::new(&rt, &cfg, part, a.get_f64("lr", 0.2)? as f32, seed)?;
+    let mut trainer =
+        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?;
 
+    println!(
+        "# backend {} | {}-layer {} {}->{}->{} | k={k}",
+        backend.name(),
+        cfg.num_layers,
+        cfg.kind.name(),
+        cfg.feat_dim,
+        cfg.hidden,
+        cfg.num_classes
+    );
     println!("step,loss,acc");
     let mut done = 0usize;
     let mut epoch = 0u64;
@@ -247,7 +302,13 @@ fn cmd_info(argv: impl Iterator<Item = String>) -> Result<()> {
         ]);
     }
     t.print();
-    match Runtime::load(a.get_str("artifacts", "artifacts")) {
+    print_artifact_info(&a);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_artifact_info(a: &Args) {
+    match gsplit::runtime::Runtime::load(a.get_str("artifacts", "artifacts")) {
         Ok(rt) => println!(
             "artifacts: {} entries, fanout {}, dims feat={} hidden={} classes={}",
             rt.manifest.artifacts.len(),
@@ -258,7 +319,11 @@ fn cmd_info(argv: impl Iterator<Item = String>) -> Result<()> {
         ),
         Err(e) => println!("artifacts: unavailable ({e})"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_artifact_info(_a: &Args) {
+    println!("artifacts: n/a — built without the `pjrt` feature (native backend only)");
 }
 
 fn train_mask(ds: &Dataset) -> Vec<bool> {

@@ -1,31 +1,60 @@
-//! PJRT runtime bridge: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Execution backends: the numeric kernels behind split-parallel training.
 //!
-//! * [`Manifest`] — parses `artifacts/manifest.json` (shape buckets, layer
-//!   dims, fanout) so Rust *reads* the compile-time contract instead of
-//!   assuming it.
-//! * [`Runtime`] — one PJRT CPU client plus a lazily-compiled executable
-//!   cache; exposes typed entry points for layer forward/backward and the
-//!   loss head, handling all padding to the static AOT shapes.
+//! The trainer composes per-layer forward/backward executions with its own
+//! cross-device shuffles (paper §6: layer-centric kernel reuse), so the
+//! only thing a backend must provide is the per-layer math. That contract
+//! is the [`Backend`] trait — three entry points:
 //!
-//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
-//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
-//! instruction ids) but the text parser reassigns ids cleanly.
+//! * **layer forward** — one GNN layer (GraphSage mean-aggregation or
+//!   single-head GAT attention) over a mixed-frontier feature matrix and a
+//!   `[M, K]` sampled-neighbor table,
+//! * **layer backward** — the layer's VJP: gradients w.r.t. the mixed
+//!   input rows and every parameter tensor,
+//! * **loss head** — masked softmax cross-entropy over target rows, with
+//!   the logit gradient and the correct-prediction count.
+//!
+//! Two implementations ship:
+//!
+//! * [`NativeBackend`] (default) — pure Rust, zero external dependencies,
+//!   numerically validated against the JAX references in
+//!   `python/compile/kernels/ref.py`. This is what a fresh clone builds,
+//!   trains, and tests with.
+//! * `Runtime` (requires the `pjrt` cargo feature) — loads the AOT HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them
+//!   through a PJRT client, exactly as before the backend split. See
+//!   [`Manifest`] for the compile-time contract it consumes.
+//!
+//! Shared conventions (identical across backends, mirrored from
+//! `python/compile/model.py`):
+//!
+//! * the mixed-frontier matrix `x` is `[n_real, din]` row-major with the
+//!   `m_real` destination rows first (`x[..m_real]` are the destinations'
+//!   own features),
+//! * `neigh` is a `[m_real, k_real]` row-major table of indices into the
+//!   rows of `x`, padded with [`NO_NEIGHBOR`](crate::sampling::NO_NEIGHBOR)
+//!   for destinations with fewer than `k_real` sampled neighbors,
+//! * parameter tensors follow the [`LayerParams`] layout
+//!   (GraphSage: `[w_self, w_neigh, bias]`; GAT:
+//!   `[w, a_src, a_dst, bias]`), and gradients are returned in that order.
 
 mod manifest;
+mod native;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
 mod tensors;
 
 pub use manifest::{ArtifactMeta, Manifest};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+#[cfg(feature = "pjrt")]
 pub use tensors::{lit_f32, lit_i32, to_vec_f32};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::model::{GnnKind, LayerParams};
-use crate::sampling::NO_NEIGHBOR;
+use crate::Result;
 
 /// Outputs of one layer-backward execution.
 #[derive(Debug, Clone)]
@@ -40,141 +69,25 @@ pub struct LayerGrads {
 /// Outputs of a loss-head execution.
 #[derive(Debug, Clone, Copy)]
 pub struct LossOut {
+    /// Mean cross-entropy over the batch rows.
     pub loss: f32,
+    /// Number of rows whose argmax prediction matches the label.
     pub correct: f32,
 }
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// Load the manifest and create the PJRT CPU client. Executables are
-    /// compiled lazily, on first use, and cached for the process lifetime.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        Ok(Runtime { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
-    }
-
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let meta = self
-            .manifest
-            .by_name(name)
-            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Number of executables compiled so far (diagnostics).
-    pub fn compiled_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    /// Pick the layer artifact for `m_real` destination rows (the smallest
-    /// bucket that fits; see aot.py for why N = M·(K+1) then also fits).
-    fn pick_layer(
-        &self,
-        kind: &str,
-        model: GnnKind,
-        din: usize,
-        dout: usize,
-        relu: bool,
-        m_real: usize,
-        n_real: usize,
-    ) -> Result<&ArtifactMeta> {
-        let k = self.manifest.kernel_fanout;
-        let m_need = m_real.max(n_real.div_ceil(k + 1));
-        self.manifest
-            .pick_layer(kind, model, din, dout, relu, m_need)
-            .ok_or_else(|| {
-                anyhow!(
-                    "no {kind} artifact for {model:?} {din}x{dout} relu={relu} m>={m_need} \
-                     (buckets {:?}; re-run `make artifacts` with larger M_BUCKETS?)",
-                    self.manifest.m_buckets
-                )
-            })
-    }
-
-    /// Build the padded (x, idx, mask) literals shared by fwd and bwd.
-    ///
-    /// `neigh` is `m_real × k_real` with `NO_NEIGHBOR` padding, exactly as
-    /// the samplers produce it; entries index the `n_real` mixed rows.
-    fn pack_inputs(
-        &self,
-        meta: &ArtifactMeta,
-        x: &[f32],
-        din: usize,
-        n_real: usize,
-        neigh: &[u32],
-        m_real: usize,
-        k_real: usize,
-    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
-        let (m, n, k) = (meta.m, meta.n, meta.k);
-        if k_real != k {
-            bail!("sampled fanout {k_real} != artifact fanout {k}");
-        }
-        if m_real > m || n_real > n {
-            bail!("m_real={m_real} n_real={n_real} exceed bucket m={m} n={n}");
-        }
-        assert_eq!(x.len(), n_real * din);
-        assert_eq!(neigh.len(), m_real * k_real);
-        let mut x_pad = vec![0f32; n * din];
-        x_pad[..x.len()].copy_from_slice(x);
-        let mut idx = vec![0i32; m * k];
-        let mut mask = vec![0f32; m * k];
-        for r in 0..m_real {
-            for c in 0..k_real {
-                let v = neigh[r * k_real + c];
-                if v != NO_NEIGHBOR {
-                    idx[r * k + c] = v as i32;
-                    mask[r * k + c] = 1.0;
-                }
-            }
-        }
-        Ok((
-            lit_f32(&x_pad, &[n as i64, din as i64])?,
-            lit_i32(&idx, &[m as i64, k as i64])?,
-            lit_f32(&mask, &[m as i64, k as i64])?,
-        ))
-    }
-
-    fn param_literals(&self, params: &LayerParams) -> Result<Vec<xla::Literal>> {
-        params
-            .tensors
-            .iter()
-            .zip(&params.shapes)
-            .map(|(t, &(r, c))| {
-                if r == 1 {
-                    lit_f32(t, &[c as i64])
-                } else {
-                    lit_f32(t, &[r as i64, c as i64])
-                }
-            })
-            .collect()
-    }
+/// The per-layer numeric contract between the split-parallel trainer and
+/// an execution engine. Object-safe: the trainer holds a `&dyn Backend`.
+pub trait Backend {
+    /// Short human-readable backend name (logs and diagnostics).
+    fn name(&self) -> &'static str;
 
     /// Execute one GNN layer forward.
     ///
-    /// Returns the `m_real × dout` hidden rows (padding sliced away).
+    /// `x` is the `[n_real, din]` mixed-frontier matrix (destinations
+    /// first), `neigh` the `[m_real, k_real]` neighbor table into its rows.
+    /// Returns the `m_real × dout` output rows.
     #[allow(clippy::too_many_arguments)]
-    pub fn layer_fwd(
+    fn layer_fwd(
         &self,
         model: GnnKind,
         din: usize,
@@ -186,29 +99,15 @@ impl Runtime {
         m_real: usize,
         k_real: usize,
         params: &LayerParams,
-    ) -> Result<Vec<f32>> {
-        let meta =
-            self.pick_layer("layer_fwd", model, din, dout, relu, m_real, n_real)?.clone();
-        let (x_l, idx_l, mask_l) = self.pack_inputs(&meta, x, din, n_real, neigh, m_real, k_real)?;
-        let mut args = vec![x_l, idx_l, mask_l];
-        args.extend(self.param_literals(params)?);
-        let exe = self.executable(&meta.name)?;
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e}", meta.name))?;
-        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
-        let full = to_vec_f32(&outs[0])?;
-        Ok(full[..m_real * dout].to_vec())
-    }
+    ) -> Result<Vec<f32>>;
 
     /// Execute one GNN layer backward (VJP).
     ///
-    /// `g_out` is `m_real × dout`. Returns the gradient w.r.t. the mixed
-    /// input rows and the parameter gradients.
+    /// `g_out` is the `[m_real, dout]` gradient of the loss w.r.t. this
+    /// layer's outputs. Returns the gradient w.r.t. the mixed input rows
+    /// and the parameter gradients.
     #[allow(clippy::too_many_arguments)]
-    pub fn layer_bwd(
+    fn layer_bwd(
         &self,
         model: GnnKind,
         din: usize,
@@ -221,83 +120,17 @@ impl Runtime {
         k_real: usize,
         g_out: &[f32],
         params: &LayerParams,
-    ) -> Result<LayerGrads> {
-        let meta =
-            self.pick_layer("layer_bwd", model, din, dout, relu, m_real, n_real)?.clone();
-        let (x_l, idx_l, mask_l) = self.pack_inputs(&meta, x, din, n_real, neigh, m_real, k_real)?;
-        assert_eq!(g_out.len(), m_real * dout);
-        let mut g_pad = vec![0f32; meta.m * dout];
-        g_pad[..g_out.len()].copy_from_slice(g_out);
-        let g_l = lit_f32(&g_pad, &[meta.m as i64, dout as i64])?;
-        let mut args = vec![x_l, idx_l, mask_l, g_l];
-        args.extend(self.param_literals(params)?);
-        let exe = self.executable(&meta.name)?;
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e}", meta.name))?;
-        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
-        if outs.len() != 1 + params.tensors.len() {
-            bail!("{}: expected {} outputs, got {}", meta.name, 1 + params.tensors.len(), outs.len());
-        }
-        let g_x_full = to_vec_f32(&outs[0])?;
-        let g_x = g_x_full[..n_real * din].to_vec();
-        let mut g_params = Vec::with_capacity(params.tensors.len());
-        for (i, t) in params.tensors.iter().enumerate() {
-            let g = to_vec_f32(&outs[1 + i])?;
-            assert_eq!(g.len(), t.len(), "param grad {i} shape mismatch");
-            g_params.push(g);
-        }
-        Ok(LayerGrads { g_x, g_params })
-    }
+    ) -> Result<LayerGrads>;
 
-    /// Execute the loss head over `b_real` target rows.
+    /// Execute the loss head over `b_real` target rows with `c` classes.
     ///
-    /// Returns (loss, correct, g_logits `b_real × c`).
-    pub fn loss(
+    /// Returns the batch statistics and the `[b_real, c]` logit gradient
+    /// of the *mean* cross-entropy (already divided by `b_real`).
+    fn loss(
         &self,
         logits: &[f32],
         labels: &[i32],
         b_real: usize,
         c: usize,
-    ) -> Result<(LossOut, Vec<f32>)> {
-        let meta = self
-            .manifest
-            .pick_loss(b_real, c)
-            .ok_or_else(|| anyhow!("no loss artifact for b>={b_real} c={c}"))?
-            .clone();
-        let b = meta.m; // bucket
-        assert_eq!(logits.len(), b_real * c);
-        assert_eq!(labels.len(), b_real);
-        let mut lg = vec![0f32; b * c];
-        lg[..logits.len()].copy_from_slice(logits);
-        let mut lb = vec![0i32; b];
-        lb[..labels.len()].copy_from_slice(labels);
-        let mut valid = vec![0f32; b];
-        valid[..b_real].fill(1.0);
-        let args = vec![
-            lit_f32(&lg, &[b as i64, c as i64])?,
-            lit_i32(&lb, &[b as i64])?,
-            lit_f32(&valid, &[b as i64])?,
-        ];
-        let exe = self.executable(&meta.name)?;
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
-        let loss = to_vec_f32(&outs[0])?[0];
-        let g_full = to_vec_f32(&outs[1])?;
-        let correct = to_vec_f32(&outs[2])?[0];
-        Ok((LossOut { loss, correct }, g_full[..b_real * c].to_vec()))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    // Runtime integration tests live in rust/tests/runtime_integration.rs
-    // (they need built artifacts); manifest/tensor unit tests live in the
-    // submodules.
+    ) -> Result<(LossOut, Vec<f32>)>;
 }

@@ -1,0 +1,894 @@
+//! [`NativeBackend`] — the pure-Rust reference implementation of the
+//! [`Backend`] trait.
+//!
+//! Implements GraphSage mean-aggregation and single-head GAT attention
+//! (forward **and** backward) plus the masked softmax-CE loss head, with
+//! semantics identical to the JAX references in
+//! `python/compile/kernels/ref.py` / `python/compile/model.py`:
+//!
+//! * neighbor slots equal to [`NO_NEIGHBOR`] are padding; the mean divides
+//!   by `max(real_count, 1)`, so zero-degree rows aggregate to zeros,
+//! * GAT adds an implicit self edge (always valid), applies
+//!   `LeakyReLU(0.2)` to the attention logits, and softmax-normalizes over
+//!   `{self} ∪ real neighbors`,
+//! * ReLU backward masks on the *pre-activation* sign (gradient 0 at 0),
+//!   matching `jax.nn.relu`'s VJP,
+//! * the loss head returns the mean CE over the batch and a logit gradient
+//!   already divided by the batch size.
+//!
+//! The backward passes were derived by hand and are pinned two ways: the
+//! golden-value tests below embed outputs computed with the repo's JAX
+//! oracles, and finite-difference tests check every gradient path against
+//! the forward implementation.
+//!
+//! This backend favors clarity over speed (straight scalar loops, row-major
+//! slices, no SIMD); it exists so that a fresh clone can build, train, and
+//! test with zero external artifacts. Keep it boring — it is the oracle
+//! faster backends are tested against.
+
+use anyhow::{bail, ensure};
+
+use super::{Backend, LayerGrads, LossOut};
+use crate::model::{GnnKind, LayerParams};
+use crate::sampling::NO_NEIGHBOR;
+use crate::Result;
+
+/// GAT LeakyReLU slope (Velickovic et al. 2018), matching `ref.py`.
+const LEAKY_SLOPE: f32 = 0.2;
+
+/// Pure-Rust execution backend. Stateless and `Copy`; construct freely.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn layer_fwd(
+        &self,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        x: &[f32],
+        n_real: usize,
+        neigh: &[u32],
+        m_real: usize,
+        k_real: usize,
+        params: &LayerParams,
+    ) -> Result<Vec<f32>> {
+        check_layer_args(model, din, dout, x, n_real, neigh, m_real, k_real, params)?;
+        match model {
+            GnnKind::GraphSage => {
+                let (w_self, w_neigh, bias) = sage_params(params);
+                Ok(sage_fwd(x, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias))
+            }
+            GnnKind::Gat => {
+                let (w, a_src, a_dst, bias) = gat_params(params);
+                Ok(gat_fwd(
+                    x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias,
+                ))
+            }
+        }
+    }
+
+    fn layer_bwd(
+        &self,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        x: &[f32],
+        n_real: usize,
+        neigh: &[u32],
+        m_real: usize,
+        k_real: usize,
+        g_out: &[f32],
+        params: &LayerParams,
+    ) -> Result<LayerGrads> {
+        check_layer_args(model, din, dout, x, n_real, neigh, m_real, k_real, params)?;
+        ensure!(
+            g_out.len() == m_real * dout,
+            "g_out has {} values, expected m_real*dout = {}",
+            g_out.len(),
+            m_real * dout
+        );
+        match model {
+            GnnKind::GraphSage => {
+                let (w_self, w_neigh, bias) = sage_params(params);
+                Ok(sage_bwd(
+                    x, n_real, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias, g_out,
+                ))
+            }
+            GnnKind::Gat => {
+                let (w, a_src, a_dst, bias) = gat_params(params);
+                Ok(gat_bwd(
+                    x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias, g_out,
+                ))
+            }
+        }
+    }
+
+    fn loss(
+        &self,
+        logits: &[f32],
+        labels: &[i32],
+        b_real: usize,
+        c: usize,
+    ) -> Result<(LossOut, Vec<f32>)> {
+        ensure!(c > 0, "loss head needs at least one class");
+        ensure!(
+            logits.len() == b_real * c,
+            "logits have {} values, expected b_real*c = {}",
+            logits.len(),
+            b_real * c
+        );
+        ensure!(labels.len() == b_real, "labels/batch mismatch: {} vs {b_real}", labels.len());
+        let denom = b_real.max(1) as f32;
+        let mut loss = 0f32;
+        let mut correct = 0f32;
+        let mut g = vec![0f32; b_real * c];
+        for i in 0..b_real {
+            let row = &logits[i * c..(i + 1) * c];
+            let lbl = labels[i];
+            ensure!(
+                (0..c as i32).contains(&lbl),
+                "label {lbl} out of range for {c} classes (row {i})"
+            );
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            // -log softmax[label], in log-sum-exp form.
+            loss += sum.ln() - (row[lbl as usize] - mx);
+            let grow = &mut g[i * c..(i + 1) * c];
+            for (gq, &v) in grow.iter_mut().zip(row) {
+                *gq = (v - mx).exp() / sum / denom;
+            }
+            grow[lbl as usize] -= 1.0 / denom;
+            // First-maximum argmax, matching jnp.argmax tie-breaking.
+            let mut best = 0usize;
+            for (q, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = q;
+                }
+            }
+            if best as i32 == lbl {
+                correct += 1.0;
+            }
+        }
+        Ok((LossOut { loss: loss / denom, correct }, g))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared validation / parameter unpacking
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn check_layer_args(
+    model: GnnKind,
+    din: usize,
+    dout: usize,
+    x: &[f32],
+    n_real: usize,
+    neigh: &[u32],
+    m_real: usize,
+    k_real: usize,
+    params: &LayerParams,
+) -> Result<()> {
+    ensure!(din > 0 && dout > 0, "layer dims must be positive ({din}x{dout})");
+    ensure!(
+        x.len() == n_real * din,
+        "x has {} values, expected n_real*din = {}",
+        x.len(),
+        n_real * din
+    );
+    ensure!(
+        neigh.len() == m_real * k_real,
+        "neigh has {} entries, expected m_real*k_real = {}",
+        neigh.len(),
+        m_real * k_real
+    );
+    ensure!(
+        m_real <= n_real,
+        "destinations must be a prefix of the mixed rows (m_real={m_real} > n_real={n_real})"
+    );
+    for (slot, &v) in neigh.iter().enumerate() {
+        if v != NO_NEIGHBOR && v as usize >= n_real {
+            bail!("neigh[{slot}] = {v} out of range for {n_real} mixed rows");
+        }
+    }
+    let want = match model {
+        GnnKind::GraphSage => vec![din * dout, din * dout, dout],
+        GnnKind::Gat => vec![din * dout, dout, dout, dout],
+    };
+    ensure!(
+        params.tensors.len() == want.len(),
+        "{model:?} layer expects {} parameter tensors, got {}",
+        want.len(),
+        params.tensors.len()
+    );
+    for (t, (tensor, w)) in params.tensors.iter().zip(&want).enumerate() {
+        ensure!(
+            tensor.len() == *w,
+            "{model:?} parameter tensor {t} has {} values, expected {w}",
+            tensor.len()
+        );
+    }
+    Ok(())
+}
+
+fn sage_params(p: &LayerParams) -> (&[f32], &[f32], &[f32]) {
+    (&p.tensors[0], &p.tensors[1], &p.tensors[2])
+}
+
+fn gat_params(p: &LayerParams) -> (&[f32], &[f32], &[f32], &[f32]) {
+    (&p.tensors[0], &p.tensors[1], &p.tensors[2], &p.tensors[3])
+}
+
+/// Masked mean of the sampled neighbor rows of destination `i` into `agg`
+/// (length `din`). Mirrors `gather_mean_ref`: divide by `max(count, 1)`.
+/// Returns the divisor actually used.
+fn aggregate_row(x: &[f32], neigh: &[u32], i: usize, k: usize, din: usize, agg: &mut [f32]) -> f32 {
+    agg.fill(0.0);
+    let mut cnt = 0u32;
+    for &v in &neigh[i * k..(i + 1) * k] {
+        if v != NO_NEIGHBOR {
+            let row = &x[v as usize * din..(v as usize + 1) * din];
+            for (a, &b) in agg.iter_mut().zip(row) {
+                *a += b;
+            }
+            cnt += 1;
+        }
+    }
+    let denom = cnt.max(1) as f32;
+    let inv = 1.0 / denom;
+    for a in agg.iter_mut() {
+        *a *= inv;
+    }
+    denom
+}
+
+// ---------------------------------------------------------------------------
+// GraphSage: h = act(x_self @ w_self + mean(x_nbr) @ w_neigh + bias)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn sage_fwd(
+    x: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w_self: &[f32],
+    w_neigh: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; m * dout];
+    let mut agg = vec![0f32; din];
+    for i in 0..m {
+        aggregate_row(x, neigh, i, k, din, &mut agg);
+        let x_self = &x[i * din..(i + 1) * din];
+        let o = &mut out[i * dout..(i + 1) * dout];
+        o.copy_from_slice(bias);
+        for p in 0..din {
+            let (xs, ag) = (x_self[p], agg[p]);
+            let ws = &w_self[p * dout..(p + 1) * dout];
+            let wn = &w_neigh[p * dout..(p + 1) * dout];
+            for q in 0..dout {
+                o[q] += xs * ws[q] + ag * wn[q];
+            }
+        }
+        if relu {
+            for v in o.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sage_bwd(
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w_self: &[f32],
+    w_neigh: &[f32],
+    bias: &[f32],
+    g_out: &[f32],
+) -> LayerGrads {
+    let mut g_x = vec![0f32; n * din];
+    let mut g_ws = vec![0f32; din * dout];
+    let mut g_wn = vec![0f32; din * dout];
+    let mut g_b = vec![0f32; dout];
+    let mut agg = vec![0f32; din];
+    let mut g = vec![0f32; dout];
+    let mut g_agg = vec![0f32; din];
+    for i in 0..m {
+        let denom = aggregate_row(x, neigh, i, k, din, &mut agg);
+        let x_self = &x[i * din..(i + 1) * din];
+        g.copy_from_slice(&g_out[i * dout..(i + 1) * dout]);
+        if relu {
+            // Recompute the pre-activation to mask the gradient; ReLU's
+            // VJP is 0 at 0, so mask on `h_pre <= 0`.
+            for (q, gq) in g.iter_mut().enumerate() {
+                let mut h = bias[q];
+                for p in 0..din {
+                    h += x_self[p] * w_self[p * dout + q] + agg[p] * w_neigh[p * dout + q];
+                }
+                if h <= 0.0 {
+                    *gq = 0.0;
+                }
+            }
+        }
+        for (b, &gq) in g_b.iter_mut().zip(&g) {
+            *b += gq;
+        }
+        for p in 0..din {
+            let (xs, ag) = (x_self[p], agg[p]);
+            let ws_row = &mut g_ws[p * dout..(p + 1) * dout];
+            let wn_row = &mut g_wn[p * dout..(p + 1) * dout];
+            for q in 0..dout {
+                ws_row[q] += xs * g[q];
+                wn_row[q] += ag * g[q];
+            }
+        }
+        // d/dx_self: g @ w_self^T (the destination row may also appear as a
+        // neighbor of other rows, so accumulate).
+        for p in 0..din {
+            let mut s = 0f32;
+            let mut sn = 0f32;
+            for q in 0..dout {
+                s += g[q] * w_self[p * dout + q];
+                sn += g[q] * w_neigh[p * dout + q];
+            }
+            g_x[i * din + p] += s;
+            g_agg[p] = sn / denom;
+        }
+        // Scatter the mean's gradient into every real neighbor row
+        // (mirrors gather_mean_grad_x_ref: g/cnt per sampled edge).
+        for &v in &neigh[i * k..(i + 1) * k] {
+            if v != NO_NEIGHBOR {
+                let row = &mut g_x[v as usize * din..(v as usize + 1) * din];
+                for (r, &ga) in row.iter_mut().zip(&g_agg) {
+                    *r += ga;
+                }
+            }
+        }
+    }
+    LayerGrads { g_x, g_params: vec![g_ws, g_wn, g_b] }
+}
+
+// ---------------------------------------------------------------------------
+// GAT: z = x @ w; attention over {self} ∪ neighbors with LeakyReLU logits
+// ---------------------------------------------------------------------------
+
+fn leaky(v: f32) -> f32 {
+    if v >= 0.0 {
+        v
+    } else {
+        LEAKY_SLOPE * v
+    }
+}
+
+/// Projection shared by GAT forward and backward: `z = x @ w` plus the
+/// per-row attention terms `s_src = z @ a_src` and `s_dst = (z @ a_dst)[:m]`.
+#[allow(clippy::too_many_arguments)]
+fn gat_project(
+    x: &[f32],
+    n: usize,
+    m: usize,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut z = vec![0f32; n * dout];
+    for r in 0..n {
+        let xr = &x[r * din..(r + 1) * din];
+        let zr = &mut z[r * dout..(r + 1) * dout];
+        for p in 0..din {
+            let xv = xr[p];
+            let wrow = &w[p * dout..(p + 1) * dout];
+            for q in 0..dout {
+                zr[q] += xv * wrow[q];
+            }
+        }
+    }
+    let dot = |row: &[f32], a: &[f32]| -> f32 { row.iter().zip(a).map(|(x, y)| x * y).sum() };
+    let s_src: Vec<f32> = (0..n).map(|r| dot(&z[r * dout..(r + 1) * dout], a_src)).collect();
+    let s_dst: Vec<f32> = (0..m).map(|r| dot(&z[r * dout..(r + 1) * dout], a_dst)).collect();
+    (z, s_src, s_dst)
+}
+
+/// Attention rows of destination `i`: the implicit self edge first, then
+/// every real neighbor; `logits` gets the pre-softmax LeakyReLU scores.
+#[allow(clippy::too_many_arguments)]
+fn attention_rows(
+    neigh: &[u32],
+    i: usize,
+    k: usize,
+    s_src: &[f32],
+    s_dst: &[f32],
+    rows: &mut Vec<usize>,
+    logits: &mut Vec<f32>,
+) {
+    rows.clear();
+    logits.clear();
+    rows.push(i);
+    logits.push(s_dst[i] + s_src[i]);
+    for &v in &neigh[i * k..(i + 1) * k] {
+        if v != NO_NEIGHBOR {
+            rows.push(v as usize);
+            logits.push(s_dst[i] + s_src[v as usize]);
+        }
+    }
+}
+
+/// Softmax of `leaky(logits)` in place; returns nothing, `logits` becomes α.
+fn softmax_leaky(logits: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for t in logits.iter_mut() {
+        *t = leaky(*t);
+        mx = mx.max(*t);
+    }
+    let mut sum = 0f32;
+    for t in logits.iter_mut() {
+        *t = (*t - mx).exp();
+        sum += *t;
+    }
+    for t in logits.iter_mut() {
+        *t /= sum;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gat_fwd(
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let (z, s_src, s_dst) = gat_project(x, n, m, din, dout, w, a_src, a_dst);
+    let mut out = vec![0f32; m * dout];
+    let mut rows = Vec::with_capacity(k + 1);
+    let mut alpha = Vec::with_capacity(k + 1);
+    for i in 0..m {
+        attention_rows(neigh, i, k, &s_src, &s_dst, &mut rows, &mut alpha);
+        softmax_leaky(&mut alpha);
+        let o = &mut out[i * dout..(i + 1) * dout];
+        o.copy_from_slice(bias);
+        for (&r, &a) in rows.iter().zip(&alpha) {
+            let zr = &z[r * dout..(r + 1) * dout];
+            for q in 0..dout {
+                o[q] += a * zr[q];
+            }
+        }
+        if relu {
+            for v in o.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gat_bwd(
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+    bias: &[f32],
+    g_out: &[f32],
+) -> LayerGrads {
+    let (z, s_src, s_dst) = gat_project(x, n, m, din, dout, w, a_src, a_dst);
+    let mut g_z = vec![0f32; n * dout];
+    let mut g_ssrc = vec![0f32; n];
+    let mut g_sdst = vec![0f32; m];
+    let mut g_b = vec![0f32; dout];
+    let mut g = vec![0f32; dout];
+    let mut rows = Vec::with_capacity(k + 1);
+    let mut ells = Vec::with_capacity(k + 1);
+    let mut alpha = Vec::with_capacity(k + 1);
+    let mut g_alpha = Vec::with_capacity(k + 1);
+    for i in 0..m {
+        attention_rows(neigh, i, k, &s_src, &s_dst, &mut rows, &mut ells);
+        alpha.clear();
+        alpha.extend_from_slice(&ells);
+        softmax_leaky(&mut alpha);
+        g.copy_from_slice(&g_out[i * dout..(i + 1) * dout]);
+        if relu {
+            // Recompute h_pre = Σ α z + bias for the ReLU mask.
+            for (q, gq) in g.iter_mut().enumerate() {
+                let mut h = bias[q];
+                for (&r, &a) in rows.iter().zip(&alpha) {
+                    h += a * z[r * dout + q];
+                }
+                if h <= 0.0 {
+                    *gq = 0.0;
+                }
+            }
+        }
+        for (b, &gq) in g_b.iter_mut().zip(&g) {
+            *b += gq;
+        }
+        // out_i = Σ_j α_j z[r_j]:   g_α_j = g · z[r_j],   g_z[r_j] += α_j g.
+        g_alpha.clear();
+        for (&r, &a) in rows.iter().zip(&alpha) {
+            let zr = &z[r * dout..(r + 1) * dout];
+            let mut d = 0f32;
+            let grow = &mut g_z[r * dout..(r + 1) * dout];
+            for q in 0..dout {
+                d += g[q] * zr[q];
+                grow[q] += a * g[q];
+            }
+            g_alpha.push(d);
+        }
+        // Softmax VJP: g_t_j = α_j (g_α_j − Σ_l α_l g_α_l), then the
+        // LeakyReLU VJP on the raw logit ℓ_j = s_dst[i] + s_src[r_j].
+        let dot: f32 = alpha.iter().zip(&g_alpha).map(|(a, ga)| a * ga).sum();
+        for ((&a, &ga), (&ell, &r)) in
+            alpha.iter().zip(&g_alpha).zip(ells.iter().zip(&rows))
+        {
+            let slope = if ell >= 0.0 { 1.0 } else { LEAKY_SLOPE };
+            let g_ell = a * (ga - dot) * slope;
+            g_sdst[i] += g_ell;
+            g_ssrc[r] += g_ell;
+        }
+    }
+    // s_src = z @ a_src and s_dst = (z @ a_dst)[:m] feed back into z and
+    // into the attention vectors.
+    let mut g_asrc = vec![0f32; dout];
+    let mut g_adst = vec![0f32; dout];
+    for r in 0..n {
+        let zr = &z[r * dout..(r + 1) * dout];
+        let grow = &mut g_z[r * dout..(r + 1) * dout];
+        let gs = g_ssrc[r];
+        for q in 0..dout {
+            grow[q] += gs * a_src[q];
+            g_asrc[q] += gs * zr[q];
+        }
+    }
+    for i in 0..m {
+        let zr = &z[i * dout..(i + 1) * dout];
+        let grow = &mut g_z[i * dout..(i + 1) * dout];
+        let gd = g_sdst[i];
+        for q in 0..dout {
+            grow[q] += gd * a_dst[q];
+            g_adst[q] += gd * zr[q];
+        }
+    }
+    // z = x @ w:  g_x = g_z @ w^T,  g_w = x^T @ g_z.
+    let mut g_x = vec![0f32; n * din];
+    let mut g_w = vec![0f32; din * dout];
+    for r in 0..n {
+        let xr = &x[r * din..(r + 1) * din];
+        let gz = &g_z[r * dout..(r + 1) * dout];
+        let gx = &mut g_x[r * din..(r + 1) * din];
+        for p in 0..din {
+            let wrow = &w[p * dout..(p + 1) * dout];
+            let gw_row = &mut g_w[p * dout..(p + 1) * dout];
+            let mut s = 0f32;
+            for q in 0..dout {
+                s += gz[q] * wrow[q];
+                gw_row[q] += xr[p] * gz[q];
+            }
+            gx[p] += s;
+        }
+    }
+    LayerGrads { g_x, g_params: vec![g_w, g_asrc, g_adst, g_b] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ParamStore};
+
+    const NB: u32 = NO_NEIGHBOR;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    fn approx(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len(), "length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Identity-weight GraphSage layer over x = [[1,2],[3,4],[5,6]]
+    /// (row 0 is the destination), bias [0.5, -0.5], no ReLU.
+    fn sage_identity() -> (Vec<f32>, LayerParams) {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let params = LayerParams {
+            tensors: vec![eye.clone(), eye, vec![0.5, -0.5]],
+            shapes: vec![(2, 2), (2, 2), (1, 2)],
+        };
+        (x, params)
+    }
+
+    #[test]
+    fn sage_fwd_hand_fixtures() {
+        // Golden values hand-computed and cross-checked against
+        // python/compile/kernels/ref.py (gather_mean_ref + sage_layer).
+        let (x, params) = sage_identity();
+        let b = be();
+        // Both neighbors real: agg = mean(row1,row2) = [4,5];
+        // h = [1,2] + [4,5] + [0.5,-0.5].
+        let out = b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[1, 2], 1, 2, &params)
+            .unwrap();
+        approx(&out, &[5.5, 6.5], 1e-6);
+        // One padded slot: agg = row1 = [3,4].
+        let out = b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[1, NB], 1, 2, &params)
+            .unwrap();
+        approx(&out, &[4.5, 5.5], 1e-6);
+        // Zero-degree row: agg = 0 (the max(count,1) divisor).
+        let out = b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[NB, NB], 1, 2, &params)
+            .unwrap();
+        approx(&out, &[1.5, 1.5], 1e-6);
+    }
+
+    #[test]
+    fn sage_bwd_hand_fixture() {
+        // Same layer, g_out = [1,1]: g_x = [[1,1],[.5,.5],[.5,.5]],
+        // g_ws = x_selfᵀ g = [[1,1],[2,2]], g_wn = aggᵀ g = [[4,4],[5,5]],
+        // g_b = [1,1]. (Cross-checked against jax.vjp of the reference.)
+        let (x, params) = sage_identity();
+        let grads = be()
+            .layer_bwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[1, 2], 1, 2, &[1.0, 1.0], &params)
+            .unwrap();
+        approx(&grads.g_x, &[1.0, 1.0, 0.5, 0.5, 0.5, 0.5], 1e-6);
+        approx(&grads.g_params[0], &[1.0, 1.0, 2.0, 2.0], 1e-6);
+        approx(&grads.g_params[1], &[4.0, 4.0, 5.0, 5.0], 1e-6);
+        approx(&grads.g_params[2], &[1.0, 1.0], 1e-6);
+    }
+
+    #[test]
+    fn sage_relu_masks_gradient_on_preactivation() {
+        // bias [-10, 0.5] ⇒ h_pre = [1+4-10, 2+5+0.5] = [-5, 7.5] ⇒ relu
+        // masks channel 0.
+        let (x, mut params) = sage_identity();
+        params.tensors[2] = vec![-10.0, 0.5];
+        let b = be();
+        let out = b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, true, &x, 3, &[1, 2], 1, 2, &params)
+            .unwrap();
+        approx(&out, &[0.0, 7.5], 1e-6);
+        let grads = b
+            .layer_bwd(GnnKind::GraphSage, 2, 2, true, &x, 3, &[1, 2], 1, 2, &[1.0, 1.0], &params)
+            .unwrap();
+        approx(&grads.g_x, &[0.0, 1.0, 0.0, 0.5, 0.0, 0.5], 1e-6);
+        approx(&grads.g_params[2], &[0.0, 1.0], 1e-6);
+    }
+
+    #[test]
+    fn loss_hand_fixture() {
+        // logits [[0,0],[2,0]], labels [0,1]:
+        //   row0 ce = ln 2, row1 ce = −ln σ₁([2,0]) ⇒ loss = 1.410038;
+        //   correct = 1 (row0 tie → argmax 0 = label; row1 misses);
+        //   g = (softmax − onehot)/2. (Matches model.loss_head in JAX.)
+        let (out, g) = be().loss(&[0.0, 0.0, 2.0, 0.0], &[0, 1], 2, 2).unwrap();
+        assert!((out.loss - 1.410038).abs() < 1e-5, "loss {}", out.loss);
+        assert_eq!(out.correct, 1.0);
+        approx(&g, &[-0.25, 0.25, 0.440399, -0.440399], 1e-5);
+    }
+
+    #[test]
+    fn gat_isolated_vertex_keeps_self() {
+        // All neighbors padded ⇒ attention collapses onto the self edge:
+        // h = x @ w + bias (ref.py test_isolated_vertex_keeps_self).
+        let x = vec![0.5, -0.5, 2.0, 1.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let params = LayerParams {
+            tensors: vec![eye, vec![0.3, -0.2], vec![-0.1, 0.4], vec![1.0, 1.0]],
+            shapes: vec![(2, 2), (1, 2), (1, 2), (1, 2)],
+        };
+        let out = be()
+            .layer_fwd(GnnKind::Gat, 2, 2, false, &x, 2, &[NB, NB, NB], 1, 3, &params)
+            .unwrap();
+        approx(&out, &[1.5, 0.5], 1e-6);
+    }
+
+    #[test]
+    fn gat_attention_is_convex_combination() {
+        // Identical projected rows ⇒ output equals that row regardless of
+        // the attention weights (softmax weights sum to 1).
+        let x: Vec<f32> = (0..4).flat_map(|_| [1.0f32, -2.0]).collect();
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let params = LayerParams {
+            tensors: vec![eye, vec![0.7, 0.1], vec![-0.4, 0.2], vec![0.0, 0.0]],
+            shapes: vec![(2, 2), (1, 2), (1, 2), (1, 2)],
+        };
+        let out = be()
+            .layer_fwd(GnnKind::Gat, 2, 2, false, &x, 4, &[1, 2, 3], 1, 3, &params)
+            .unwrap();
+        approx(&out, &[1.0, -2.0], 1e-5);
+    }
+
+    #[test]
+    fn gat_fwd_matches_jax_reference_golden() {
+        // Nontrivial case (n=5, m=2, k=3, one row with padding) whose
+        // expected output was computed with gat_layer over
+        // python/compile/kernels/ref.py::gat_attention_ref (relu on).
+        let x = vec![
+            -0.5, -0.13636363, 0.22727275, -0.40909091, -0.04545453, 0.31818181, -0.31818181,
+            0.04545456, 0.40909094, -0.22727272, 0.13636363, -0.5, -0.13636363, 0.22727275,
+            -0.40909091,
+        ];
+        let w = vec![-0.4, 0.0, 0.4, -0.2, 0.2, -0.4];
+        let params = LayerParams {
+            tensors: vec![w, vec![0.3, -0.2], vec![-0.1, 0.4], vec![0.05, -0.05]],
+            shapes: vec![(3, 2), (1, 2), (1, 2), (1, 2)],
+        };
+        let neigh = [2, 3, NB, 4, NB, NB];
+        let out = be()
+            .layer_fwd(GnnKind::Gat, 3, 2, true, &x, 5, &neigh, 2, 3, &params)
+            .unwrap();
+        approx(&out, &[0.20673026, 0.0, 0.18755361, 0.0], 1e-5);
+    }
+
+    /// Deterministic "ramp" inputs, as used by the AOT golden generator.
+    fn ramp(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
+    }
+
+    /// Central finite difference of `f` at coordinate `probe` of `x`.
+    fn fd(x: &[f32], probe: usize, eps: f32, f: impl Fn(&[f32]) -> f32) -> f32 {
+        let mut xp = x.to_vec();
+        xp[probe] += eps;
+        let mut xm = x.to_vec();
+        xm[probe] -= eps;
+        (f(&xp) - f(&xm)) / (2.0 * eps)
+    }
+
+    fn fd_case(kind: GnnKind) {
+        let (din, dout, m, k) = (6, 4, 5, 3);
+        let n = m * (k + 1);
+        let cfg = ModelConfig { kind, feat_dim: din, hidden: dout, num_classes: 4, num_layers: 2 };
+        let store = ParamStore::init(&cfg, 7);
+        let params = &store.layers[0];
+        let x = ramp(n * din, 2.0);
+        let mut neigh = vec![NB; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                if (i + j) % 4 != 3 {
+                    neigh[i * k + j] = (m + i * k + j) as u32;
+                }
+            }
+        }
+        let b = be();
+        // Scalar objective: weighted sum of outputs (weights break symmetry).
+        let wts: Vec<f32> = (0..m * dout).map(|i| 0.3 + 0.1 * (i % 7) as f32).collect();
+        let obj = |xx: &[f32]| -> f32 {
+            b.layer_fwd(kind, din, dout, true, xx, n, &neigh, m, k, params)
+                .unwrap()
+                .iter()
+                .zip(&wts)
+                .map(|(o, w)| o * w)
+                .sum()
+        };
+        let grads =
+            b.layer_bwd(kind, din, dout, true, &x, n, &neigh, m, k, &wts, params).unwrap();
+        assert_eq!(grads.g_x.len(), n * din);
+        assert_eq!(grads.g_params.len(), params.tensors.len());
+        // Probe a destination row, a neighbor row, and a padded-slot row.
+        for probe in [3, m * din + 2, (n - 1) * din + 1] {
+            let want = fd(&x, probe, 1e-2, &obj);
+            let got = grads.g_x[probe];
+            assert!(
+                (want - got).abs() < 2e-2 * (1.0 + want.abs()),
+                "{kind:?} g_x[{probe}]: fd {want} vs analytic {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn sage_bwd_matches_finite_difference() {
+        fd_case(GnnKind::GraphSage);
+    }
+
+    #[test]
+    fn gat_bwd_matches_finite_difference() {
+        fd_case(GnnKind::Gat);
+    }
+
+    #[test]
+    fn loss_grad_matches_finite_difference() {
+        let (b_real, c) = (6, 5);
+        let logits = ramp(b_real * c, 4.0);
+        let labels: Vec<i32> = (0..b_real).map(|i| ((i * 3 + 1) % c) as i32).collect();
+        let be = be();
+        let (_, g) = be.loss(&logits, &labels, b_real, c).unwrap();
+        for probe in [0, 7, b_real * c - 1] {
+            let want = fd(&logits, probe, 1e-3, |lg| {
+                be.loss(lg, &labels, b_real, c).unwrap().0.loss
+            });
+            assert!(
+                (want - g[probe]).abs() < 1e-2 * (1.0 + want.abs()),
+                "g_logits[{probe}]: fd {want} vs analytic {}",
+                g[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let (x, params) = sage_identity();
+        let b = be();
+        // x length mismatch.
+        assert!(b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x[..4], 3, &[1, 2], 1, 2, &params)
+            .is_err());
+        // Neighbor index out of range.
+        assert!(b
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[9, 2], 1, 2, &params)
+            .is_err());
+        // Wrong parameter count for GAT.
+        assert!(b.layer_fwd(GnnKind::Gat, 2, 2, false, &x, 3, &[1, 2], 1, 2, &params).is_err());
+        // Label out of range.
+        assert!(b.loss(&[0.0, 0.0], &[5], 1, 2).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let (din, dout, m, k) = (5, 3, 4, 2);
+        let n = m * (k + 1);
+        let cfg = ModelConfig {
+            kind: GnnKind::Gat,
+            feat_dim: din,
+            hidden: dout,
+            num_classes: 3,
+            num_layers: 2,
+        };
+        let store = ParamStore::init(&cfg, 11);
+        let x = ramp(n * din, 1.0);
+        let neigh: Vec<u32> = (0..m * k).map(|i| (m + i) as u32).collect();
+        let b = be();
+        let o1 = b
+            .layer_fwd(GnnKind::Gat, din, dout, true, &x, n, &neigh, m, k, &store.layers[0])
+            .unwrap();
+        let o2 = b
+            .layer_fwd(GnnKind::Gat, din, dout, true, &x, n, &neigh, m, k, &store.layers[0])
+            .unwrap();
+        assert_eq!(o1, o2);
+    }
+}

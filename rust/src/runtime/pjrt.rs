@@ -1,0 +1,293 @@
+//! PJRT runtime bridge (requires the `pjrt` cargo feature): loads the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py` and executes them
+//! from the Rust hot path.
+//!
+//! * [`Manifest`] — parses `artifacts/manifest.json` (shape buckets, layer
+//!   dims, fanout) so Rust *reads* the compile-time contract instead of
+//!   assuming it.
+//! * [`Runtime`] — one PJRT CPU client plus a lazily-compiled executable
+//!   cache; exposes typed entry points for layer forward/backward and the
+//!   loss head, handling all padding to the static AOT shapes. Implements
+//!   [`Backend`], so the trainer uses it interchangeably with
+//!   `NativeBackend`.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids) but the text parser reassigns ids cleanly.
+//!
+//! The default build links the in-tree `xla` API stub (compiles anywhere,
+//! fails at `Runtime::load` with instructions); swap in the real xla-rs
+//! crate to execute artifacts — see README.md "PJRT backend".
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensors::{lit_f32, lit_i32, to_vec_f32};
+use super::{Backend, LayerGrads, LossOut};
+use crate::model::{GnnKind, LayerParams};
+use crate::sampling::NO_NEIGHBOR;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client. Executables are
+    /// compiled lazily, on first use, and cached for the process lifetime.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The model shape the exported artifacts were compiled for.
+    pub fn model_config(&self, kind: GnnKind) -> crate::model::ModelConfig {
+        crate::model::ModelConfig {
+            kind,
+            feat_dim: self.manifest.feat_dim,
+            hidden: self.manifest.hidden,
+            num_classes: self.manifest.num_classes,
+            num_layers: self.manifest.layer_dims.len(),
+        }
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Pick the layer artifact for `m_real` destination rows (the smallest
+    /// bucket that fits; see aot.py for why N = M·(K+1) then also fits).
+    fn pick_layer(
+        &self,
+        kind: &str,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        m_real: usize,
+        n_real: usize,
+    ) -> Result<&ArtifactMeta> {
+        let k = self.manifest.kernel_fanout;
+        let m_need = m_real.max(n_real.div_ceil(k + 1));
+        self.manifest
+            .pick_layer(kind, model, din, dout, relu, m_need)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind} artifact for {model:?} {din}x{dout} relu={relu} m>={m_need} \
+                     (buckets {:?}; re-run `make artifacts` with larger M_BUCKETS?)",
+                    self.manifest.m_buckets
+                )
+            })
+    }
+
+    /// Build the padded (x, idx, mask) literals shared by fwd and bwd.
+    ///
+    /// `neigh` is `m_real × k_real` with `NO_NEIGHBOR` padding, exactly as
+    /// the samplers produce it; entries index the `n_real` mixed rows.
+    fn pack_inputs(
+        &self,
+        meta: &ArtifactMeta,
+        x: &[f32],
+        din: usize,
+        n_real: usize,
+        neigh: &[u32],
+        m_real: usize,
+        k_real: usize,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let (m, n, k) = (meta.m, meta.n, meta.k);
+        if k_real != k {
+            bail!("sampled fanout {k_real} != artifact fanout {k}");
+        }
+        if m_real > m || n_real > n {
+            bail!("m_real={m_real} n_real={n_real} exceed bucket m={m} n={n}");
+        }
+        assert_eq!(x.len(), n_real * din);
+        assert_eq!(neigh.len(), m_real * k_real);
+        let mut x_pad = vec![0f32; n * din];
+        x_pad[..x.len()].copy_from_slice(x);
+        let mut idx = vec![0i32; m * k];
+        let mut mask = vec![0f32; m * k];
+        for r in 0..m_real {
+            for c in 0..k_real {
+                let v = neigh[r * k_real + c];
+                if v != NO_NEIGHBOR {
+                    idx[r * k + c] = v as i32;
+                    mask[r * k + c] = 1.0;
+                }
+            }
+        }
+        Ok((
+            lit_f32(&x_pad, &[n as i64, din as i64])?,
+            lit_i32(&idx, &[m as i64, k as i64])?,
+            lit_f32(&mask, &[m as i64, k as i64])?,
+        ))
+    }
+
+    fn param_literals(&self, params: &LayerParams) -> Result<Vec<xla::Literal>> {
+        params
+            .tensors
+            .iter()
+            .zip(&params.shapes)
+            .map(|(t, &(r, c))| {
+                if r == 1 {
+                    lit_f32(t, &[c as i64])
+                } else {
+                    lit_f32(t, &[r as i64, c as i64])
+                }
+            })
+            .collect()
+    }
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Execute one GNN layer forward through the bucketed AOT executable.
+    ///
+    /// Returns the `m_real × dout` hidden rows (padding sliced away).
+    fn layer_fwd(
+        &self,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        x: &[f32],
+        n_real: usize,
+        neigh: &[u32],
+        m_real: usize,
+        k_real: usize,
+        params: &LayerParams,
+    ) -> Result<Vec<f32>> {
+        let meta =
+            self.pick_layer("layer_fwd", model, din, dout, relu, m_real, n_real)?.clone();
+        let (x_l, idx_l, mask_l) = self.pack_inputs(&meta, x, din, n_real, neigh, m_real, k_real)?;
+        let mut args = vec![x_l, idx_l, mask_l];
+        args.extend(self.param_literals(params)?);
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e}", meta.name))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+        let full = to_vec_f32(&outs[0])?;
+        Ok(full[..m_real * dout].to_vec())
+    }
+
+    /// Execute one GNN layer backward (VJP) through the AOT executable.
+    fn layer_bwd(
+        &self,
+        model: GnnKind,
+        din: usize,
+        dout: usize,
+        relu: bool,
+        x: &[f32],
+        n_real: usize,
+        neigh: &[u32],
+        m_real: usize,
+        k_real: usize,
+        g_out: &[f32],
+        params: &LayerParams,
+    ) -> Result<LayerGrads> {
+        let meta =
+            self.pick_layer("layer_bwd", model, din, dout, relu, m_real, n_real)?.clone();
+        let (x_l, idx_l, mask_l) = self.pack_inputs(&meta, x, din, n_real, neigh, m_real, k_real)?;
+        assert_eq!(g_out.len(), m_real * dout);
+        let mut g_pad = vec![0f32; meta.m * dout];
+        g_pad[..g_out.len()].copy_from_slice(g_out);
+        let g_l = lit_f32(&g_pad, &[meta.m as i64, dout as i64])?;
+        let mut args = vec![x_l, idx_l, mask_l, g_l];
+        args.extend(self.param_literals(params)?);
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e}", meta.name))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+        if outs.len() != 1 + params.tensors.len() {
+            bail!("{}: expected {} outputs, got {}", meta.name, 1 + params.tensors.len(), outs.len());
+        }
+        let g_x_full = to_vec_f32(&outs[0])?;
+        let g_x = g_x_full[..n_real * din].to_vec();
+        let mut g_params = Vec::with_capacity(params.tensors.len());
+        for (i, t) in params.tensors.iter().enumerate() {
+            let g = to_vec_f32(&outs[1 + i])?;
+            assert_eq!(g.len(), t.len(), "param grad {i} shape mismatch");
+            g_params.push(g);
+        }
+        Ok(LayerGrads { g_x, g_params })
+    }
+
+    /// Execute the loss head over `b_real` target rows.
+    fn loss(
+        &self,
+        logits: &[f32],
+        labels: &[i32],
+        b_real: usize,
+        c: usize,
+    ) -> Result<(LossOut, Vec<f32>)> {
+        let meta = self
+            .manifest
+            .pick_loss(b_real, c)
+            .ok_or_else(|| anyhow!("no loss artifact for b>={b_real} c={c}"))?
+            .clone();
+        let b = meta.m; // bucket
+        assert_eq!(logits.len(), b_real * c);
+        assert_eq!(labels.len(), b_real);
+        let mut lg = vec![0f32; b * c];
+        lg[..logits.len()].copy_from_slice(logits);
+        let mut lb = vec![0i32; b];
+        lb[..labels.len()].copy_from_slice(labels);
+        let mut valid = vec![0f32; b];
+        valid[..b_real].fill(1.0);
+        let args = vec![
+            lit_f32(&lg, &[b as i64, c as i64])?,
+            lit_i32(&lb, &[b as i64])?,
+            lit_f32(&valid, &[b as i64])?,
+        ];
+        let exe = self.executable(&meta.name)?;
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {}: {e}", meta.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?;
+        let loss = to_vec_f32(&outs[0])?[0];
+        let g_full = to_vec_f32(&outs[1])?;
+        let correct = to_vec_f32(&outs[2])?[0];
+        Ok((LossOut { loss, correct }, g_full[..b_real * c].to_vec()))
+    }
+}

@@ -1,9 +1,15 @@
-//! End-to-end split-parallel training with **real compute**: forward and
-//! backward through the AOT-compiled (JAX/Pallas → HLO → PJRT) layer
-//! executables, composed exactly as the paper's Algorithms 1 & 2 —
-//! per-layer all-to-all shuffles of hidden features on the way up and of
-//! gradients (reverse shuffle, same shuffle index) on the way down,
-//! followed by a gradient all-reduce and an SGD step.
+//! End-to-end split-parallel training with **real compute**, composed
+//! exactly as the paper's Algorithms 1 & 2 — per-layer all-to-all shuffles
+//! of hidden features on the way up and of gradients (reverse shuffle,
+//! same shuffle index) on the way down, followed by a gradient all-reduce
+//! and an SGD step.
+//!
+//! The numeric kernels come from a [`Backend`]: the pure-Rust
+//! [`NativeBackend`](crate::runtime::NativeBackend) by default, or the
+//! PJRT runtime over AOT-compiled JAX/Pallas executables when the crate is
+//! built with `--features pjrt`. The trainer itself is backend-agnostic —
+//! it owns the sampling, the shuffles, the loss-head scaling, and the
+//! optimizer step.
 //!
 //! The simulated devices execute serially in one process (timing comes
 //! from the cost model; *numerics* come from here).
@@ -14,7 +20,7 @@ use crate::graph::Dataset;
 use crate::model::{ModelConfig, ParamStore};
 use crate::partition::Partitioning;
 use crate::rng::derive_seed;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::split::{SplitPlan, SplitSampler};
 use crate::Vid;
 
@@ -36,9 +42,9 @@ impl IterStats {
     }
 }
 
-/// Split-parallel trainer over a fixed partitioning.
+/// Split-parallel trainer over a fixed partitioning and a numeric backend.
 pub struct Trainer<'a> {
-    pub runtime: &'a Runtime,
+    pub backend: &'a dyn Backend,
     pub params: ParamStore,
     part: Partitioning,
     sampler: SplitSampler,
@@ -47,32 +53,28 @@ pub struct Trainer<'a> {
 }
 
 impl<'a> Trainer<'a> {
+    /// Build a trainer: `fanout` is the per-layer neighbor fanout (uniform
+    /// across layers, like the paper's sampling setup). With the PJRT
+    /// backend this must equal the manifest's `kernel_fanout` and `cfg`
+    /// must match the exported dims — the runtime rejects mismatches when
+    /// it picks artifacts.
     pub fn new(
-        runtime: &'a Runtime,
+        backend: &'a dyn Backend,
         cfg: &ModelConfig,
+        fanout: usize,
         part: Partitioning,
         lr: f32,
         seed: u64,
     ) -> Result<Self> {
-        let k_fan = runtime.manifest.kernel_fanout;
-        ensure!(
-            cfg.feat_dim == runtime.manifest.feat_dim
-                && cfg.hidden == runtime.manifest.hidden
-                && cfg.num_classes == runtime.manifest.num_classes
-                && cfg.num_layers == runtime.manifest.layer_dims.len(),
-            "model config {cfg:?} does not match exported artifacts \
-             (feat {}, hidden {}, classes {}, layers {})",
-            runtime.manifest.feat_dim,
-            runtime.manifest.hidden,
-            runtime.manifest.num_classes,
-            runtime.manifest.layer_dims.len()
-        );
+        ensure!(cfg.num_layers > 0, "model needs at least one layer");
+        ensure!(fanout > 0, "fanout must be positive");
+        ensure!(part.k > 0, "partitioning needs at least one device");
         Ok(Trainer {
-            runtime,
+            backend,
             params: ParamStore::init(cfg, seed),
             sampler: SplitSampler::new(part.k),
             part,
-            fanouts: vec![k_fan; cfg.num_layers],
+            fanouts: vec![fanout; cfg.num_layers],
             lr,
         })
     }
@@ -162,7 +164,7 @@ impl<'a> Trainer<'a> {
                     next_hidden.push(Vec::new());
                     continue;
                 }
-                let h = self.runtime.layer_fwd(
+                let h = self.backend.layer_fwd(
                     cfg.kind,
                     din,
                     dout,
@@ -193,7 +195,7 @@ impl<'a> Trainer<'a> {
             }
             let labels: Vec<i32> =
                 dl.dst.iter().map(|&v| ds.labels.labels[v as usize] as i32).collect();
-            let (out, g_logits) = self.runtime.loss(&hidden[d], &labels, b_d, c)?;
+            let (out, g_logits) = self.backend.loss(&hidden[d], &labels, b_d, c)?;
             loss_sum += out.loss * b_d as f32;
             correct += out.correct;
             if backward {
@@ -232,7 +234,7 @@ impl<'a> Trainer<'a> {
                 if dl.num_dst() == 0 || g_out[d].is_empty() {
                     continue;
                 }
-                let grads = self.runtime.layer_bwd(
+                let grads = self.backend.layer_bwd(
                     cfg.kind,
                     din,
                     dout,

@@ -1,8 +1,8 @@
 //! Whole-pipeline integration tests: presample → partition → split-sample →
-//! PJRT forward/backward → SGD, across all engines.
+//! forward/backward → SGD, across all engines.
 //!
-//! The heavyweight numerics tests need `make artifacts`; they skip politely
-//! when artifacts are missing so the pure-Rust suite stays green.
+//! The numerics run through the default `NativeBackend`, so the entire
+//! suite executes on a fresh clone — no artifacts, no Python.
 
 use gsplit::costmodel::iter_time;
 use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
@@ -11,38 +11,26 @@ use gsplit::graph::{Dataset, GraphBuilder, StandIn};
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::{partition_graph, Partitioning, Strategy};
 use gsplit::presample::{presample, PresampleConfig, PresampleWeights};
-use gsplit::runtime::Runtime;
+use gsplit::runtime::NativeBackend;
 use gsplit::train::Trainer;
 use gsplit::Vid;
 
-fn artifacts() -> Option<Runtime> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: run `make artifacts`");
-        return None;
-    }
-    Some(Runtime::load(&dir).unwrap())
-}
+/// Per-layer neighbor fanout used by the real-compute tests.
+const FANOUT: usize = 5;
 
-fn model_cfg(rt: &Runtime) -> ModelConfig {
-    ModelConfig {
-        kind: GnnKind::GraphSage,
-        feat_dim: rt.manifest.feat_dim,
-        hidden: rt.manifest.hidden,
-        num_classes: rt.manifest.num_classes,
-        num_layers: rt.manifest.layer_dims.len(),
-    }
+fn model_cfg(kind: GnnKind) -> ModelConfig {
+    ModelConfig { kind, feat_dim: 32, hidden: 32, num_classes: 8, num_layers: 3 }
 }
 
 #[test]
 fn split_parallel_training_learns_sbm_communities() {
-    let Some(rt) = artifacts() else { return };
-    let cfg = model_cfg(&rt);
+    let backend = NativeBackend::new();
+    let cfg = model_cfg(GnnKind::GraphSage);
     let ds = Dataset::sbm_learnable(4096, cfg.num_classes, cfg.feat_dim, 0.6, 42);
     let w = PresampleWeights::uniform(&ds.graph);
     let mask = vec![false; ds.graph.num_vertices()];
     let part = partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.1, 7);
-    let mut trainer = Trainer::new(&rt, &cfg, part, 0.2, 11).unwrap();
+    let mut trainer = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 11).unwrap();
 
     let first = trainer
         .train_iteration(&ds, &ds.epoch_targets(0)[..192], 0)
@@ -74,9 +62,9 @@ fn split_parallel_training_learns_sbm_communities() {
 /// about cooperative split-parallel execution + shuffles.
 #[test]
 fn split_parallel_is_equivalent_to_single_device_when_sampling_is_exhaustive() {
-    let Some(rt) = artifacts() else { return };
-    let cfg = model_cfg(&rt);
-    let kernel_k = rt.manifest.kernel_fanout;
+    let backend = NativeBackend::new();
+    let cfg = model_cfg(GnnKind::GraphSage);
+    let kernel_k = FANOUT;
 
     // Bounded-degree graph: ring + a few chords, max degree ≤ kernel_k.
     let n = 600usize;
@@ -105,7 +93,7 @@ fn split_parallel_is_equivalent_to_single_device_when_sampling_is_exhaustive() {
             assignment: (0..n).map(|v| (v % k) as u16).collect(),
             k,
         };
-        let mut trainer = Trainer::new(&rt, &cfg, part, 0.1, 77).unwrap();
+        let mut trainer = Trainer::new(&backend, &cfg, kernel_k, part, 0.1, 77).unwrap();
         let stats = trainer.evaluate(&ds, &targets, 1).unwrap();
         losses.push(stats.loss);
     }

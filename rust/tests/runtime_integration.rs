@@ -1,118 +1,68 @@
-//! Integration tests over the PJRT runtime: load real artifacts, execute
-//! them, and verify numerics against the golden values `aot.py` computed
-//! in JAX — this pins the whole L1→L2→HLO→PJRT→Rust chain.
+//! Integration tests over the `Backend` trait with the default
+//! `NativeBackend`: golden-value checks against fixtures computed with the
+//! JAX references in `python/compile/kernels/ref.py`, gradient flow, and a
+//! train-loop smoke test on the Tiny stand-in dataset.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise, so plain
-//! `cargo test` without artifacts still passes the pure-Rust suite).
+//! Unlike the old PJRT-only suite, nothing here needs `make artifacts` —
+//! the whole file runs on a fresh clone. (PJRT-specific golden tests
+//! against AOT executables live behind `--features pjrt` and still skip
+//! politely when artifacts are absent.)
 
+use gsplit::graph::StandIn;
 use gsplit::model::{GnnKind, LayerParams, ModelConfig, ParamStore};
-use gsplit::runtime::Runtime;
+use gsplit::partition::{partition_graph, Strategy};
+use gsplit::presample::PresampleWeights;
+use gsplit::runtime::{Backend, NativeBackend};
 use gsplit::sampling::NO_NEIGHBOR;
-use gsplit::util::JsonValue;
+use gsplit::train::Trainer;
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
-        None
-    }
-}
-
-/// The deterministic "ramp" pattern aot.py uses for goldens:
+/// The deterministic "ramp" pattern the AOT golden generator uses:
 /// v(i) = ((i*37 + 11) % 97)/97 * scale - scale/2.
 fn ramp(len: usize, scale: f32) -> Vec<f32> {
     (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
 }
 
-fn golden() -> Option<JsonValue> {
-    let dir = artifacts_dir()?;
-    let text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
-    Some(JsonValue::parse(&text).unwrap())
+fn backend() -> NativeBackend {
+    NativeBackend::new()
 }
 
 #[test]
-fn layer_fwd_matches_jax_golden() {
-    let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
-    let rt = Runtime::load(&dir).unwrap();
-    let k = rt.manifest.kernel_fanout;
-    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
-    let m_real = g.get("layer").unwrap().get("m_real").unwrap().as_usize().unwrap();
-
-    // Rebuild the exact inputs aot.write_goldens used.
-    let n_real = m_real * (k + 1);
-    let x = ramp(n_real * din, 2.0);
-    let mut neigh = vec![NO_NEIGHBOR; m_real * k];
-    for i in 0..m_real {
-        for j in 0..k {
-            if (i + j) % 4 != 3 {
-                neigh[i * k + j] = (m_real + i * k + j) as u32;
-            }
-        }
-    }
-    // Param tensors: ramp(0.5) in aot order (w_self, w_neigh, bias).
+fn layer_fwd_through_trait_object() {
+    // Exercise the trait-object path the trainer uses (&dyn Backend).
+    let be = backend();
+    let b: &dyn Backend = &be;
+    assert_eq!(b.name(), "native");
+    let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let eye = vec![1.0, 0.0, 0.0, 1.0];
     let params = LayerParams {
-        tensors: vec![ramp(din * dout, 0.5), ramp(din * dout, 0.5), ramp(dout, 0.5)],
-        shapes: vec![(din, dout), (din, dout), (1, dout)],
+        tensors: vec![eye.clone(), eye, vec![0.5, -0.5]],
+        shapes: vec![(2, 2), (2, 2), (1, 2)],
     };
-    let out = rt
-        .layer_fwd(GnnKind::GraphSage, din, dout, true, &x, n_real, &neigh, m_real, k, &params)
+    let out = b
+        .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[1, 2], 1, 2, &params)
         .unwrap();
-    let want: Vec<f64> = g
-        .get("layer")
-        .unwrap()
-        .get("out_rows")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|v| v.as_f64().unwrap())
-        .collect();
-    assert_eq!(out.len(), m_real * dout);
-    for (i, (a, b)) in out.iter().zip(&want).enumerate() {
-        assert!(
-            (*a as f64 - b).abs() < 1e-4 * (1.0 + b.abs()),
-            "row value {i}: rust={a} jax={b}"
-        );
-    }
+    // Golden: x_self + mean(rows 1,2) + bias = [5.5, 6.5] (ref.py).
+    assert!((out[0] - 5.5).abs() < 1e-6 && (out[1] - 6.5).abs() < 1e-6, "{out:?}");
 }
 
 #[test]
-fn loss_matches_jax_golden() {
-    let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
-    let rt = Runtime::load(&dir).unwrap();
-    let c = rt.manifest.num_classes;
-    let b = 256usize;
-    let logits = ramp(b * c, 4.0);
-    let labels: Vec<i32> = (0..b).map(|i| ((i * 7 + 3) % c) as i32).collect();
-    // golden used valid = first 16 rows; emulate by passing b_real = 16.
-    let b_real = 16;
-    let (out, g_logits) = rt.loss(&logits[..b_real * c], &labels[..b_real], b_real, c).unwrap();
-    let gl = g.get("loss").unwrap();
-    let want_loss = gl.get("loss").unwrap().as_f64().unwrap();
-    let want_correct = gl.get("correct").unwrap().as_f64().unwrap();
-    assert!((out.loss as f64 - want_loss).abs() < 1e-4, "{} vs {want_loss}", out.loss);
-    assert!((out.correct as f64 - want_correct).abs() < 1e-6);
-    let want_g: Vec<f64> = gl
-        .get("g_logits_head")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|v| v.as_f64().unwrap())
-        .collect();
-    for (a, b) in g_logits[..want_g.len()].iter().zip(&want_g) {
-        assert!((*a as f64 - b).abs() < 1e-5, "g_logits {a} vs {b}");
-    }
+fn loss_golden_and_gradient_direction() {
+    let b = backend();
+    // Fixture cross-checked against model.loss_head in JAX: see
+    // runtime/native.rs for the derivation.
+    let (out, g) = b.loss(&[0.0, 0.0, 2.0, 0.0], &[0, 1], 2, 2).unwrap();
+    assert!((out.loss - 1.410038).abs() < 1e-5);
+    assert_eq!(out.correct, 1.0);
+    // Gradient pushes the true-label logit up (negative gradient entry).
+    assert!(g[0] < 0.0 && g[3] < 0.0);
+    assert!((g.iter().sum::<f32>()).abs() < 1e-6, "CE logit gradient sums to zero");
 }
 
 #[test]
 fn bwd_grads_flow_and_match_finite_difference() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(&dir).unwrap();
-    let k = rt.manifest.kernel_fanout;
-    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+    let rt = backend();
+    let k = 5usize;
+    let (din, dout) = (16, 8);
     let cfg = ModelConfig {
         kind: GnnKind::GraphSage,
         feat_dim: din,
@@ -174,65 +124,10 @@ fn bwd_grads_flow_and_match_finite_difference() {
 }
 
 #[test]
-fn bucket_selection_handles_sizes() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(&dir).unwrap();
-    let k = rt.manifest.kernel_fanout;
-    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
-    let cfg = ModelConfig {
-        kind: GnnKind::GraphSage,
-        feat_dim: din,
-        hidden: dout,
-        num_classes: 8,
-        num_layers: 2,
-    };
-    let store = ParamStore::init(&cfg, 9);
-    // m_real = 300 forces the 1024 bucket.
-    let m_real = 300usize;
-    let n_real = m_real; // no neighbors at all: isolated rows
-    let x = ramp(n_real * din, 1.0);
-    let neigh = vec![NO_NEIGHBOR; m_real * k];
-    let out = rt
-        .layer_fwd(
-            GnnKind::GraphSage,
-            din,
-            dout,
-            true,
-            &x,
-            n_real,
-            &neigh,
-            m_real,
-            k,
-            &store.layers[0],
-        )
-        .unwrap();
-    assert_eq!(out.len(), m_real * dout);
-    // Isolated rows: agg = 0, so out = relu(x_self @ w_self + bias); just
-    // check a known-zero case: zero input row → relu(bias).
-    // (x row 0 is not zero, so instead verify determinism.)
-    let out2 = rt
-        .layer_fwd(
-            GnnKind::GraphSage,
-            din,
-            dout,
-            true,
-            &x,
-            n_real,
-            &neigh,
-            m_real,
-            k,
-            &store.layers[0],
-        )
-        .unwrap();
-    assert_eq!(out, out2);
-}
-
-#[test]
-fn gat_artifacts_execute() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(&dir).unwrap();
-    let k = rt.manifest.kernel_fanout;
-    let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+fn gat_executes_and_gradients_flow() {
+    let rt = backend();
+    let k = 5usize;
+    let (din, dout) = (16, 8);
     let cfg = ModelConfig {
         kind: GnnKind::Gat,
         feat_dim: din,
@@ -271,4 +166,201 @@ fn gat_artifacts_execute() {
         .unwrap();
     assert_eq!(grads.g_params.len(), 4);
     assert!(grads.g_x.iter().any(|v| *v != 0.0), "gradient should flow to inputs");
+}
+
+#[test]
+fn large_batch_and_isolated_rows_execute() {
+    // The PJRT runtime buckets sizes; the native backend must handle any
+    // shape directly — including destinations with no neighbors at all.
+    let rt = backend();
+    let k = 5usize;
+    let (din, dout) = (16, 8);
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: din,
+        hidden: dout,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let store = ParamStore::init(&cfg, 9);
+    let m_real = 300usize;
+    let n_real = m_real; // no neighbors at all: isolated rows
+    let x = ramp(n_real * din, 1.0);
+    let neigh = vec![NO_NEIGHBOR; m_real * k];
+    let out = rt
+        .layer_fwd(
+            GnnKind::GraphSage,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &store.layers[0],
+        )
+        .unwrap();
+    assert_eq!(out.len(), m_real * dout);
+    let out2 = rt
+        .layer_fwd(
+            GnnKind::GraphSage,
+            din,
+            dout,
+            true,
+            &x,
+            n_real,
+            &neigh,
+            m_real,
+            k,
+            &store.layers[0],
+        )
+        .unwrap();
+    assert_eq!(out, out2, "deterministic across calls");
+}
+
+/// Train-loop smoke test: five SGD iterations on a fixed mini-batch of the
+/// Tiny stand-in must reduce the loss (memorization direction).
+#[test]
+fn train_loop_smoke_loss_decreases_on_tiny() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let be = backend();
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: ds.spec.feat_dim,
+        hidden: 32,
+        num_classes: ds.labels.num_classes,
+        num_layers: 3,
+    };
+    let w = PresampleWeights::uniform(&ds.graph);
+    let mask = vec![false; ds.graph.num_vertices()];
+    let part = partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.1, 5);
+    let mut trainer = Trainer::new(&be, &cfg, 5, part, 0.1, 13).unwrap();
+    let batch: Vec<_> = ds.labels.train_set[..64].to_vec();
+    let mut losses = Vec::new();
+    for step in 0..5u64 {
+        // Same batch, same sampling seed: pure optimization progress.
+        let s = trainer.train_iteration(&ds, &batch, 0).unwrap();
+        assert!(s.loss.is_finite(), "step {step}: loss must stay finite");
+        losses.push(s.loss);
+    }
+    assert!(
+        losses[4] < losses[0],
+        "loss should decrease over 5 iterations on a fixed batch: {losses:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// PJRT golden tests (feature-gated; skip politely without artifacts)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_golden {
+    use super::*;
+    use gsplit::runtime::Runtime;
+    use gsplit::util::JsonValue;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+
+    fn golden() -> Option<JsonValue> {
+        let dir = artifacts_dir()?;
+        let text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+        Some(JsonValue::parse(&text).unwrap())
+    }
+
+    #[test]
+    fn layer_fwd_matches_jax_golden() {
+        let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("SKIP: PJRT unavailable ({e})");
+                return;
+            }
+        };
+        let k = rt.manifest.kernel_fanout;
+        let (din, dout) = (rt.manifest.feat_dim, rt.manifest.hidden);
+        let m_real = g.get("layer").unwrap().get("m_real").unwrap().as_usize().unwrap();
+
+        // Rebuild the exact inputs aot.write_goldens used.
+        let n_real = m_real * (k + 1);
+        let x = ramp(n_real * din, 2.0);
+        let mut neigh = vec![NO_NEIGHBOR; m_real * k];
+        for i in 0..m_real {
+            for j in 0..k {
+                if (i + j) % 4 != 3 {
+                    neigh[i * k + j] = (m_real + i * k + j) as u32;
+                }
+            }
+        }
+        // Param tensors: ramp(0.5) in aot order (w_self, w_neigh, bias).
+        let params = LayerParams {
+            tensors: vec![ramp(din * dout, 0.5), ramp(din * dout, 0.5), ramp(dout, 0.5)],
+            shapes: vec![(din, dout), (din, dout), (1, dout)],
+        };
+        let out = rt
+            .layer_fwd(GnnKind::GraphSage, din, dout, true, &x, n_real, &neigh, m_real, k, &params)
+            .unwrap();
+        let want: Vec<f64> = g
+            .get("layer")
+            .unwrap()
+            .get("out_rows")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(out.len(), m_real * dout);
+        for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "row value {i}: rust={a} jax={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn loss_matches_jax_golden() {
+        let (Some(dir), Some(g)) = (artifacts_dir(), golden()) else { return };
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("SKIP: PJRT unavailable ({e})");
+                return;
+            }
+        };
+        let c = rt.manifest.num_classes;
+        let b = 256usize;
+        let logits = ramp(b * c, 4.0);
+        let labels: Vec<i32> = (0..b).map(|i| ((i * 7 + 3) % c) as i32).collect();
+        // golden used valid = first 16 rows; emulate by passing b_real = 16.
+        let b_real = 16;
+        let (out, g_logits) =
+            rt.loss(&logits[..b_real * c], &labels[..b_real], b_real, c).unwrap();
+        let gl = g.get("loss").unwrap();
+        let want_loss = gl.get("loss").unwrap().as_f64().unwrap();
+        let want_correct = gl.get("correct").unwrap().as_f64().unwrap();
+        assert!((out.loss as f64 - want_loss).abs() < 1e-4, "{} vs {want_loss}", out.loss);
+        assert!((out.correct as f64 - want_correct).abs() < 1e-6);
+        let want_g: Vec<f64> = gl
+            .get("g_logits_head")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (a, b) in g_logits[..want_g.len()].iter().zip(&want_g) {
+            assert!((*a as f64 - b).abs() < 1e-5, "g_logits {a} vs {b}");
+        }
+    }
 }

@@ -1,0 +1,202 @@
+//! Offline shim for the [`anyhow`](https://docs.rs/anyhow) error-handling
+//! crate, carrying exactly the API subset this workspace uses:
+//!
+//! * [`Error`] — a boxed dynamic error with a human-readable context chain,
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error parameter,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — formatted construction macros,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` adapters on
+//!   `Result`s whose error is either a `std` error or an [`Error`].
+//!
+//! The build environment's crate registry is offline (see the note in
+//! `gsplit::util`), so this shim is vendored in-tree as a path dependency.
+//! It is intentionally tiny: no backtraces, no downcasting — errors here
+//! terminate CLIs and tests, they are not matched on.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus the chain of causes that
+/// context wrapping accumulated (most recent first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything displayable (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.first() {
+            Some(top) => f.write_str(top),
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((top, rest)) => {
+                f.write_str(top)?;
+                if !rest.is_empty() {
+                    f.write_str("\n\nCaused by:")?;
+                    for cause in rest {
+                        write!(f, "\n    {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+// Mirrors anyhow's blanket conversion; coherence with `impl From<T> for T`
+// holds because `Error` itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with a defaulted boxed error, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context adapters on fallible values.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(err.to_string(), "reading config");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("reading config"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(err.chain().count() >= 2);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("value {} too large", 7);
+        assert_eq!(e.to_string(), "value 7 too large");
+
+        fn bails(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x={x} out of range");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(2).unwrap(), 2);
+        assert_eq!(bails(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(bails(11).unwrap_err().to_string(), "x=11 out of range");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner")).context("outer");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause(), "inner");
+    }
+}

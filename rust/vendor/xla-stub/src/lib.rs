@@ -1,0 +1,218 @@
+//! Compile-time stub of the `xla-rs` PJRT API surface that
+//! `gsplit::runtime::pjrt` programs against.
+//!
+//! The real bridge needs `libxla_extension` (a multi-GB C++ build) plus the
+//! AOT HLO artifacts from `python/compile/aot.py` — neither of which a
+//! fresh clone has. This stub keeps `--features pjrt` *compiling* anywhere:
+//!
+//! * [`Literal`] is fully functional (an f32/i32 host buffer with dims) —
+//!   the `runtime::tensors` helpers and their tests work against it;
+//! * [`PjRtClient`], [`PjRtLoadedExecutable`], and
+//!   [`HloModuleProto::from_text_file`] return a descriptive [`Error`] at
+//!   runtime, so `Runtime::load` fails cleanly with instructions instead of
+//!   breaking the build.
+//!
+//! To execute real artifacts, point Cargo at the actual `xla` crate (e.g. a
+//! `[patch]` entry or editing `rust/Cargo.toml`) — the API here is
+//! signature-compatible with the subset gsplit calls.
+
+use std::fmt;
+
+const STUB_MSG: &str = "xla stub: this build links the in-tree PJRT API stub; \
+     swap in the real xla-rs crate and libxla_extension to execute AOT \
+     artifacts (see README.md \"PJRT backend\")";
+
+/// Error type mirroring `xla-rs`'s displayable error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Literals: functional host-side buffers.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// A typed host buffer with dimensions — the stub's (functional) version of
+/// `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: &[Self]) -> Data;
+    fn unwrap(data: &Data) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::F32(v.to_vec())
+    }
+
+    fn unwrap(data: &Data) -> Result<Vec<Self>> {
+        match data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: &[Self]) -> Data {
+        Data::I32(v.to_vec())
+    }
+
+    fn unwrap(data: &Data) -> Result<Vec<Self>> {
+        match data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let expect: i64 = dims.iter().product();
+        if expect as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {dims:?} has {expect} elements, literal has {}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a flat host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// Dimensions of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (only the
+    /// real runtime returns tuple outputs), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT client / executable / HLO: stubs that fail at runtime, not build time.
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module handle (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parsing HLO text requires the real xla_extension parser.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+/// Computation handle built from a parsed HLO module (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// PJRT client (stub): creation fails with pointers to the real setup.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
