@@ -9,7 +9,12 @@
 //! artifacts; build with `--features pjrt` and swap the backend to drive
 //! the AOT executables instead.
 //!
+//! Pass `--parallel-workers N` to run the threaded pipelined executor
+//! (one worker pool per epoch, sampling-ahead overlap; bit-identical to
+//! serial for the same seed — see DESIGN.md §Executor).
+//!
 //! Run: `cargo run --release --example train_sage -- --iters 300`
+//!  or: `cargo run --release --example train_sage -- --parallel-workers 4`
 
 use anyhow::Result;
 use gsplit::cli::Args;
@@ -19,12 +24,12 @@ use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
 use gsplit::runtime::NativeBackend;
-use gsplit::train::Trainer;
+use gsplit::train::{train_epoch, ExecMode, Trainer};
 use gsplit::util::timer::timed;
 
 fn main() -> Result<()> {
     let spec = opts![
-        ("iters", true, "training iterations (default 300)"),
+        ("iters", true, "training iterations, rounded up to whole epochs (default 300)"),
         ("batch", true, "mini-batch size (default 256)"),
         ("gpus", true, "simulated GPUs (default 4)"),
         ("vertices", true, "graph size (default 32768)"),
@@ -33,6 +38,7 @@ fn main() -> Result<()> {
         ("fanout", true, "neighbor fanout (default 5)"),
         ("lr", true, "learning rate (default 0.25)"),
         ("seed", true, "seed (default 42)"),
+        ("parallel-workers", true, "pipelined-executor worker threads (0 = serial, default 0)"),
     ];
     let a = Args::from_env(spec, "end-to-end split-parallel GraphSage training")?;
     let iters = a.get_usize("iters", 300)?;
@@ -81,25 +87,32 @@ fn main() -> Result<()> {
         timed(|| partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed));
     println!("# offline: presample {t_pre:.1}s, partition {t_part:.1}s, k={k}");
 
+    let workers = a.get_usize("parallel-workers", 0)?;
     let mut trainer =
-        Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?;
+        Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?
+            .with_parallel_workers(workers);
+    match trainer.exec_mode() {
+        ExecMode::Serial => println!("# executor: serial"),
+        ExecMode::Pipelined(p) => {
+            println!("# executor: pipelined, {} workers (sampling-ahead overlap)", p.workers)
+        }
+    }
     println!("step,loss,batch_acc");
     let t0 = std::time::Instant::now();
     let mut step = 0usize;
     let mut epoch = 0u64;
     #[allow(unused_assignments)]
     let mut last_loss = f32::NAN;
-    'outer: loop {
-        let targets = ds.epoch_targets(epoch);
-        for chunk in targets.chunks(batch) {
-            let s = trainer.train_iteration(&ds, chunk, (epoch << 20) | step as u64)?;
+    // Whole epochs through `train_epoch`, so the pipelined executor can
+    // overlap batch t+1's sampling with batch t's compute; every executed
+    // iteration is counted, so --iters rounds up to an epoch boundary and
+    // the reported it/s stays honest.
+    while step < iters {
+        for s in train_epoch(&mut trainer, &ds, batch, epoch)? {
             step += 1;
             last_loss = s.loss;
             if step % 10 == 0 || step == 1 {
                 println!("{step},{:.4},{:.4}", s.loss, s.accuracy());
-            }
-            if step >= iters {
-                break 'outer;
             }
         }
         epoch += 1;

@@ -1,18 +1,24 @@
 //! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md): neighbor
 //! sampling rate, online splitting + shuffle-index build rate, vertex-map
-//! throughput, partitioner wall time, and feature gather bandwidth.
+//! throughput, partitioner wall time, feature gather bandwidth, and the
+//! serial-vs-pipelined real-compute epoch wall-clock (DESIGN.md
+//! §Executor).
 
 #[path = "bench_common.rs"]
 mod bench_common;
 
 use bench_common::*;
 use gsplit::bench_harness::{section, Bench};
-use gsplit::graph::StandIn;
-use gsplit::partition::{partition_graph, Strategy};
+use gsplit::graph::{Dataset, StandIn};
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::{partition_graph, Partitioning, Strategy};
 use gsplit::presample::PresampleWeights;
 use gsplit::rng::{derive_seed, Pcg32};
+use gsplit::runtime::NativeBackend;
 use gsplit::sampling::{Sampler, VertexMap};
 use gsplit::split::SplitSampler;
+use gsplit::train::{train_epoch, ExecMode, PipelineConfig, Trainer};
+use gsplit::util::timer::timed;
 use gsplit::Vid;
 
 fn main() {
@@ -79,4 +85,45 @@ fn main() {
         ds.features.gather(&inputs, &mut buf);
         buf.len()
     });
+
+    // --- threaded pipelined executor: real-compute epoch wall-clock ---
+    // Same seeds ⇒ bit-identical numerics (asserted below); the speedup
+    // comes from per-device compute parallelism plus the sampling-ahead
+    // pipeline stage hiding S+L behind FB.
+    section("pipelined executor: serial vs threaded epoch (real compute, k=4, 3 layers)");
+    let n_vertices = if quick() { 2048 } else { 8192 };
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: 32,
+        hidden: 64,
+        num_classes: 8,
+        num_layers: 3,
+    };
+    let tds = Dataset::sbm_learnable(n_vertices, cfg.num_classes, cfg.feat_dim, 0.6, SEED);
+    let tpart = Partitioning {
+        assignment: (0..n_vertices as u32).map(|v| (v % 4) as u16).collect(),
+        k: 4,
+    };
+    let backend = NativeBackend::new();
+    let tbatch = 256usize;
+    let mut serial_trainer = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
+    let (t_serial, serial_stats) =
+        timed(|| train_epoch(&mut serial_trainer, &tds, tbatch, 0).expect("serial epoch"));
+    println!(
+        "serial                       {t_serial:>8.3} s/epoch   ({} iterations)",
+        serial_stats.len()
+    );
+    for workers in [2usize, 4] {
+        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
+        tr.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+        let (t, stats) = timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("pipelined epoch"));
+        assert!(
+            serial_stats.iter().zip(&stats).all(|(a, b)| a.loss.to_bits() == b.loss.to_bits()),
+            "pipelined executor diverged from serial"
+        );
+        println!(
+            "pipelined --parallel-workers {workers} {t:>8.3} s/epoch   speedup {:.2}x (bit-identical)",
+            t_serial / t
+        );
+    }
 }

@@ -182,19 +182,31 @@ impl Topology {
     }
 
     /// Topology for `gpus` on one host, matching the paper's instances
-    /// (≤4 → all NVLink; >4 → cube mesh subset).
+    /// (≤4 → all NVLink; 5–8 → cube mesh, truncated below 8).
+    ///
+    /// Truncation keeps `direct` square at `gpus × gpus` and updates
+    /// `gpus_per_host` in the same step, so `num_gpus()` and `link()`
+    /// agree for every size (see the regression test below). Requests for
+    /// more than 8 GPUs panic: no single-host V100 instance has them —
+    /// use [`Topology::multi_host`] instead.
     pub fn for_gpus(gpus: usize, scale_divisor: f64) -> Self {
+        assert!(gpus >= 1, "topology needs at least one GPU");
+        assert!(
+            gpus <= 8,
+            "single-host topologies model at most 8 GPUs (p3.16xlarge); \
+             use Topology::multi_host for {gpus}"
+        );
         if gpus <= 4 {
             Self::single_host(gpus, true, scale_divisor)
         } else {
             let mut t = Self::p3_16xlarge(scale_divisor);
-            if gpus < 8 {
-                t.gpus_per_host = gpus;
-                t.direct.truncate(gpus);
-                for row in &mut t.direct {
-                    row.truncate(gpus);
-                }
+            t.gpus_per_host = gpus;
+            t.direct.truncate(gpus);
+            for row in &mut t.direct {
+                row.truncate(gpus);
             }
+            debug_assert!(t.direct.len() == t.num_gpus());
+            debug_assert!(t.direct.iter().all(|r| r.len() == t.num_gpus()));
             t
         }
     }
@@ -255,6 +267,39 @@ mod tests {
         // Host load of the same bytes sits between NVLink and network.
         let host = t.host_load_time(bytes);
         assert!(nv < host && host < net, "nv={nv} host={host} net={net}");
+    }
+
+    #[test]
+    fn for_gpus_truncation_keeps_direct_consistent() {
+        // Regression: for every truncated size, `num_gpus()` and `link()`
+        // must agree — every pair below `num_gpus()` resolves without
+        // panicking, the diagonal is Local, and links are symmetric.
+        for g in 1..=8usize {
+            let t = Topology::for_gpus(g, 32.0);
+            assert_eq!(t.num_gpus(), g, "num_gpus for size {g}");
+            for a in 0..g as u16 {
+                for b in 0..g as u16 {
+                    let l = t.link(a, b);
+                    if a == b {
+                        assert_eq!(l, LinkKind::Local);
+                    } else {
+                        assert_ne!(l, LinkKind::Local, "distinct GPUs share a Local link");
+                        assert_eq!(l, t.link(b, a), "asymmetric link {a}<->{b} at size {g}");
+                    }
+                }
+            }
+        }
+        // 5-GPU cube-mesh subset: GPU 4 keeps its NVLink to 0 but reaches
+        // 1–3 through host memory.
+        let t5 = Topology::for_gpus(5, 32.0);
+        assert_eq!(t5.link(4, 0), LinkKind::NvLink);
+        assert_eq!(t5.link(4, 1), LinkKind::PcieHost);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 8 GPUs")]
+    fn for_gpus_rejects_more_than_one_host() {
+        let _ = Topology::for_gpus(9, 1.0);
     }
 
     #[test]

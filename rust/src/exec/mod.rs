@@ -125,6 +125,29 @@ impl<'a> EngineCtx<'a> {
 }
 
 /// A mini-batch training engine.
+///
+/// # Example
+///
+/// Count one epoch of the DGL-like data-parallel engine and convert the
+/// counters into the paper's S/L/FB seconds:
+///
+/// ```no_run
+/// use gsplit::devices::Topology;
+/// use gsplit::exec::{run_epoch, DataParallel, EngineCtx};
+/// use gsplit::graph::StandIn;
+/// use gsplit::model::GnnKind;
+///
+/// let ds = StandIn::Tiny.load().unwrap();
+/// let topo = Topology::p3_8xlarge(ds.spec.scale_divisor);
+/// let ctx = EngineCtx::new(&ds, topo, GnnKind::GraphSage, 64, 3, 5);
+/// let mut dgl = DataParallel::dgl(&ctx);
+/// let (counters, time) = run_epoch(&mut dgl, &ctx, 256, 42);
+/// println!(
+///     "S+L+FB = {:.3}s over {} sampled edges",
+///     time.total(),
+///     counters.sampled_edges.iter().sum::<u64>()
+/// );
+/// ```
 pub trait Engine {
     fn name(&self) -> &'static str;
 

@@ -93,7 +93,15 @@ impl SplitParallel {
         }
     }
 
-    fn account_host_plan(
+    /// Run the cost model's counting over one host's [`SplitPlan`],
+    /// accumulating into `c`.
+    ///
+    /// Public so that plan production is shared across the counting and
+    /// real-compute paths: a plan produced by [`Self::plan_for_host`] *or*
+    /// by the trainer's plan stage (`train::PreparedBatch`) can be
+    /// accounted here to get the modeled S/L/FB seconds for the very same
+    /// iteration the trainer executed numerically.
+    pub fn account_plan(
         &self,
         ctx: &EngineCtx,
         host: usize,
@@ -176,7 +184,7 @@ impl Engine for SplitParallel {
             }
             let hi = (lo + share).min(targets.len());
             let plan = self.plan_for_host(ctx, host, &targets[lo..hi], seed);
-            self.account_host_plan(ctx, host, &plan, &mut c);
+            self.account_plan(ctx, host, &plan, &mut c);
         }
         add_grad_allreduce(&mut c, ctx.param_bytes());
         c
@@ -250,6 +258,24 @@ mod tests {
         assert!(c.sampled_edges.iter().filter(|&&e| e > 0).count() >= 6, "{:?}", c.sampled_edges);
         // Gradient ring crosses hosts (network links exist in the matrix).
         assert!(c.train_comm.get(3, 4) > 0, "ring edge 3→4 crosses hosts");
+    }
+
+    #[test]
+    fn account_plan_matches_engine_iteration() {
+        // Shared plan production: a plan produced explicitly and fed to
+        // `account_plan` must count exactly what `iteration` counts.
+        let ds = StandIn::Tiny.load().unwrap();
+        let (ctx, p, w) = setup(&ds, Topology::p3_8xlarge(1000.0));
+        let mut gs = SplitParallel::new(&ctx, p, &w.vertex, 128);
+        let targets: Vec<Vid> = (0..200).collect();
+        let via_engine = gs.iteration(&ctx, &targets, 11);
+        let mut manual = IterCounters::new(ctx.k());
+        let plan = gs.plan_for_host(&ctx, 0, &targets, 11);
+        gs.account_plan(&ctx, 0, &plan, &mut manual);
+        crate::exec::add_grad_allreduce(&mut manual, ctx.param_bytes());
+        assert_eq!(manual.sampled_edges, via_engine.sampled_edges);
+        assert_eq!(manual.train_comm, via_engine.train_comm);
+        assert_eq!(manual.host_load_bytes, via_engine.host_load_bytes);
     }
 
     #[test]

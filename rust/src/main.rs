@@ -20,7 +20,7 @@ use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
 use gsplit::runtime::{Backend, NativeBackend};
-use gsplit::train::{train_epoch, Trainer};
+use gsplit::train::{train_epoch, ExecMode, Trainer};
 use gsplit::util::{fmt_secs, Table};
 
 fn main() -> Result<()> {
@@ -102,6 +102,7 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         ("fanout", true, "neighbor fanout, native backend (default 5)"),
         ("backend", true, "native|pjrt (default native)"),
         ("artifacts", true, "artifacts dir for --backend pjrt (default artifacts)"),
+        ("parallel-workers", true, "worker threads for the pipelined executor (0 = serial, default 0)"),
     ];
     let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
     let (backend, cfg, fanout) = resolve_backend(&a)?;
@@ -130,11 +131,17 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     );
     let mask = train_mask(&ds);
     let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
+    let workers = a.get_usize("parallel-workers", 0)?;
     let mut trainer =
-        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?;
+        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?
+            .with_parallel_workers(workers);
 
+    let exec = match trainer.exec_mode() {
+        ExecMode::Serial => "serial".to_string(),
+        ExecMode::Pipelined(p) => format!("pipelined({} workers)", p.workers),
+    };
     println!(
-        "# backend {} | {}-layer {} {}->{}->{} | k={k}",
+        "# backend {} | {}-layer {} {}->{}->{} | k={k} | exec {exec}",
         backend.name(),
         cfg.num_layers,
         cfg.kind.name(),
@@ -180,7 +187,11 @@ fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
     let topo = if hosts > 1 {
         Topology::multi_host(hosts, ds.spec.scale_divisor)
     } else {
-        Topology::for_gpus(a.get_usize("gpus", 4)?, ds.spec.scale_divisor)
+        let gpus = a.get_usize("gpus", 4)?;
+        if !(1..=8).contains(&gpus) {
+            bail!("--gpus must be between 1 and 8 on a single host (use --hosts for more GPUs)");
+        }
+        Topology::for_gpus(gpus, ds.spec.scale_divisor)
     };
     let batch = a.get_usize("batch", 1024)?;
     let seed = a.get_u64("seed", 42)?;

@@ -77,7 +77,40 @@ pub struct LossOut {
 
 /// The per-layer numeric contract between the split-parallel trainer and
 /// an execution engine. Object-safe: the trainer holds a `&dyn Backend`.
-pub trait Backend {
+///
+/// `Sync` is part of the contract: the threaded executor
+/// (`train::ExecMode::Pipelined`) shares one backend reference across all
+/// worker threads, so implementations must be safe to call concurrently.
+/// [`NativeBackend`] is stateless; the PJRT `Runtime` guards its lazily
+/// compiled executable cache with a mutex.
+///
+/// # Example
+///
+/// One GraphSage layer through the default backend:
+///
+/// ```
+/// use gsplit::model::{GnnKind, ModelConfig, ParamStore};
+/// use gsplit::runtime::{Backend, NativeBackend};
+/// use gsplit::sampling::NO_NEIGHBOR;
+///
+/// let cfg = ModelConfig {
+///     kind: GnnKind::GraphSage,
+///     feat_dim: 4,
+///     hidden: 4,
+///     num_classes: 3,
+///     num_layers: 1,
+/// };
+/// let params = ParamStore::init(&cfg, 7);
+/// let backend = NativeBackend::new();
+/// // Mixed frontier of 3 rows (2 destinations first), fanout 2.
+/// let x = vec![0.1f32; 3 * 4];
+/// let neigh = vec![2u32, 2, 2, NO_NEIGHBOR];
+/// let out = backend
+///     .layer_fwd(cfg.kind, 4, 3, false, &x, 3, &neigh, 2, 2, &params.layers[0])
+///     .unwrap();
+/// assert_eq!(out.len(), 2 * 3); // m_real × dout
+/// ```
+pub trait Backend: Sync {
     /// Short human-readable backend name (logs and diagnostics).
     fn name(&self) -> &'static str;
 

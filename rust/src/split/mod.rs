@@ -114,6 +114,25 @@ impl SplitLayer {
 }
 
 /// The full cooperative plan of one mini-batch iteration.
+///
+/// # Example
+///
+/// ```
+/// use gsplit::graph::{rmat, GenParams};
+/// use gsplit::partition::Partitioning;
+/// use gsplit::split::SplitSampler;
+///
+/// let g = rmat(&GenParams { num_vertices: 256, num_edges: 1024, seed: 1 });
+/// let part = Partitioning { assignment: (0..256u32).map(|v| (v % 2) as u16).collect(), k: 2 };
+/// let targets: Vec<u32> = (0..32).collect();
+/// let mut sampler = SplitSampler::new(part.k);
+/// let plan = sampler.sample(&g, &targets, &[3, 3], &part, 7);
+/// assert_eq!(plan.k, 2);
+/// assert_eq!(plan.layers.len(), 2);
+/// // Input features are loaded exactly once across all devices — the
+/// // paper's headline no-redundancy property.
+/// assert!(plan.total_inputs() > 0);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct SplitPlan {
     pub k: usize,
@@ -143,6 +162,22 @@ impl SplitPlan {
         } else {
             &self.input_frontier[dev]
         }
+    }
+
+    /// Whether `dev` contributes a backward pass (and therefore reverse
+    /// shuffle traffic) at sampled layer `layer` (0 = top).
+    ///
+    /// Derivable from the plan alone, which lets every participant of the
+    /// threaded executor compute the expected reverse-shuffle message
+    /// counts without extra coordination (DESIGN.md §Executor). This is
+    /// exactly the serial trainer's skip condition: its extra "upstream
+    /// gradient non-empty" check can never differ from `num_dst() > 0`,
+    /// because a device's upstream gradient rows at `layer` are its dst
+    /// rows there (`owned_rows(layer - 1, dev)` is the same list) — see
+    /// the `bwd_active_mirrors_plan_shapes` test, which pins the
+    /// equivalence.
+    pub fn bwd_active(&self, layer: usize, dev: usize) -> bool {
+        self.layers[layer].per_dev[dev].num_dst() > 0
     }
 }
 
@@ -423,6 +458,19 @@ mod tests {
                         assert!(g.neighbors(d).contains(&s), "sampled non-edge {d}->{s}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn bwd_active_mirrors_plan_shapes() {
+        let (g, p) = setup(4);
+        let plan = plan_for(&g, &p, 8);
+        for (l, layer) in plan.layers.iter().enumerate() {
+            for d in 0..plan.k {
+                let expect = layer.per_dev[d].num_dst() > 0
+                    && (l == 0 || !plan.owned_rows(l - 1, d).is_empty());
+                assert_eq!(plan.bwd_active(l, d), expect, "layer {l} dev {d}");
             }
         }
     }

@@ -1,0 +1,711 @@
+//! Threaded, pipelined split-parallel executor (DESIGN.md §Executor).
+//!
+//! The serial trainer runs every simulated device one after another; this
+//! module runs the same cooperative algorithm on worker threads:
+//!
+//! * **compute stage** — the `k` simulated devices are assigned round-robin
+//!   to `workers` OS threads; each device runs its own [`Backend`] layer
+//!   calls on its slice of the mini-batch,
+//! * **exchange stage** — per-layer all-to-all shuffles of hidden-feature
+//!   rows (forward) and their gradients (backward) flow through a `k × k`
+//!   fabric of typed bounded channels ([`RowChunk`] messages), mirroring
+//!   Algorithms 1–2; gradient all-reduce contributions and loss statistics
+//!   travel to the coordinator over a typed result channel,
+//! * **plan stage** — while the workers train batch *t*, the coordinator
+//!   thread runs the plan stage for batch *t+1* (cooperative sampling +
+//!   input-feature gather), the paper §6 inter-batch overlap.
+//!
+//! # Determinism contract
+//!
+//! The executor is **bit-identical** to the serial trainer for the same
+//! seed, at every worker count and channel capacity:
+//!
+//! * per-device compute is self-contained, so thread interleaving cannot
+//!   change it;
+//! * forward shuffle rows land at disjoint `mixed_src` positions (the
+//!   shuffle index is a bijection), so arrival order is irrelevant;
+//! * backward reverse-shuffle contributions are **staged per source
+//!   device** and applied in fixed device order `0..k` (each source's
+//!   chunks in send-list order), reproducing the serial scatter-add
+//!   ordering exactly;
+//! * loss statistics and parameter gradients are reduced by the
+//!   coordinator in fixed device order, and the SGD step runs on the one
+//!   canonical [`ParamStore`].
+//!
+//! Channels are bounded (`channel_cap` chunks per directed link); when a
+//! link backs up, workers interleave sends with receives, so small
+//! capacities throttle throughput without deadlocking.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::Dataset;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Backend;
+use crate::split::SplitPlan;
+use crate::Vid;
+
+use super::plan::{prepare_batch, PreparedBatch};
+use super::{IterStats, Trainer};
+
+/// How a [`Trainer`] executes mini-batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Reference executor: every simulated device runs one after another on
+    /// the calling thread.
+    Serial,
+    /// Threaded, pipelined executor — bit-identical to [`ExecMode::Serial`]
+    /// for the same seed (see the module docs for the contract).
+    Pipelined(PipelineConfig),
+}
+
+/// Tuning knobs of the pipelined executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Worker threads the simulated devices are distributed over
+    /// (round-robin). Clamped to `1..=k`.
+    pub workers: usize,
+    /// Bounded capacity, in [`RowChunk`] messages, of each directed
+    /// device-to-device channel. Small capacities force backpressure;
+    /// results are unaffected.
+    pub channel_cap: usize,
+    /// Maximum rows per shuffle chunk. Small values increase message count
+    /// (useful for stress tests); results are unaffected.
+    pub chunk_rows: usize,
+}
+
+impl PipelineConfig {
+    /// A sensible configuration for `workers` threads.
+    pub fn with_workers(workers: usize) -> Self {
+        PipelineConfig { workers: workers.max(1), channel_cap: 8, chunk_rows: 4096 }
+    }
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_workers(n)
+    }
+}
+
+/// One mini-batch to execute: the target vertices plus the fully derived
+/// plan-stage seed (so serial and pipelined paths share seed derivation).
+pub(super) struct BatchSpec {
+    pub targets: Vec<Vid>,
+    pub plan_seed: u64,
+}
+
+/// One typed all-to-all payload: `rows` holds packed row-major values for
+/// positions `start .. start + rows.len()/width` of the (from→to) shuffle
+/// index lists of the current exchange phase.
+struct RowChunk {
+    start: u32,
+    rows: Vec<f32>,
+}
+
+/// Work order broadcast to every worker.
+enum Job {
+    Batch {
+        idx: usize,
+        prep: Arc<PreparedBatch>,
+        params: Arc<ParamStore>,
+        backward: bool,
+    },
+    Stop,
+}
+
+/// Per-device outcome returned to the coordinator for the fixed-order
+/// reduction (loss stats + parameter-gradient all-reduce).
+struct DeviceResult {
+    batch_idx: usize,
+    dev: usize,
+    examples: usize,
+    loss_weighted: f32,
+    correct: f32,
+    /// Per sampled layer `i`: `Some(per-tensor grads)` iff the device was
+    /// backward-active there (mirrors the serial skip condition).
+    #[allow(clippy::type_complexity)]
+    gparams: Vec<Option<Vec<Vec<f32>>>>,
+}
+
+enum WorkerMsg {
+    Dev(DeviceResult),
+    Err(String),
+}
+
+/// Outbound chunk queue for one (owned device → destination) link.
+struct OutQueue {
+    li: usize,
+    to: usize,
+    q: VecDeque<RowChunk>,
+}
+
+/// Spin-then-yield-then-sleep schedule for the exchange pump.
+const SPIN_YIELDS: u32 = 256;
+
+/// Sets the shared abort flag when dropped, so fellow workers never spin
+/// forever waiting for chunks from a worker that panicked or errored out.
+/// (At clean shutdown everything is already drained, so the flag is inert.)
+struct AbortOnDrop(Arc<AtomicBool>);
+
+impl Drop for AbortOnDrop {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Run `specs` through the threaded pipelined executor. Returns one
+/// [`IterStats`] per batch; when `backward`, the trainer's parameters are
+/// stepped after each batch exactly as the serial path would.
+pub(super) fn run_batches(
+    trainer: &mut Trainer<'_>,
+    ds: &Dataset,
+    specs: &[BatchSpec],
+    backward: bool,
+    cfg: PipelineConfig,
+) -> Result<Vec<IterStats>> {
+    if specs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let k = trainer.part.k;
+    let n_workers = cfg.workers.clamp(1, k);
+    let channel_cap = cfg.channel_cap.max(1);
+    let chunk_rows = cfg.chunk_rows.max(1);
+    let backend = trainer.backend;
+    let model_cfg = trainer.params.cfg.clone();
+    let kernel_k = trainer.fanouts[0];
+    let lr = trainer.lr;
+
+    // k × k typed row channels; each (from→to) sender goes to the worker
+    // owning `from`, the receiver to the worker owning `to`.
+    let mut senders: Vec<Vec<Option<SyncSender<RowChunk>>>> =
+        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+    let mut receivers: Vec<Vec<Option<Receiver<RowChunk>>>> =
+        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+    for from in 0..k {
+        for to in 0..k {
+            let (tx, rx) = sync_channel::<RowChunk>(channel_cap);
+            senders[from][to] = Some(tx);
+            receivers[to][from] = Some(rx);
+        }
+    }
+    let abort = Arc::new(AtomicBool::new(false));
+    let (res_tx, res_rx) = channel::<WorkerMsg>();
+
+    let mut stats: Vec<IterStats> = Vec::with_capacity(specs.len());
+    thread::scope(|scope| -> Result<()> {
+        let mut job_txs: Vec<SyncSender<Job>> = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let owned: Vec<usize> = (0..k).filter(|d| d % n_workers == w).collect();
+            let send: Vec<Vec<SyncSender<RowChunk>>> = owned
+                .iter()
+                .map(|&d| (0..k).map(|to| senders[d][to].take().expect("sender")).collect())
+                .collect();
+            let recv: Vec<Vec<Receiver<RowChunk>>> = owned
+                .iter()
+                .map(|&d| (0..k).map(|from| receivers[d][from].take().expect("receiver")).collect())
+                .collect();
+            let (jtx, jrx) = sync_channel::<Job>(1);
+            job_txs.push(jtx);
+            let res_tx = res_tx.clone();
+            let abort = Arc::clone(&abort);
+            let model_cfg = model_cfg.clone();
+            scope.spawn(move || {
+                let guard = AbortOnDrop(Arc::clone(&abort));
+                let worker = Worker {
+                    backend,
+                    ds,
+                    cfg: model_cfg,
+                    kernel_k,
+                    owned,
+                    send,
+                    recv,
+                    chunk_rows,
+                    abort,
+                    res_tx,
+                };
+                worker.run(jrx);
+                drop(guard);
+            });
+        }
+        drop(res_tx);
+
+        let mut next_prep: Option<Arc<PreparedBatch>> = None;
+        for (t, spec) in specs.iter().enumerate() {
+            let prep = match next_prep.take() {
+                Some(p) => p,
+                None => Arc::new(prepare_batch(
+                    &mut trainer.sampler,
+                    ds,
+                    &spec.targets,
+                    &trainer.fanouts,
+                    &trainer.part,
+                    spec.plan_seed,
+                )),
+            };
+            let params = Arc::new(trainer.params.clone());
+            for jtx in &job_txs {
+                jtx.send(Job::Batch {
+                    idx: t,
+                    prep: Arc::clone(&prep),
+                    params: Arc::clone(&params),
+                    backward,
+                })
+                .map_err(|_| anyhow!("executor worker exited early"))?;
+            }
+            // Plan stage for batch t+1 overlaps the workers training batch t.
+            if let Some(next) = specs.get(t + 1) {
+                next_prep = Some(Arc::new(prepare_batch(
+                    &mut trainer.sampler,
+                    ds,
+                    &next.targets,
+                    &trainer.fanouts,
+                    &trainer.part,
+                    next.plan_seed,
+                )));
+            }
+            // Collect every device's result, then reduce in device order.
+            // Timed receive: a worker that panics sets the abort flag (via
+            // AbortOnDrop) without ever sending a result, and its idle
+            // peers cannot wake the coordinator — so poll the flag instead
+            // of blocking forever.
+            let mut by_dev: Vec<Option<DeviceResult>> = (0..k).map(|_| None).collect();
+            let mut got = 0usize;
+            while got < k {
+                match res_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(WorkerMsg::Dev(r)) => {
+                        debug_assert_eq!(r.batch_idx, t);
+                        debug_assert!(by_dev[r.dev].is_none());
+                        by_dev[r.dev] = Some(r);
+                        got += 1;
+                    }
+                    Ok(WorkerMsg::Err(e)) => bail!("executor worker failed: {e}"),
+                    Err(RecvTimeoutError::Timeout) => {
+                        if abort.load(Ordering::SeqCst) {
+                            bail!("executor worker died (panic or abort)");
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => bail!("executor workers disconnected"),
+                }
+            }
+            stats.push(reduce_batch(trainer, &model_cfg, &prep.plan, &by_dev, backward, lr));
+        }
+        for jtx in &job_txs {
+            let _ = jtx.send(Job::Stop);
+        }
+        Ok(())
+    })?;
+    Ok(stats)
+}
+
+/// Fixed-device-order reduction of one batch's per-device results: loss
+/// statistics, the gradient all-reduce, and the SGD step — the same
+/// floating-point operation sequence as the serial trainer.
+fn reduce_batch(
+    trainer: &mut Trainer<'_>,
+    cfg: &ModelConfig,
+    plan: &SplitPlan,
+    by_dev: &[Option<DeviceResult>],
+    backward: bool,
+    lr: f32,
+) -> IterStats {
+    let total_examples: usize = plan.layers[0].per_dev.iter().map(|dl| dl.num_dst()).sum();
+    let mut loss_sum = 0f32;
+    let mut correct = 0f32;
+    for r in by_dev.iter() {
+        let r = r.as_ref().expect("every device reports");
+        if r.examples == 0 {
+            continue;
+        }
+        loss_sum += r.loss_weighted;
+        correct += r.correct;
+    }
+    let stats = IterStats {
+        loss: loss_sum / total_examples.max(1) as f32,
+        correct,
+        examples: total_examples,
+    };
+    if backward {
+        let num_layers = plan.layers.len();
+        let mut g_params: Vec<Vec<Vec<f32>>> = trainer
+            .params
+            .layers
+            .iter()
+            .map(|lp| lp.tensors.iter().map(|t| vec![0f32; t.len()]).collect())
+            .collect();
+        for i in 0..num_layers {
+            let l = cfg.num_layers - 1 - i;
+            for r in by_dev.iter() {
+                let r = r.as_ref().expect("every device reports");
+                if let Some(contrib) = &r.gparams[i] {
+                    for (acc, g) in g_params[l].iter_mut().zip(contrib) {
+                        for (a, b) in acc.iter_mut().zip(g) {
+                            *a += b;
+                        }
+                    }
+                }
+            }
+        }
+        trainer.params.sgd_step(&g_params, lr);
+    }
+    stats
+}
+
+/// One worker thread: a static subset of the simulated devices plus its
+/// side of the channel fabric.
+struct Worker<'e> {
+    backend: &'e dyn Backend,
+    ds: &'e Dataset,
+    cfg: ModelConfig,
+    kernel_k: usize,
+    /// Owned device ids, ascending.
+    owned: Vec<usize>,
+    /// `send[li][to]` — sender of the (owned[li] → to) channel.
+    send: Vec<Vec<SyncSender<RowChunk>>>,
+    /// `recv[li][from]` — receiver of the (from → owned[li]) channel.
+    recv: Vec<Vec<Receiver<RowChunk>>>,
+    chunk_rows: usize,
+    abort: Arc<AtomicBool>,
+    res_tx: Sender<WorkerMsg>,
+}
+
+impl<'e> Worker<'e> {
+    fn run(&self, jobs: Receiver<Job>) {
+        loop {
+            match jobs.recv() {
+                Ok(Job::Batch { idx, prep, params, backward }) => {
+                    match self.run_batch(idx, &prep, &params, backward) {
+                        Ok(results) => {
+                            for r in results {
+                                if self.res_tx.send(WorkerMsg::Dev(r)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            self.abort.store(true, Ordering::SeqCst);
+                            let _ = self.res_tx.send(WorkerMsg::Err(e.to_string()));
+                            return;
+                        }
+                    }
+                }
+                Ok(Job::Stop) | Err(_) => return,
+            }
+        }
+    }
+
+    /// Chunk count of a `rows`-row shuffle message (0 rows ⇒ no message).
+    fn chunks_of(&self, rows: usize) -> usize {
+        if rows == 0 {
+            0
+        } else {
+            rows.div_ceil(self.chunk_rows)
+        }
+    }
+
+    /// Pack `src` rows at `idx` positions into chunks of ≤ `chunk_rows`.
+    fn pack_rows(&self, src: &[f32], idx: &[u32], width: usize) -> VecDeque<RowChunk> {
+        let mut out = VecDeque::with_capacity(self.chunks_of(idx.len()));
+        let mut start = 0usize;
+        while start < idx.len() {
+            let n = (idx.len() - start).min(self.chunk_rows);
+            let mut rows = Vec::with_capacity(n * width);
+            for &p in &idx[start..start + n] {
+                rows.extend_from_slice(&src[p as usize * width..(p as usize + 1) * width]);
+            }
+            out.push_back(RowChunk { start: start as u32, rows });
+            start += n;
+        }
+        out
+    }
+
+    /// Drive queued sends and expected receives of one exchange phase to
+    /// completion, interleaving both so bounded channels cannot deadlock.
+    /// `deliver(li, from, chunk)` consumes each arriving chunk.
+    fn pump(
+        &self,
+        k: usize,
+        outgoing: &mut [OutQueue],
+        expect: &mut [Vec<usize>],
+        mut deliver: impl FnMut(usize, usize, RowChunk),
+    ) -> Result<()> {
+        let mut spins = 0u32;
+        loop {
+            let mut progress = false;
+            for oq in outgoing.iter_mut() {
+                while let Some(chunk) = oq.q.pop_front() {
+                    match self.send[oq.li][oq.to].try_send(chunk) {
+                        Ok(()) => progress = true,
+                        Err(TrySendError::Full(c)) => {
+                            oq.q.push_front(c);
+                            break;
+                        }
+                        Err(TrySendError::Disconnected(_)) => bail!("row channel closed"),
+                    }
+                }
+            }
+            let mut pending = outgoing.iter().any(|o| !o.q.is_empty());
+            for li in 0..self.owned.len() {
+                for from in 0..k {
+                    while expect[li][from] > 0 {
+                        match self.recv[li][from].try_recv() {
+                            Ok(chunk) => {
+                                expect[li][from] -= 1;
+                                progress = true;
+                                deliver(li, from, chunk);
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => bail!("row channel closed"),
+                        }
+                    }
+                    if expect[li][from] > 0 {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending {
+                return Ok(());
+            }
+            if self.abort.load(Ordering::Relaxed) {
+                bail!("aborted: a peer worker failed");
+            }
+            if progress {
+                spins = 0;
+            } else {
+                spins += 1;
+                if spins < SPIN_YIELDS {
+                    thread::yield_now();
+                } else {
+                    thread::sleep(Duration::from_micros(50));
+                }
+            }
+        }
+    }
+
+    /// Execute this worker's share of one mini-batch: the same per-device
+    /// math as the serial trainer, with channel all-to-alls where the
+    /// serial code indexes other devices' buffers directly.
+    fn run_batch(
+        &self,
+        batch_idx: usize,
+        prep: &PreparedBatch,
+        params: &ParamStore,
+        backward: bool,
+    ) -> Result<Vec<DeviceResult>> {
+        let plan = &prep.plan;
+        let k = plan.k;
+        let num_layers = plan.layers.len();
+        let cfg = &self.cfg;
+        let kernel_k = self.kernel_k;
+        let owned = self.owned.clone();
+        let n_own = owned.len();
+
+        // Owned rows at the current bottom-up boundary, starting from the
+        // input features the plan stage gathered.
+        let mut hidden: Vec<Vec<f32>> =
+            owned.iter().map(|&d| prep.feats[d].clone()).collect();
+        // mixed[i][li]: materialized mixed-frontier inputs, kept for backward.
+        let mut mixed: Vec<Vec<Vec<f32>>> =
+            (0..num_layers).map(|_| vec![Vec::new(); n_own]).collect();
+
+        // --- Forward, bottom-up ---
+        for i in (0..num_layers).rev() {
+            let l = cfg.num_layers - 1 - i;
+            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
+            let relu = l + 1 < cfg.num_layers;
+            let layer = &plan.layers[i];
+
+            // Exchange: pack owned rows for every destination device...
+            let mut outgoing: Vec<OutQueue> = Vec::new();
+            for (li, &d) in owned.iter().enumerate() {
+                for to in 0..k {
+                    let idx = &layer.shuffle.send[d][to];
+                    if idx.is_empty() {
+                        continue;
+                    }
+                    outgoing.push(OutQueue { li, to, q: self.pack_rows(&hidden[li], idx, din) });
+                }
+            }
+            // ...and scatter arriving rows into the mixed frontiers (the
+            // shuffle index is a bijection, so positions are disjoint and
+            // arrival order cannot matter).
+            let mut expect = vec![vec![0usize; k]; n_own];
+            for (li, &d) in owned.iter().enumerate() {
+                mixed[i][li] = vec![0f32; layer.per_dev[d].mixed_src.len() * din];
+                for from in 0..k {
+                    expect[li][from] = self.chunks_of(layer.shuffle.send[from][d].len());
+                }
+            }
+            let mixed_i = &mut mixed[i];
+            self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                let rl = &layer.shuffle.recv[owned[li]][from];
+                let nrows = chunk.rows.len() / din;
+                let start = chunk.start as usize;
+                for j in 0..nrows {
+                    let pos = rl[start + j] as usize;
+                    mixed_i[li][pos * din..(pos + 1) * din]
+                        .copy_from_slice(&chunk.rows[j * din..(j + 1) * din]);
+                }
+            })?;
+
+            // Compute this layer's owned hidden rows.
+            for (li, &d) in owned.iter().enumerate() {
+                let dl = &layer.per_dev[d];
+                if dl.num_dst() == 0 {
+                    hidden[li] = Vec::new();
+                    continue;
+                }
+                hidden[li] = self.backend.layer_fwd(
+                    cfg.kind,
+                    din,
+                    dout,
+                    relu,
+                    &mixed[i][li],
+                    dl.mixed_src.len(),
+                    &dl.neigh,
+                    dl.num_dst(),
+                    kernel_k,
+                    &params.layers[l],
+                )?;
+            }
+        }
+
+        // --- Loss head per owned device ---
+        let c = cfg.num_classes;
+        let total_examples: usize = plan.layers[0].per_dev.iter().map(|dl| dl.num_dst()).sum();
+        let mut dev_loss = vec![0f32; n_own];
+        let mut dev_correct = vec![0f32; n_own];
+        let mut dev_examples = vec![0usize; n_own];
+        let mut g_out: Vec<Vec<f32>> = vec![Vec::new(); n_own];
+        for (li, &d) in owned.iter().enumerate() {
+            let dl = &plan.layers[0].per_dev[d];
+            let b_d = dl.num_dst();
+            dev_examples[li] = b_d;
+            if b_d == 0 {
+                continue;
+            }
+            let labels: Vec<i32> =
+                dl.dst.iter().map(|&v| self.ds.labels.labels[v as usize] as i32).collect();
+            let (out, g_logits) = self.backend.loss(&hidden[li], &labels, b_d, c)?;
+            dev_loss[li] = out.loss * b_d as f32;
+            dev_correct[li] = out.correct;
+            if backward {
+                // Rescale device-mean gradient to global-mean (identical
+                // expression to the serial path).
+                let scale = 1.0 / total_examples as f32 * b_d as f32;
+                g_out[li] = g_logits.iter().map(|g| g * scale).collect();
+            }
+        }
+
+        // --- Backward, top-down ---
+        #[allow(clippy::type_complexity)]
+        let mut gparams: Vec<Vec<Option<Vec<Vec<f32>>>>> =
+            (0..n_own).map(|_| vec![None; num_layers]).collect();
+        if backward {
+            for i in 0..num_layers {
+                let l = cfg.num_layers - 1 - i;
+                let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
+                let relu = l + 1 < cfg.num_layers;
+                let layer = &plan.layers[i];
+
+                // Per-device VJP, then send mixed-row gradients back to the
+                // owners along the reversed shuffle index.
+                let mut outgoing: Vec<OutQueue> = Vec::new();
+                for (li, &d) in owned.iter().enumerate() {
+                    let dl = &layer.per_dev[d];
+                    let active = plan.bwd_active(i, d);
+                    debug_assert_eq!(active, dl.num_dst() != 0 && !g_out[li].is_empty());
+                    if !active {
+                        continue;
+                    }
+                    let grads = self.backend.layer_bwd(
+                        cfg.kind,
+                        din,
+                        dout,
+                        relu,
+                        &mixed[i][li],
+                        dl.mixed_src.len(),
+                        &dl.neigh,
+                        dl.num_dst(),
+                        kernel_k,
+                        &g_out[li],
+                        &params.layers[l],
+                    )?;
+                    for to in 0..k {
+                        let idx = &layer.shuffle.recv[d][to];
+                        if idx.is_empty() {
+                            continue;
+                        }
+                        outgoing.push(OutQueue {
+                            li,
+                            to,
+                            q: self.pack_rows(&grads.g_x, idx, din),
+                        });
+                    }
+                    gparams[li][i] = Some(grads.g_params);
+                }
+
+                // Receive into per-source staging buffers — NOT applied on
+                // arrival, so the scatter-add below can run in the fixed
+                // device order the determinism contract requires.
+                let mut expect = vec![vec![0usize; k]; n_own];
+                let mut stage: Vec<Vec<Vec<RowChunk>>> =
+                    (0..n_own).map(|_| (0..k).map(|_| Vec::new()).collect()).collect();
+                for (li, &o) in owned.iter().enumerate() {
+                    for from in 0..k {
+                        if plan.bwd_active(i, from) {
+                            expect[li][from] = self.chunks_of(layer.shuffle.send[o][from].len());
+                        }
+                    }
+                }
+                self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                    stage[li][from].push(chunk);
+                })?;
+
+                // Accumulate per source, in fixed device order 0..k, each
+                // source's chunks in send-list order — the serial ordering.
+                for (li, &o) in owned.iter().enumerate() {
+                    let mut g = vec![0f32; plan.owned_rows(i, o).len() * din];
+                    for from in 0..k {
+                        let sl = &layer.shuffle.send[o][from];
+                        for chunk in &stage[li][from] {
+                            let nrows = chunk.rows.len() / din;
+                            let start = chunk.start as usize;
+                            for j in 0..nrows {
+                                let pos = sl[start + j] as usize;
+                                let dst = &mut g[pos * din..(pos + 1) * din];
+                                let src = &chunk.rows[j * din..(j + 1) * din];
+                                for (a, b) in dst.iter_mut().zip(src) {
+                                    *a += b;
+                                }
+                            }
+                        }
+                    }
+                    g_out[li] = g;
+                }
+            }
+        }
+
+        let mut results = Vec::with_capacity(n_own);
+        for (li, &d) in owned.iter().enumerate() {
+            results.push(DeviceResult {
+                batch_idx,
+                dev: d,
+                examples: dev_examples[li],
+                loss_weighted: dev_loss[li],
+                correct: dev_correct[li],
+                gparams: std::mem::take(&mut gparams[li]),
+            });
+        }
+        Ok(results)
+    }
+}

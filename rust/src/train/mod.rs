@@ -11,8 +11,27 @@
 //! it owns the sampling, the shuffles, the loss-head scaling, and the
 //! optimizer step.
 //!
-//! The simulated devices execute serially in one process (timing comes
-//! from the cost model; *numerics* come from here).
+//! Execution is split into three stages (DESIGN.md §Executor):
+//!
+//! * **plan** ([`plan`] module) — cooperative sampling + input-feature
+//!   gather, independent of the model parameters;
+//! * **compute** — per-device [`Backend`] layer calls;
+//! * **exchange** — the per-layer all-to-alls and the gradient all-reduce.
+//!
+//! Two executors drive those stages, selected by [`ExecMode`]:
+//! [`ExecMode::Serial`] runs every simulated device one after another on
+//! the calling thread (the reference semantics; timing comes from the cost
+//! model, *numerics* come from here), while [`ExecMode::Pipelined`] runs
+//! one worker-thread pool over the devices and overlaps the next batch's
+//! plan stage with the current batch's compute — **bit-identical** to the
+//! serial executor for the same seed.
+
+mod executor;
+mod plan;
+mod serial;
+
+pub use executor::{ExecMode, PipelineConfig};
+pub use plan::PreparedBatch;
 
 use anyhow::{ensure, Result};
 
@@ -21,8 +40,10 @@ use crate::model::{ModelConfig, ParamStore};
 use crate::partition::Partitioning;
 use crate::rng::derive_seed;
 use crate::runtime::Backend;
-use crate::split::{SplitPlan, SplitSampler};
+use crate::split::SplitSampler;
 use crate::Vid;
+
+use executor::BatchSpec;
 
 /// Per-iteration training statistics.
 #[derive(Debug, Clone, Copy)]
@@ -43,6 +64,41 @@ impl IterStats {
 }
 
 /// Split-parallel trainer over a fixed partitioning and a numeric backend.
+///
+/// # Example
+///
+/// The serial and pipelined executors produce bit-identical results for
+/// the same seed:
+///
+/// ```
+/// use gsplit::graph::Dataset;
+/// use gsplit::model::{GnnKind, ModelConfig};
+/// use gsplit::partition::Partitioning;
+/// use gsplit::runtime::NativeBackend;
+/// use gsplit::train::{train_epoch, ExecMode, PipelineConfig, Trainer};
+///
+/// let cfg = ModelConfig {
+///     kind: GnnKind::GraphSage,
+///     feat_dim: 8,
+///     hidden: 8,
+///     num_classes: 4,
+///     num_layers: 2,
+/// };
+/// let ds = Dataset::sbm_learnable(512, cfg.num_classes, cfg.feat_dim, 0.6, 1);
+/// let part = Partitioning { assignment: (0..512u32).map(|v| (v % 2) as u16).collect(), k: 2 };
+/// let backend = NativeBackend::new();
+///
+/// let mut serial = Trainer::new(&backend, &cfg, 4, part.clone(), 0.1, 7).unwrap();
+/// let mut pipelined = Trainer::new(&backend, &cfg, 4, part, 0.1, 7).unwrap();
+/// pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+///
+/// let a = train_epoch(&mut serial, &ds, 128, 0).unwrap();
+/// let b = train_epoch(&mut pipelined, &ds, 128, 0).unwrap();
+/// assert_eq!(a.len(), b.len());
+/// for (x, y) in a.iter().zip(&b) {
+///     assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+/// }
+/// ```
 pub struct Trainer<'a> {
     pub backend: &'a dyn Backend,
     pub params: ParamStore,
@@ -50,6 +106,7 @@ pub struct Trainer<'a> {
     sampler: SplitSampler,
     fanouts: Vec<usize>,
     lr: f32,
+    mode: ExecMode,
 }
 
 impl<'a> Trainer<'a> {
@@ -57,7 +114,8 @@ impl<'a> Trainer<'a> {
     /// across layers, like the paper's sampling setup). With the PJRT
     /// backend this must equal the manifest's `kernel_fanout` and `cfg`
     /// must match the exported dims — the runtime rejects mismatches when
-    /// it picks artifacts.
+    /// it picks artifacts. Starts in [`ExecMode::Serial`]; see
+    /// [`Trainer::set_exec_mode`].
     pub fn new(
         backend: &'a dyn Backend,
         cfg: &ModelConfig,
@@ -76,6 +134,7 @@ impl<'a> Trainer<'a> {
             part,
             fanouts: vec![fanout; cfg.num_layers],
             lr,
+            mode: ExecMode::Serial,
         })
     }
 
@@ -83,200 +142,87 @@ impl<'a> Trainer<'a> {
         &self.part
     }
 
+    /// Select the executor. [`ExecMode::Pipelined`] spawns its worker
+    /// threads per call ([`train_epoch`] pipelines a whole epoch through
+    /// one pool; a single [`Trainer::train_iteration`] pays one spawn).
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    /// The currently selected executor.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Convenience: `workers == 0` selects [`ExecMode::Serial`], otherwise
+    /// a pipelined executor with that many worker threads.
+    pub fn with_parallel_workers(mut self, workers: usize) -> Self {
+        self.mode = if workers == 0 {
+            ExecMode::Serial
+        } else {
+            ExecMode::Pipelined(PipelineConfig::with_workers(workers))
+        };
+        self
+    }
+
     /// One cooperative split-parallel training iteration on `targets`.
     pub fn train_iteration(&mut self, ds: &Dataset, targets: &[Vid], seed: u64) -> Result<IterStats> {
-        let plan = self.sampler.sample(
-            &ds.graph,
-            targets,
-            &self.fanouts,
-            &self.part,
-            derive_seed(seed, &[0x17e2]),
-        );
-        let (stats, grads) = self.forward_backward(ds, &plan, true)?;
-        self.params.sgd_step(&grads.expect("grads requested"), self.lr);
-        Ok(stats)
+        let plan_seed = derive_seed(seed, &[0x17e2]);
+        let mode = self.mode;
+        match mode {
+            ExecMode::Serial => {
+                let prep = plan::prepare_batch(
+                    &mut self.sampler,
+                    ds,
+                    targets,
+                    &self.fanouts,
+                    &self.part,
+                    plan_seed,
+                );
+                let (stats, grads) = self.forward_backward(ds, prep, true)?;
+                self.params.sgd_step(&grads.expect("grads requested"), self.lr);
+                Ok(stats)
+            }
+            ExecMode::Pipelined(cfg) => {
+                let specs = [BatchSpec { targets: targets.to_vec(), plan_seed }];
+                let mut out = executor::run_batches(self, ds, &specs, true, cfg)?;
+                Ok(out.pop().expect("one batch"))
+            }
+        }
     }
 
     /// Forward-only evaluation (accuracy / loss on given targets).
     pub fn evaluate(&mut self, ds: &Dataset, targets: &[Vid], seed: u64) -> Result<IterStats> {
-        let plan = self.sampler.sample(
-            &ds.graph,
-            targets,
-            &self.fanouts,
-            &self.part,
-            derive_seed(seed, &[0xE7A1]),
-        );
-        let (stats, _) = self.forward_backward(ds, &plan, false)?;
-        Ok(stats)
-    }
-
-    /// The cooperative forward (+ optional backward) pass of Algorithms 1–2.
-    #[allow(clippy::type_complexity)]
-    fn forward_backward(
-        &mut self,
-        ds: &Dataset,
-        plan: &SplitPlan,
-        backward: bool,
-    ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
-        let cfg = self.params.cfg.clone();
-        let k = plan.k;
-        let num_layers = plan.layers.len();
-        let kernel_k = self.fanouts[0];
-
-        // --- Loading: each device gathers ONLY its own input frontier ---
-        let mut owned: Vec<Vec<f32>> = Vec::with_capacity(k);
-        for d in 0..k {
-            let mut buf = Vec::new();
-            ds.features.gather(&plan.input_frontier[d], &mut buf);
-            owned.push(buf);
-        }
-
-        // --- Forward, bottom-up; keep mixed inputs for the backward ---
-        // mixed[i][d]: the materialized mixed-frontier rows of layer i.
-        let mut mixed: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); k]; num_layers];
-        let mut hidden: Vec<Vec<f32>> = owned; // rows owned per dev at current boundary
-        for i in (0..num_layers).rev() {
-            let l = cfg.num_layers - 1 - i; // model layer (0 = bottom)
-            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
-            let relu = l + 1 < cfg.num_layers;
-            let layer = &plan.layers[i];
-            // Shuffle: materialize each device's mixed frontier from owned
-            // rows of the boundary below (all-to-all of Algorithm 2 line 5).
-            for d in 0..k {
-                let dl = &layer.per_dev[d];
-                let mut buf = vec![0f32; dl.mixed_src.len() * din];
-                for from in 0..k {
-                    let send = &layer.shuffle.send[from][d];
-                    let recv = &layer.shuffle.recv[d][from];
-                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
-                        let src = &hidden[from][s_idx as usize * din..(s_idx as usize + 1) * din];
-                        buf[r_idx as usize * din..(r_idx as usize + 1) * din]
-                            .copy_from_slice(src);
-                    }
-                }
-                mixed[i][d] = buf;
+        let plan_seed = derive_seed(seed, &[0xE7A1]);
+        let mode = self.mode;
+        match mode {
+            ExecMode::Serial => {
+                let prep = plan::prepare_batch(
+                    &mut self.sampler,
+                    ds,
+                    targets,
+                    &self.fanouts,
+                    &self.part,
+                    plan_seed,
+                );
+                let (stats, _) = self.forward_backward(ds, prep, false)?;
+                Ok(stats)
             }
-            // Compute this layer's owned hidden rows per device.
-            let mut next_hidden: Vec<Vec<f32>> = Vec::with_capacity(k);
-            for d in 0..k {
-                let dl = &layer.per_dev[d];
-                if dl.num_dst() == 0 {
-                    next_hidden.push(Vec::new());
-                    continue;
-                }
-                let h = self.backend.layer_fwd(
-                    cfg.kind,
-                    din,
-                    dout,
-                    relu,
-                    &mixed[i][d],
-                    dl.mixed_src.len(),
-                    &dl.neigh,
-                    dl.num_dst(),
-                    kernel_k,
-                    &self.params.layers[l],
-                )?;
-                next_hidden.push(h);
-            }
-            hidden = next_hidden;
-        }
-
-        // --- Loss head per device (top-layer dst are the targets) ---
-        let c = cfg.num_classes;
-        let total_examples: usize = plan.layers[0].per_dev.iter().map(|dl| dl.num_dst()).sum();
-        let mut loss_sum = 0f32;
-        let mut correct = 0f32;
-        let mut g_out: Vec<Vec<f32>> = vec![Vec::new(); k];
-        for d in 0..k {
-            let dl = &plan.layers[0].per_dev[d];
-            let b_d = dl.num_dst();
-            if b_d == 0 {
-                continue;
-            }
-            let labels: Vec<i32> =
-                dl.dst.iter().map(|&v| ds.labels.labels[v as usize] as i32).collect();
-            let (out, g_logits) = self.backend.loss(&hidden[d], &labels, b_d, c)?;
-            loss_sum += out.loss * b_d as f32;
-            correct += out.correct;
-            if backward {
-                // Rescale device-mean gradient to global-mean.
-                let scale = 1.0 / total_examples as f32 * b_d as f32;
-                g_out[d] = g_logits.iter().map(|g| g * scale).collect();
+            ExecMode::Pipelined(cfg) => {
+                let specs = [BatchSpec { targets: targets.to_vec(), plan_seed }];
+                let mut out = executor::run_batches(self, ds, &specs, false, cfg)?;
+                Ok(out.pop().expect("one batch"))
             }
         }
-        let stats = IterStats {
-            loss: loss_sum / total_examples.max(1) as f32,
-            correct,
-            examples: total_examples,
-        };
-        if !backward {
-            return Ok((stats, None));
-        }
-
-        // --- Backward, top-down: per-layer VJP + reverse shuffle ---
-        let mut g_params: Vec<Vec<Vec<f32>>> = self
-            .params
-            .layers
-            .iter()
-            .map(|lp| lp.tensors.iter().map(|t| vec![0f32; t.len()]).collect())
-            .collect();
-        for i in 0..num_layers {
-            let l = cfg.num_layers - 1 - i;
-            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
-            let relu = l + 1 < cfg.num_layers;
-            let layer = &plan.layers[i];
-            // Gradient w.r.t. the owned rows of the boundary below.
-            let mut g_owned: Vec<Vec<f32>> = (0..k)
-                .map(|d| vec![0f32; plan.owned_rows(i, d).len() * din])
-                .collect();
-            for d in 0..k {
-                let dl = &layer.per_dev[d];
-                if dl.num_dst() == 0 || g_out[d].is_empty() {
-                    continue;
-                }
-                let grads = self.backend.layer_bwd(
-                    cfg.kind,
-                    din,
-                    dout,
-                    relu,
-                    &mixed[i][d],
-                    dl.mixed_src.len(),
-                    &dl.neigh,
-                    dl.num_dst(),
-                    kernel_k,
-                    &g_out[d],
-                    &self.params.layers[l],
-                )?;
-                for (acc, g) in g_params[l].iter_mut().zip(&grads.g_params) {
-                    for (a, b) in acc.iter_mut().zip(g) {
-                        *a += b;
-                    }
-                }
-                // Reverse shuffle: scatter-add mixed-row gradients back to
-                // the owners (gradients flow along the same shuffle index).
-                for from in 0..k {
-                    let send = &layer.shuffle.send[from][d];
-                    let recv = &layer.shuffle.recv[d][from];
-                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
-                        let src = &grads.g_x
-                            [r_idx as usize * din..(r_idx as usize + 1) * din];
-                        let dst = &mut g_owned[from]
-                            [s_idx as usize * din..(s_idx as usize + 1) * din];
-                        for (a, b) in dst.iter_mut().zip(src) {
-                            *a += b;
-                        }
-                    }
-                }
-            }
-            // The owned-row gradients become next layer's g_out (layer i+1
-            // dst rows); at the bottom they are input-feature grads: dropped.
-            g_out = g_owned;
-        }
-        Ok((stats, Some(g_params)))
     }
 }
 
 /// Convenience: one full training epoch; returns per-iteration stats.
+///
+/// With [`ExecMode::Pipelined`] the whole epoch runs through one worker
+/// pool and the plan stage of batch *t+1* overlaps the compute of batch
+/// *t*; the per-batch seeds (and therefore all results) are identical to
+/// the serial path.
 pub fn train_epoch(
     trainer: &mut Trainer,
     ds: &Dataset,
@@ -284,6 +230,18 @@ pub fn train_epoch(
     epoch_seed: u64,
 ) -> Result<Vec<IterStats>> {
     let targets = ds.epoch_targets(epoch_seed);
+    let mode = trainer.mode;
+    if let ExecMode::Pipelined(cfg) = mode {
+        let specs: Vec<BatchSpec> = targets
+            .chunks(batch_size)
+            .enumerate()
+            .map(|(i, chunk)| BatchSpec {
+                targets: chunk.to_vec(),
+                plan_seed: derive_seed(derive_seed(epoch_seed, &[i as u64]), &[0x17e2]),
+            })
+            .collect();
+        return executor::run_batches(trainer, ds, &specs, true, cfg);
+    }
     let mut out = Vec::new();
     for (i, chunk) in targets.chunks(batch_size).enumerate() {
         out.push(trainer.train_iteration(ds, chunk, derive_seed(epoch_seed, &[i as u64]))?);

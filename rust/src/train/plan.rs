@@ -1,0 +1,51 @@
+//! Plan stage of the split-parallel executor (DESIGN.md §Executor).
+//!
+//! Producing a mini-batch's [`SplitPlan`] (cooperative sampling + shuffle
+//! index, the paper's S phase) and gathering each device's non-overlapping
+//! input-feature rows (the L phase) depend only on the dataset, the
+//! partitioning, and the iteration seed — **not** on the model parameters.
+//! Packaging both as one [`PreparedBatch`] lets the serial executor consume
+//! it inline and lets the pipelined executor prepare batch *t+1* while the
+//! workers are still training batch *t* (the paper §6 inter-batch overlap).
+
+use crate::graph::Dataset;
+use crate::partition::Partitioning;
+use crate::split::{SplitPlan, SplitSampler};
+use crate::Vid;
+
+/// Everything the compute/exchange stages need for one mini-batch: the
+/// cooperative [`SplitPlan`] plus each device's gathered input-feature rows
+/// (ordered like `plan.input_frontier[d]`, which is also the order the
+/// bottom layer's shuffle `send` indices refer to).
+#[derive(Debug, Clone)]
+pub struct PreparedBatch {
+    pub plan: SplitPlan,
+    /// `feats[d]` — row-major `[input_frontier[d].len(), feat_dim]`.
+    pub feats: Vec<Vec<f32>>,
+}
+
+/// Run the plan stage for one mini-batch: sample + split cooperatively,
+/// then gather every device's own input frontier.
+///
+/// `plan_seed` must already be the per-iteration derived seed; the same
+/// seed always yields the same `PreparedBatch` regardless of which
+/// executor later consumes it.
+pub(super) fn prepare_batch(
+    sampler: &mut SplitSampler,
+    ds: &Dataset,
+    targets: &[Vid],
+    fanouts: &[usize],
+    part: &Partitioning,
+    plan_seed: u64,
+) -> PreparedBatch {
+    let plan = sampler.sample(&ds.graph, targets, fanouts, part, plan_seed);
+    // Loading: each device gathers ONLY its own input frontier (the
+    // paper's non-overlapping loads property).
+    let mut feats: Vec<Vec<f32>> = Vec::with_capacity(plan.k);
+    for d in 0..plan.k {
+        let mut buf = Vec::new();
+        ds.features.gather(&plan.input_frontier[d], &mut buf);
+        feats.push(buf);
+    }
+    PreparedBatch { plan, feats }
+}

@@ -1,0 +1,180 @@
+//! Serial reference executor: the cooperative forward (+ optional
+//! backward) pass of Algorithms 1–2, with every simulated device executed
+//! one after another on the calling thread.
+//!
+//! This is the semantic oracle for the threaded executor in
+//! [`executor`](super::executor): the pipelined path must reproduce these
+//! numerics **bit for bit** (DESIGN.md §Executor), so keep this code
+//! boring and keep every floating-point reduction in explicit, fixed
+//! device order.
+
+use anyhow::Result;
+
+use crate::graph::Dataset;
+use crate::train::plan::PreparedBatch;
+use crate::train::{IterStats, Trainer};
+
+impl<'a> Trainer<'a> {
+    /// The cooperative forward (+ optional backward) pass of Algorithms
+    /// 1–2, executed serially over all devices.
+    #[allow(clippy::type_complexity)]
+    pub(super) fn forward_backward(
+        &mut self,
+        ds: &Dataset,
+        prep: PreparedBatch,
+        backward: bool,
+    ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
+        let cfg = self.params.cfg.clone();
+        let PreparedBatch { plan, feats } = prep;
+        let k = plan.k;
+        let num_layers = plan.layers.len();
+        let kernel_k = self.fanouts[0];
+
+        // --- Forward, bottom-up; keep mixed inputs for the backward ---
+        // mixed[i][d]: the materialized mixed-frontier rows of layer i.
+        let mut mixed: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); k]; num_layers];
+        // Rows owned per device at the current boundary, starting from the
+        // input features the plan stage gathered.
+        let mut hidden: Vec<Vec<f32>> = feats;
+        for i in (0..num_layers).rev() {
+            let l = cfg.num_layers - 1 - i; // model layer (0 = bottom)
+            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
+            let relu = l + 1 < cfg.num_layers;
+            let layer = &plan.layers[i];
+            // Shuffle: materialize each device's mixed frontier from owned
+            // rows of the boundary below (all-to-all of Algorithm 2 line 5).
+            for d in 0..k {
+                let dl = &layer.per_dev[d];
+                let mut buf = vec![0f32; dl.mixed_src.len() * din];
+                for from in 0..k {
+                    let send = &layer.shuffle.send[from][d];
+                    let recv = &layer.shuffle.recv[d][from];
+                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
+                        let src = &hidden[from][s_idx as usize * din..(s_idx as usize + 1) * din];
+                        buf[r_idx as usize * din..(r_idx as usize + 1) * din]
+                            .copy_from_slice(src);
+                    }
+                }
+                mixed[i][d] = buf;
+            }
+            // Compute this layer's owned hidden rows per device.
+            let mut next_hidden: Vec<Vec<f32>> = Vec::with_capacity(k);
+            for d in 0..k {
+                let dl = &layer.per_dev[d];
+                if dl.num_dst() == 0 {
+                    next_hidden.push(Vec::new());
+                    continue;
+                }
+                let h = self.backend.layer_fwd(
+                    cfg.kind,
+                    din,
+                    dout,
+                    relu,
+                    &mixed[i][d],
+                    dl.mixed_src.len(),
+                    &dl.neigh,
+                    dl.num_dst(),
+                    kernel_k,
+                    &self.params.layers[l],
+                )?;
+                next_hidden.push(h);
+            }
+            hidden = next_hidden;
+        }
+
+        // --- Loss head per device (top-layer dst are the targets) ---
+        let c = cfg.num_classes;
+        let total_examples: usize = plan.layers[0].per_dev.iter().map(|dl| dl.num_dst()).sum();
+        let mut loss_sum = 0f32;
+        let mut correct = 0f32;
+        let mut g_out: Vec<Vec<f32>> = vec![Vec::new(); k];
+        for d in 0..k {
+            let dl = &plan.layers[0].per_dev[d];
+            let b_d = dl.num_dst();
+            if b_d == 0 {
+                continue;
+            }
+            let labels: Vec<i32> =
+                dl.dst.iter().map(|&v| ds.labels.labels[v as usize] as i32).collect();
+            let (out, g_logits) = self.backend.loss(&hidden[d], &labels, b_d, c)?;
+            loss_sum += out.loss * b_d as f32;
+            correct += out.correct;
+            if backward {
+                // Rescale device-mean gradient to global-mean.
+                let scale = 1.0 / total_examples as f32 * b_d as f32;
+                g_out[d] = g_logits.iter().map(|g| g * scale).collect();
+            }
+        }
+        let stats = IterStats {
+            loss: loss_sum / total_examples.max(1) as f32,
+            correct,
+            examples: total_examples,
+        };
+        if !backward {
+            return Ok((stats, None));
+        }
+
+        // --- Backward, top-down: per-layer VJP + reverse shuffle ---
+        let mut g_params: Vec<Vec<Vec<f32>>> = self
+            .params
+            .layers
+            .iter()
+            .map(|lp| lp.tensors.iter().map(|t| vec![0f32; t.len()]).collect())
+            .collect();
+        for i in 0..num_layers {
+            let l = cfg.num_layers - 1 - i;
+            let (din, dout) = (cfg.in_dim(l), cfg.out_dim(l));
+            let relu = l + 1 < cfg.num_layers;
+            let layer = &plan.layers[i];
+            // Gradient w.r.t. the owned rows of the boundary below.
+            let mut g_owned: Vec<Vec<f32>> = (0..k)
+                .map(|d| vec![0f32; plan.owned_rows(i, d).len() * din])
+                .collect();
+            for d in 0..k {
+                let dl = &layer.per_dev[d];
+                if dl.num_dst() == 0 || g_out[d].is_empty() {
+                    debug_assert!(!plan.bwd_active(i, d));
+                    continue;
+                }
+                debug_assert!(plan.bwd_active(i, d));
+                let grads = self.backend.layer_bwd(
+                    cfg.kind,
+                    din,
+                    dout,
+                    relu,
+                    &mixed[i][d],
+                    dl.mixed_src.len(),
+                    &dl.neigh,
+                    dl.num_dst(),
+                    kernel_k,
+                    &g_out[d],
+                    &self.params.layers[l],
+                )?;
+                for (acc, g) in g_params[l].iter_mut().zip(&grads.g_params) {
+                    for (a, b) in acc.iter_mut().zip(g) {
+                        *a += b;
+                    }
+                }
+                // Reverse shuffle: scatter-add mixed-row gradients back to
+                // the owners (gradients flow along the same shuffle index).
+                for from in 0..k {
+                    let send = &layer.shuffle.send[from][d];
+                    let recv = &layer.shuffle.recv[d][from];
+                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
+                        let src = &grads.g_x
+                            [r_idx as usize * din..(r_idx as usize + 1) * din];
+                        let dst = &mut g_owned[from]
+                            [s_idx as usize * din..(s_idx as usize + 1) * din];
+                        for (a, b) in dst.iter_mut().zip(src) {
+                            *a += b;
+                        }
+                    }
+                }
+            }
+            // The owned-row gradients become next layer's g_out (layer i+1
+            // dst rows); at the bottom they are input-feature grads: dropped.
+            g_out = g_owned;
+        }
+        Ok((stats, Some(g_params)))
+    }
+}

@@ -1,0 +1,157 @@
+//! Bit-equivalence of the threaded pipelined executor against the serial
+//! reference trainer (DESIGN.md §Executor determinism contract): for the
+//! same seed, `IterStats` (loss, correct, examples) and the post-epoch
+//! `ParamStore` must be **bit-identical** on `StandIn::Tiny` — across
+//! seeds, layer counts, worker counts, and under channel backpressure.
+
+use gsplit::graph::{Dataset, StandIn};
+use gsplit::model::{GnnKind, ModelConfig, ParamStore};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+
+const FANOUT: usize = 5;
+const K: usize = 4;
+
+fn tiny_cfg(num_layers: usize) -> ModelConfig {
+    // StandIn::Tiny: 32-dim features, degree-derived labels in 0..16.
+    ModelConfig { kind: GnnKind::GraphSage, feat_dim: 32, hidden: 32, num_classes: 16, num_layers }
+}
+
+fn modulo_part(ds: &Dataset, k: usize) -> Partitioning {
+    Partitioning {
+        assignment: (0..ds.graph.num_vertices() as u32).map(|v| (v % k as u32) as u16).collect(),
+        k,
+    }
+}
+
+fn assert_params_bit_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.tensors.len(), lb.tensors.len());
+        for (t, (ta, tb)) in la.tensors.iter().zip(&lb.tensors).enumerate() {
+            assert_eq!(ta.len(), tb.len());
+            for (i, (x, y)) in ta.iter().zip(tb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: param layer {l} tensor {t} elem {i}: {x} != {y}"
+                );
+            }
+        }
+    }
+}
+
+fn assert_stats_bit_identical(a: &[IterStats], b: &[IterStats], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: iteration counts differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.examples, y.examples, "{what}: iter {i} examples");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: iter {i} loss {} != {}", x.loss, y.loss);
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "{what}: iter {i} correct");
+    }
+}
+
+/// Train one epoch serially and one epoch with the given pipeline config,
+/// from identical initial states, and demand bit-identical outcomes.
+fn check_epoch_equivalence(num_layers: usize, seed: u64, pipeline: PipelineConfig, what: &str) {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(num_layers);
+    let part = modulo_part(&ds, K);
+    let backend = NativeBackend::new();
+
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, seed).unwrap();
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, seed).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(pipeline));
+    assert_params_bit_identical(&serial.params, &pipelined.params, "init");
+
+    let a = train_epoch(&mut serial, &ds, 512, seed).unwrap();
+    let b = train_epoch(&mut pipelined, &ds, 512, seed).unwrap();
+    assert!(!a.is_empty(), "epoch must contain iterations");
+    assert_stats_bit_identical(&a, &b, what);
+    assert_params_bit_identical(&serial.params, &pipelined.params, what);
+}
+
+#[test]
+fn pipelined_epoch_bit_identical_across_worker_counts() {
+    // Acceptance matrix: worker counts 1, 2, and k on the 3-layer model.
+    for workers in [1usize, 2, K] {
+        check_epoch_equivalence(
+            3,
+            42,
+            PipelineConfig::with_workers(workers),
+            &format!("3-layer workers={workers}"),
+        );
+    }
+}
+
+#[test]
+fn pipelined_epoch_bit_identical_across_layer_counts() {
+    for num_layers in [1usize, 2, 3] {
+        check_epoch_equivalence(
+            num_layers,
+            42,
+            PipelineConfig::with_workers(2),
+            &format!("{num_layers}-layer workers=2"),
+        );
+    }
+}
+
+#[test]
+fn pipelined_epoch_bit_identical_across_seeds() {
+    for seed in [1u64, 0xC0FFEE] {
+        check_epoch_equivalence(
+            2,
+            seed,
+            PipelineConfig::with_workers(2),
+            &format!("2-layer seed={seed}"),
+        );
+    }
+}
+
+#[test]
+fn backpressure_stress_still_bit_identical() {
+    // Single-row chunks through capacity-1 channels: maximal backpressure,
+    // workers must interleave sends with receives to make progress — and
+    // the results must not change at all.
+    let stress = PipelineConfig { workers: 3, channel_cap: 1, chunk_rows: 1 };
+    check_epoch_equivalence(2, 9, stress, "backpressure stress");
+}
+
+#[test]
+fn pipelined_evaluate_matches_serial() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(3);
+    let part = modulo_part(&ds, K);
+    let backend = NativeBackend::new();
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 5).unwrap();
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 5).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(K)));
+    let targets = &ds.labels.val_set[..256];
+    let a = serial.evaluate(&ds, targets, 77).unwrap();
+    let b = pipelined.evaluate(&ds, targets, 77).unwrap();
+    assert_eq!(a.examples, b.examples);
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    assert_eq!(a.correct.to_bits(), b.correct.to_bits());
+    // Forward-only evaluation must not touch parameters.
+    assert_params_bit_identical(&serial.params, &pipelined.params, "evaluate");
+}
+
+#[test]
+fn single_iteration_and_single_device_paths() {
+    // k = 1 (self-channel only) and a one-off pipelined train_iteration.
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let part = modulo_part(&ds, 1);
+    let backend = NativeBackend::new();
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 3).unwrap();
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 3).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+    let epoch_targets = ds.epoch_targets(0);
+    let targets = &epoch_targets[..192];
+    let a = serial.train_iteration(&ds, targets, 0).unwrap();
+    let b = pipelined.train_iteration(&ds, targets, 0).unwrap();
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    assert_eq!(a.correct.to_bits(), b.correct.to_bits());
+    assert_eq!(a.examples, b.examples);
+    assert_params_bit_identical(&serial.params, &pipelined.params, "k=1 iteration");
+}
