@@ -13,11 +13,21 @@
 //! (one worker pool per epoch, sampling-ahead overlap; bit-identical to
 //! serial for the same seed — see DESIGN.md §Executor).
 //!
+//! Pass `--cache-policy distributed|partitioned` (with `--cache-budget`
+//! rows per GPU) to serve input features from per-GPU resident caches —
+//! numerics are unchanged, the final loading byte split shows where bytes
+//! came from (DESIGN.md §Loading).
+//!
 //! Run: `cargo run --release --example train_sage -- --iters 300`
 //!  or: `cargo run --release --example train_sage -- --parallel-workers 4`
+//!  or: `cargo run --release --example train_sage -- --cache-policy partitioned`
+
+use std::sync::Arc;
 
 use anyhow::Result;
+use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
 use gsplit::cli::Args;
+use gsplit::devices::Topology;
 use gsplit::graph::Dataset;
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::opts;
@@ -39,6 +49,8 @@ fn main() -> Result<()> {
         ("lr", true, "learning rate (default 0.25)"),
         ("seed", true, "seed (default 42)"),
         ("parallel-workers", true, "pipelined-executor worker threads (0 = serial, default 0)"),
+        ("cache-policy", true, "feature cache: none|distributed|partitioned (default none)"),
+        ("cache-budget", true, "cached feature rows per simulated GPU (default 4096)"),
     ];
     let a = Args::from_env(spec, "end-to-end split-parallel GraphSage training")?;
     let iters = a.get_usize("iters", 300)?;
@@ -91,6 +103,34 @@ fn main() -> Result<()> {
     let mut trainer =
         Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?
             .with_parallel_workers(workers);
+
+    // Optional cache-aware loading stage, ranked by pre-sampling
+    // frequency (DESIGN.md §Loading). Numerics are identical at any
+    // policy/budget; only the loading byte split below changes.
+    let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    if policy != CachePolicy::None {
+        anyhow::ensure!(
+            (1..=8).contains(&k),
+            "--cache-policy needs a modeled topology: --gpus must be between 1 and 8"
+        );
+        let budget = a.get_u64("cache-budget", 4096)?;
+        let topo = Topology::for_gpus(k, 1.0);
+        let cache = Arc::new(ResidentCache::build(
+            policy,
+            &pw.vertex,
+            budget,
+            trainer.partitioning(),
+            &topo,
+            &ds.features,
+        ));
+        println!(
+            "# cache: {} | {budget} rows/GPU | coverage {:.1}%",
+            policy.name(),
+            cache.placement().coverage() * 100.0
+        );
+        trainer.set_cache(Some(cache))?;
+    }
+
     match trainer.exec_mode() {
         ExecMode::Serial => println!("# executor: serial"),
         ExecMode::Pipelined(p) => {
@@ -137,6 +177,13 @@ fn main() -> Result<()> {
         val_acc,
         total,
         1.0 / cfg.num_classes as f32
+    );
+    let split = LoadStats::sum(trainer.load_stats());
+    println!(
+        "# loading: local {} | peer(nvlink) {} | host(pcie) {}",
+        gsplit::util::fmt_bytes(split.local_bytes),
+        gsplit::util::fmt_bytes(split.peer_bytes),
+        gsplit::util::fmt_bytes(split.host_bytes),
     );
     if val_acc < 2.0 / cfg.num_classes as f32 {
         anyhow::bail!("training failed to beat the random baseline");

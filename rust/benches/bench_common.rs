@@ -4,6 +4,11 @@
 //! under `target/bench_cache/` so re-running individual benches doesn't
 //! repeat minutes of identical offline work. Set `GSPLIT_BENCH_QUICK=1`
 //! to cap per-epoch iterations (scaled extrapolation) while iterating.
+//!
+//! `BENCH_SMOKE=1` (CI's `bench-smoke` job) additionally swaps every
+//! paper stand-in for `StandIn::Tiny`: each bench still exercises its full
+//! code path and emits its `BENCH_<suite>.json` report, in seconds instead
+//! of minutes. Smoke numbers are correctness probes, not measurements.
 
 #![allow(dead_code)]
 
@@ -28,8 +33,33 @@ pub const BATCH: usize = 1024;
 /// 10/30 sweep itself is in fig6_ablations).
 pub const PRESAMPLE_EPOCHS: usize = 3;
 
+/// CI smoke mode: tiny graphs, capped iterations, JSON output still
+/// emitted and validated.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok()
+}
+
 pub fn quick() -> bool {
-    std::env::var("GSPLIT_BENCH_QUICK").is_ok()
+    smoke() || std::env::var("GSPLIT_BENCH_QUICK").is_ok()
+}
+
+/// The stand-ins a bench iterates: the requested paper graphs normally,
+/// just `Tiny` under `BENCH_SMOKE=1`.
+pub fn smoke_standins(full: &[StandIn]) -> Vec<StandIn> {
+    if smoke() {
+        vec![StandIn::Tiny]
+    } else {
+        full.to_vec()
+    }
+}
+
+/// One stand-in, smoke-aware.
+pub fn smoke_standin(full: StandIn) -> StandIn {
+    if smoke() {
+        StandIn::Tiny
+    } else {
+        full
+    }
 }
 
 /// Max iterations actually executed per epoch (rest extrapolated — batches
@@ -171,7 +201,7 @@ pub fn build_gsplit(ctx: &EngineCtx, strategy: Strategy, batch: usize) -> SplitP
 }
 
 pub fn all_datasets() -> Vec<Dataset> {
-    StandIn::all_paper().iter().map(|s| s.load().expect("dataset")).collect()
+    smoke_standins(&StandIn::all_paper()).iter().map(|s| s.load().expect("dataset")).collect()
 }
 
 /// Format a speedup column like the paper ("4.4×"; empty for the baseline).

@@ -5,24 +5,38 @@
 //!     dominates DGL; P3* trades loading for shuffle-heavy FB).
 //! (b) percentage breakdown for Quiver on Orkut and Papers100M with
 //!     GraphSage (loading stays significant even with distributed caching).
+//! (+) loading-stage byte split of the **real-compute trainer** under each
+//!     cache policy (DESIGN.md §Loading): Local / NVLink-peer / PCIe-host
+//!     bytes must be nonzero where the policy predicts them and must sum
+//!     to the uncached total — caching re-routes bytes, it never changes
+//!     how many rows the model consumes.
 
 #[path = "bench_common.rs"]
 mod bench_common;
 
+use std::sync::Arc;
+
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
+use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
 use gsplit::devices::Topology;
 use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull};
-use gsplit::graph::StandIn;
-use gsplit::model::GnnKind;
-use gsplit::util::{fmt_secs, Table};
+use gsplit::graph::{Dataset, StandIn};
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::train::{train_epoch, Trainer};
+use gsplit::util::{fmt_bytes, fmt_secs, Table};
+use gsplit::Vid;
 
 fn main() {
+    let mut suite = BenchSuite::new("fig3_breakdown");
     println!("Figure 3(a) — epoch breakdown of DGL / Quiver / P3* (modeled seconds)\n");
     let mut table =
         Table::new(&["Graph", "Model", "System", "S", "L", "FB", "Total(s)", "L %"]).left(0).left(1).left(2);
     let mut quiver_pct: Vec<(String, f64, f64, f64)> = Vec::new();
 
-    for standin in [StandIn::OrkutS, StandIn::PapersS] {
+    for standin in smoke_standins(&[StandIn::OrkutS, StandIn::PapersS]) {
         let ds = standin.load().expect("dataset");
         for kind in [GnnKind::GraphSage, GnnKind::Gat] {
             let ctx = EngineCtx::new(
@@ -48,9 +62,17 @@ fn main() {
                 ]);
                 t
             };
-            run("DGL", &mut DataParallel::dgl(&ctx));
+            let mut record = |sys: &str, t: gsplit::costmodel::PhaseBreakdown| {
+                let base = format!("{}/{}/{sys}", ds.spec.name, kind.name());
+                suite.metric(&format!("{base}/loading_s"), t.loading);
+                suite.metric(&format!("{base}/total_s"), t.total());
+            };
+            let td = run("DGL", &mut DataParallel::dgl(&ctx));
             let tq = run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH));
-            run("P3*", &mut PushPull::new(&ctx, BATCH));
+            let tp = run("P3*", &mut PushPull::new(&ctx, BATCH));
+            record("dgl", td);
+            record("quiver", tq);
+            record("p3", tp);
             table.sep();
             if kind == GnnKind::GraphSage {
                 quiver_pct.push((
@@ -73,5 +95,95 @@ fn main() {
     println!(
         "\nPaper: DGL loading >60% of epoch time; Quiver cuts Orkut loading via NVLink cache\n\
          but Papers100M loading stays high (~30%); P3* has lowest L but highest FB."
+    );
+
+    loading_split_section(&mut suite);
+    suite.finish();
+}
+
+/// Run the real-compute trainer's cache-aware loading stage under every
+/// policy and report (and assert) the Local / Peer / Host byte split.
+fn loading_split_section(suite: &mut BenchSuite) {
+    println!("\nLoading-stage byte split — real-compute trainer, per cache policy\n");
+    let k = 4usize;
+    let n_vertices = if quick() { 2048 } else { 8192 };
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: 32,
+        hidden: 32,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let ds = Dataset::sbm_learnable(n_vertices, cfg.num_classes, cfg.feat_dim, 0.6, SEED);
+    let part = Partitioning {
+        assignment: (0..n_vertices as Vid).map(|v| (v % k as Vid) as u16).collect(),
+        k,
+    };
+    let topo = Topology::p3_8xlarge(1.0);
+    let ranking: Vec<u64> =
+        (0..n_vertices as Vid).map(|v| ds.graph.degree(v) as u64).collect();
+    // Budget at ~1/8 of the graph per device: enough that Local and Peer
+    // hits are common while plenty of rows still miss to host memory.
+    let budget = (n_vertices / 8) as u64;
+    let backend = NativeBackend::new();
+    let batch = 256usize;
+
+    let mut table =
+        Table::new(&["Policy", "Local", "Peer (NVLink)", "Host (PCIe)", "Total"]).left(0);
+    let mut uncached_total: Option<u64> = None;
+    for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+        let mut trainer =
+            Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED).expect("trainer");
+        if policy != CachePolicy::None {
+            let cache = ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features);
+            trainer.set_cache(Some(Arc::new(cache))).expect("cache fits trainer");
+        }
+        train_epoch(&mut trainer, &ds, batch, 0).expect("epoch");
+        let split = LoadStats::sum(trainer.load_stats());
+        table.row(vec![
+            policy.name().to_string(),
+            fmt_bytes(split.local_bytes),
+            fmt_bytes(split.peer_bytes),
+            fmt_bytes(split.host_bytes),
+            fmt_bytes(split.total()),
+        ]);
+        for (kind, bytes) in [
+            ("local_bytes", split.local_bytes),
+            ("peer_bytes", split.peer_bytes),
+            ("host_bytes", split.host_bytes),
+        ] {
+            suite.metric(&format!("trainer_load/{}/{kind}", policy.name()), bytes as f64);
+        }
+
+        // The acceptance invariants: every policy materializes exactly the
+        // uncached byte volume, and the distributed policy produces a
+        // nonzero three-way split on the all-NVLink 4-GPU host.
+        match uncached_total {
+            None => {
+                assert_eq!(split.local_bytes + split.peer_bytes, 0, "no cache, no hits");
+                uncached_total = Some(split.total());
+            }
+            Some(total) => assert_eq!(
+                split.total(),
+                total,
+                "{}: Local/Peer/Host split must sum to the uncached total",
+                policy.name()
+            ),
+        }
+        if policy == CachePolicy::Distributed {
+            assert!(
+                split.local_bytes > 0 && split.peer_bytes > 0 && split.host_bytes > 0,
+                "distributed policy must produce a nonzero Local/Peer/Host split, got {split:?}"
+            );
+        }
+        if policy == CachePolicy::Partitioned {
+            assert_eq!(split.peer_bytes, 0, "owner-consistent cache never fetches from peers");
+            assert!(split.local_bytes > 0);
+        }
+    }
+    table.print();
+    println!(
+        "\nGSplit's partitioned cache serves hits locally (owner-consistent, zero peer\n\
+         traffic); Quiver-style distributed caching trades host loads for NVLink pulls."
     );
 }

@@ -9,6 +9,7 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::graph::StandIn;
 use gsplit::partition::{evaluate_minibatch, Strategy};
 use gsplit::rng::{derive_seed, Pcg32};
@@ -23,11 +24,12 @@ fn pctl(sorted: &[f64], q: f64) -> f64 {
 }
 
 fn main() {
+    let mut suite = BenchSuite::new("fig5_splitting");
     println!(
         "Figure 5 — splitting quality per mini-batch on Papers100M (4 splits,\n\
          fanout 15, 3 layers, batch 1024): workload imbalance and % cross edges.\n"
     );
-    let ds = StandIn::PapersS.load().expect("dataset");
+    let ds = smoke_standin(StandIn::PapersS).load().expect("dataset");
     let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
     let fanouts = vec![FANOUT; LAYERS];
     let strategies =
@@ -53,6 +55,8 @@ fn main() {
         imbs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         crosses.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        suite.metric(&format!("{strat:?}/imbalance_mean"), mean(&imbs));
+        suite.metric(&format!("{strat:?}/cross_pct_mean"), mean(&crosses));
         imb.row(vec![
             format!("{strat:?}"),
             format!("{:.2}", pctl(&imbs, 0.1)),
@@ -76,4 +80,5 @@ fn main() {
         "\nPaper (Fig. 5): Rand ≈ perfectly balanced but ~75% cross edges; Edge cuts well\n\
          but imbalanced; Node ≈ 9% cross; GSplit ≈ 5% cross with near-balanced load."
     );
+    suite.finish();
 }

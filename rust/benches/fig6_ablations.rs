@@ -13,6 +13,7 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::cache::FeatureCache;
 use gsplit::devices::Topology;
 use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
@@ -41,7 +42,8 @@ fn run_all(
 }
 
 fn main() {
-    let ds = StandIn::FriendsterS.load().expect("dataset");
+    let mut suite = BenchSuite::new("fig6_ablations");
+    let ds = smoke_standin(StandIn::FriendsterS).load().expect("dataset");
     let topo = || Topology::p3_8xlarge(ds.spec.scale_divisor);
     let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
 
@@ -52,6 +54,7 @@ fn main() {
             let ctx = EngineCtx::new(&ds, topo(), kind, hidden, LAYERS, FANOUT);
             let r = run_all(&ctx, &w, BATCH);
             let g = r.iter().find(|(n, _)| n == "GSplit").unwrap().1;
+            suite.metric(&format!("hidden{hidden}/{}/gsplit_total_s", kind.name()), g);
             let best = r.iter().filter(|(n, _)| n != "GSplit").map(|(_, t)| *t).fold(f64::MAX, f64::min);
             t.row(vec![
                 hidden.to_string(),
@@ -72,6 +75,7 @@ fn main() {
         let ctx = EngineCtx::new(&ds, topo(), GnnKind::GraphSage, 128, LAYERS, FANOUT);
         let r = run_all(&ctx, &w, batch);
         let g = r.iter().find(|(n, _)| n == "GSplit").unwrap().1;
+        suite.metric(&format!("batch{batch}/gsplit_total_s"), g);
         let best = r.iter().filter(|(n, _)| n != "GSplit").map(|(_, t)| *t).fold(f64::MAX, f64::min);
         t.row(vec![
             batch.to_string(),
@@ -91,6 +95,7 @@ fn main() {
         let ctx = EngineCtx::new(&ds, topo(), GnnKind::GraphSage, 128, layers, fanout);
         let r = run_all(&ctx, &wl, BATCH);
         let g = r.iter().find(|(n, _)| n == "GSplit").unwrap().1;
+        suite.metric(&format!("layers{layers}/gsplit_total_s"), g);
         let best = r.iter().filter(|(n, _)| n != "GSplit").map(|(_, t)| *t).fold(f64::MAX, f64::min);
         t.row(vec![
             layers.to_string(),
@@ -110,7 +115,7 @@ fn main() {
 
     // --- extra ablation 1: pre-sampling epoch count (§7.3) ---
     println!("\nAblation — pre-sampling epochs vs splitting quality (Papers100M)\n");
-    let dsp = StandIn::PapersS.load().expect("dataset");
+    let dsp = smoke_standin(StandIn::PapersS).load().expect("dataset");
     let mut t = Table::new(&["Presample epochs", "Cut frac", "Imbalance"]).left(0);
     for epochs in [2usize, 10, 30] {
         if quick() && epochs > 10 {
@@ -119,6 +124,7 @@ fn main() {
         let w = presample_cached(&dsp, epochs, FANOUT, LAYERS);
         let part = partition_cached(&dsp, &w, Strategy::GSplit, 4);
         let q = evaluate_partitioning(&dsp.graph, &w, &part);
+        suite.metric(&format!("presample{epochs}/cut_fraction"), q.cut_fraction());
         t.row(vec![
             epochs.to_string(),
             format!("{:.4}", q.cut_fraction()),
@@ -142,6 +148,7 @@ fn main() {
         let coverage = cache.coverage();
         let mut e = SplitParallel::new(&ctx, part.clone(), ranking, BATCH);
         let time = epoch_time(&mut e, &ctx, BATCH, SEED, iter_cap()).1;
+        suite.metric(&format!("cache_ranking/{name}/loading_s"), time.loading);
         t.row(vec![
             name.to_string(),
             format!("{:.1}%", coverage * 100.0),
@@ -149,4 +156,5 @@ fn main() {
         ]);
     }
     t.print();
+    suite.finish();
 }

@@ -10,6 +10,7 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::devices::Topology;
 use gsplit::exec::{DataParallel, EngineCtx, SplitParallel};
 use gsplit::model::GnnKind;
@@ -17,6 +18,7 @@ use gsplit::partition::Strategy;
 use gsplit::util::{fmt_secs, Table};
 
 fn main() {
+    let mut suite = BenchSuite::new("fig6_scaling");
     let kind = GnnKind::GraphSage;
     println!("Figure 6(a) — single-host scaling (epoch seconds; speedup = system/GSplit)\n");
     let mut ta =
@@ -32,6 +34,9 @@ fn main() {
             let part = partition_cached(&ds, &w, Strategy::GSplit, gpus);
             let mut gs = SplitParallel::new(&ctx, part, &w.vertex, BATCH);
             let t_g = epoch_time(&mut gs, &ctx, BATCH, SEED, iter_cap()).1;
+            for (sys, t) in [("dgl", &t_dgl), ("quiver", &t_q), ("gsplit", &t_g)] {
+                suite.metric(&format!("{}/gpus{gpus}/{sys}/total_s", ds.spec.name), t.total());
+            }
             ta.row(vec![
                 ds.spec.paper_name.to_string(),
                 gpus.to_string(),
@@ -61,6 +66,9 @@ fn main() {
             let part = partition_cached(&ds, &w, Strategy::GSplit, k);
             let mut gs = SplitParallel::new(&ctx, part, &w.vertex, BATCH);
             let t_g = epoch_time(&mut gs, &ctx, BATCH, SEED, iter_cap()).1;
+            for (sys, t) in [("dgl", &t_dgl), ("quiver", &t_q), ("gsplit", &t_g)] {
+                suite.metric(&format!("{}/hosts{hosts}/{sys}/total_s", ds.spec.name), t.total());
+            }
             tb.row(vec![
                 ds.spec.paper_name.to_string(),
                 hosts.to_string(),
@@ -78,4 +86,5 @@ fn main() {
         "\nPaper: GSplit's speedups grow with GPU count (more redundancy to avoid; no cache\n\
          replication on the 8-GPU cube mesh) and persist across hosts with hybrid parallelism."
     );
+    suite.finish();
 }

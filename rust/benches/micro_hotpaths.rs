@@ -8,7 +8,7 @@
 mod bench_common;
 
 use bench_common::*;
-use gsplit::bench_harness::{section, Bench};
+use gsplit::bench_harness::{section, Bench, BenchSuite};
 use gsplit::graph::{Dataset, StandIn};
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::{partition_graph, Partitioning, Strategy};
@@ -22,7 +22,8 @@ use gsplit::util::timer::timed;
 use gsplit::Vid;
 
 fn main() {
-    let ds = StandIn::OrkutS.load().expect("dataset");
+    let mut suite = BenchSuite::new("micro_hotpaths");
+    let ds = smoke_standin(StandIn::OrkutS).load().expect("dataset");
     let bench = if quick() { Bench::quick() } else { Bench::default().with_budget(3.0) };
     let fanouts = vec![FANOUT; LAYERS];
     let targets: Vec<Vid> = ds.epoch_targets(SEED).into_iter().take(BATCH).collect();
@@ -35,11 +36,12 @@ fn main() {
     // Measure edges/s: pre-measure edge count of one batch.
     let probe = sampler.sample(&ds.graph, &targets, &fanouts, &mut Pcg32::new(1));
     let edges = probe.total_edges() as f64;
-    bench.run("sample_minibatch", Some(edges), || {
+    let s = bench.run("sample_minibatch", Some(edges), || {
         seed_ctr += 1;
         let mut rng = Pcg32::new(derive_seed(SEED, &[seed_ctr]));
         sampler.sample_into(&ds.graph, &targets, &fanouts, &mut rng, &mut mb);
     });
+    suite.record(&s);
 
     // --- cooperative split-parallel sampling (includes online splitting +
     //     shuffle-index construction) ---
@@ -48,10 +50,11 @@ fn main() {
     let mask = vec![false; ds.graph.num_vertices()];
     let part = partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.05, SEED);
     let mut ss = SplitSampler::new(4);
-    bench.run("split_sample_minibatch", Some(edges), || {
+    let s = bench.run("split_sample_minibatch", Some(edges), || {
         seed_ctr += 1;
         ss.sample(&ds.graph, &targets, &fanouts, &part, seed_ctr)
     });
+    suite.record(&s);
 
     // --- vertex map ---
     section("VertexMap get_or_insert (1M mixed ops)");
@@ -60,7 +63,7 @@ fn main() {
         (0..1_000_000).map(|_| rng.gen_range(200_000)).collect()
     };
     let mut vm = VertexMap::new();
-    bench.run("vertex_map_1M", Some(1e6), || {
+    let s = bench.run("vertex_map_1M", Some(1e6), || {
         vm.reset(300_000);
         let mut acc = 0u32;
         for &k in &keys {
@@ -68,23 +71,26 @@ fn main() {
         }
         acc
     });
+    suite.record(&s);
 
     // --- partitioner ---
     section("multilevel partitioner (orkut-s, k=4)");
     let bench_slow = if quick() { Bench::quick() } else { Bench::default().with_budget(10.0) };
-    bench_slow.run("partition_orkut_s", None, || {
+    let s = bench_slow.run("partition_orkut_s", None, || {
         partition_graph(&ds.graph, &w, &mask, Strategy::Edge, 4, 0.05, SEED)
     });
+    suite.record(&s);
 
     // --- feature gather (loading path) ---
     section("feature row gather (orkut-s rows, 512 dims)");
     let inputs: Vec<Vid> = probe.input_vertices().to_vec();
     let mut buf = Vec::new();
     let bytes = inputs.len() as f64 * ds.features.row_bytes() as f64;
-    bench.run("gather_input_rows", Some(bytes), || {
+    let s = bench.run("gather_input_rows", Some(bytes), || {
         ds.features.gather(&inputs, &mut buf);
         buf.len()
     });
+    suite.record(&s);
 
     // --- threaded pipelined executor: real-compute epoch wall-clock ---
     // Same seeds ⇒ bit-identical numerics (asserted below); the speedup
@@ -113,6 +119,7 @@ fn main() {
         "serial                       {t_serial:>8.3} s/epoch   ({} iterations)",
         serial_stats.len()
     );
+    suite.metric("executor/serial_epoch_s", t_serial);
     for workers in [2usize, 4] {
         let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
         tr.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
@@ -125,5 +132,39 @@ fn main() {
             "pipelined --parallel-workers {workers} {t:>8.3} s/epoch   speedup {:.2}x (bit-identical)",
             t_serial / t
         );
+        suite.metric(&format!("executor/pipelined_w{workers}_epoch_s"), t);
     }
+
+    // --- cache-aware loading: distributed-policy epoch through the
+    // pipelined executor's pre-forward exchange phase, still bit-identical
+    // to the uncached serial reference (DESIGN.md §Loading).
+    {
+        let topo = gsplit::devices::Topology::p3_8xlarge(1.0);
+        let ranking: Vec<u64> =
+            (0..n_vertices as Vid).map(|v| tds.graph.degree(v) as u64).collect();
+        let cache = std::sync::Arc::new(gsplit::cache::ResidentCache::build(
+            gsplit::cache::CachePolicy::Distributed,
+            &ranking,
+            (n_vertices / 8) as u64,
+            &tpart,
+            &topo,
+            &tds.features,
+        ));
+        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
+        tr.set_cache(Some(cache)).unwrap();
+        tr.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(4)));
+        let (t, stats) = timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("cached epoch"));
+        assert!(
+            serial_stats.iter().zip(&stats).all(|(a, b)| a.loss.to_bits() == b.loss.to_bits()),
+            "cache-aware pipelined executor diverged from the uncached serial reference"
+        );
+        let peer: u64 = tr.load_stats().iter().map(|s| s.peer_bytes).sum();
+        println!(
+            "pipelined + distributed cache {t:>7.3} s/epoch   ({} peer-exchanged, bit-identical)",
+            gsplit::util::fmt_bytes(peer)
+        );
+        suite.metric("executor/pipelined_cached_epoch_s", t);
+        suite.metric("executor/cached_peer_bytes", peer as f64);
+    }
+    suite.finish();
 }

@@ -9,11 +9,13 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::partition::{evaluate_partitioning, partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
 use gsplit::util::{timer::timed, Table};
 
 fn main() {
+    let mut suite = BenchSuite::new("offline_cost");
     println!("Offline splitting-algorithm cost (measured wall-clock on this host)\n");
     let epochs = if quick() { 2 } else { 10 };
     let mut t = Table::new(&[
@@ -41,6 +43,9 @@ fn main() {
         let (t_part, part) =
             timed(|| partition_graph(&ds.graph, &w, &mask, Strategy::GSplit, 4, 0.05, SEED));
         let q = evaluate_partitioning(&ds.graph, &w, &part);
+        suite.metric(&format!("{}/presample_s", ds.spec.name), t_pre);
+        suite.metric(&format!("{}/partition_s", ds.spec.name), t_part);
+        suite.metric(&format!("{}/cut_fraction", ds.spec.name), q.cut_fraction());
         t.row(vec![
             ds.spec.paper_name.to_string(),
             format!("{t_pre:.1}"),
@@ -55,4 +60,5 @@ fn main() {
          METIS partition 14s / 78s / 534s on 96 threads. One-time costs, amortized across runs.\n\
          (Pre-sampling epochs = {epochs}; the 10/30/100-epoch sensitivity sweep is in fig6_ablations.)"
     );
+    suite.finish();
 }

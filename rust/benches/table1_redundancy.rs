@@ -7,12 +7,14 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::rng::{derive_seed, Pcg32};
 use gsplit::sampling::Sampler;
 use gsplit::util::{fmt_count, Table};
 use gsplit::Vid;
 
 fn main() {
+    let mut suite = BenchSuite::new("table1_redundancy");
     println!("Table 1 — redundancy of data parallelism (micro 4×1024 vs mini 1×4096)\n");
     let mut table = Table::new(&[
         "Graph", "Edges Micro", "Edges Mini", "Ratio", "Feat Micro", "Feat Mini", "Ratio",
@@ -53,6 +55,14 @@ fn main() {
         }
         let scale = total_iters as f64 / run_iters as f64;
         let s = |x: u64| (x as f64 * scale) as u64;
+        suite.metric(
+            &format!("{}/edge_ratio", ds.spec.name),
+            e_micro as f64 / e_mini as f64,
+        );
+        suite.metric(
+            &format!("{}/feat_ratio", ds.spec.name),
+            f_micro as f64 / f_mini as f64,
+        );
         table.row(vec![
             ds.spec.paper_name.to_string(),
             fmt_count(s(e_micro)),
@@ -68,4 +78,5 @@ fn main() {
         "\nPaper (Table 1): Orkut 1.2x/2.5x, Papers100M 1.2x/1.5x, Friendster 1.0x/1.2x\n\
          (compute ratio / loading ratio; stand-ins should land in the same bands)"
     );
+    suite.finish();
 }

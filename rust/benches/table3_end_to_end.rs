@@ -8,13 +8,15 @@
 mod bench_common;
 
 use bench_common::*;
+use gsplit::bench_harness::BenchSuite;
 use gsplit::devices::Topology;
 use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
 use gsplit::model::GnnKind;
 use gsplit::partition::Strategy;
-use gsplit::util::{fmt_secs, Table};
+use gsplit::util::{fmt_bytes, fmt_secs, Table};
 
 fn main() {
+    let mut suite = BenchSuite::new("table3_end_to_end");
     println!(
         "Table 3 — epoch time (modeled seconds on the simulated 4×V100 host).\n\
          S = sampling, L = loading, FB = forward+backward; speedup = Total / GSplit Total.\n"
@@ -29,8 +31,16 @@ fn main() {
             let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
 
             let mut rows: Vec<(String, gsplit::costmodel::PhaseBreakdown)> = Vec::new();
+            let mut gsplit_load: Option<(u64, u64, u64)> = None;
             let mut run = |name: &str, engine: &mut dyn Engine| {
-                let (_, t) = epoch_time(engine, &ctx, BATCH, SEED, iter_cap());
+                let (c, t) = epoch_time(engine, &ctx, BATCH, SEED, iter_cap());
+                if name == "GSplit" {
+                    gsplit_load = Some((
+                        c.local_load_bytes.iter().sum(),
+                        c.peer_load.total_remote(),
+                        c.host_load_bytes.iter().sum(),
+                    ));
+                }
                 rows.push((name.to_string(), t));
             };
             run("DGL", &mut DataParallel::dgl(&ctx));
@@ -52,6 +62,10 @@ fn main() {
                 } else {
                     speedup(t.total(), gsplit_total)
                 };
+                suite.metric(
+                    &format!("{}/{}/{name}/total_s", ds.spec.name, kind.name()),
+                    t.total(),
+                );
                 table.row(vec![
                     ds.spec.paper_name.to_string(),
                     name.clone(),
@@ -64,6 +78,16 @@ fn main() {
                 ]);
             }
             table.sep();
+            if let Some((local, peer, host)) = gsplit_load {
+                println!(
+                    "  [{} / {}] GSplit loading split: local {} | peer {} | host {}",
+                    ds.spec.paper_name,
+                    kind.name(),
+                    fmt_bytes(local),
+                    fmt_bytes(peer),
+                    fmt_bytes(host),
+                );
+            }
         }
     }
     table.print();
@@ -73,4 +97,5 @@ fn main() {
          Friendster: DGL 2.9x/1.7x, P3* 4.1x/3.0x, Quiver 1.6x/1.2x, Edge 1.3x/1.4x (Sage/GAT).\n\
          Expectation on stand-ins: same ordering and crossovers (absolute seconds are scaled by 1/divisor)."
     );
+    suite.finish();
 }

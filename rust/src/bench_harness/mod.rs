@@ -1,8 +1,33 @@
 //! Micro-benchmark harness (criterion is unavailable offline): warmup,
 //! timed iterations, and robust statistics. Used by `rust/benches/*.rs`
 //! (compiled with `harness = false`).
+//!
+//! Besides the human-readable report, every bench records its cases into a
+//! [`BenchSuite`] and finishes by writing `BENCH_<suite>.json` — the
+//! machine-readable output CI's `bench-smoke` job collects and
+//! `tools/check_bench_json.rs` validates. The JSON contract (one object
+//! per file):
+//!
+//! ```json
+//! {
+//!   "suite": "<suite name>",
+//!   "git_rev": "<short rev or 'unknown'>",
+//!   "cases": [
+//!     {"name": "...", "iters": 12, "mean_s": 0.1, "median_s": 0.1,
+//!      "p95_s": 0.12, "min_s": 0.09, "throughput_per_s": 1234.5}
+//!   ]
+//! }
+//! ```
+//!
+//! `throughput_per_s` is `null` for cases without an item count. Derived
+//! scalar results (modeled epoch seconds, ratios, byte counts) are
+//! recorded via [`BenchSuite::metric`], which stores the value in all four
+//! statistics fields with `iters = 1`, so one schema covers every case.
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use crate::util::JsonValue;
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -20,6 +45,26 @@ pub struct BenchStats {
 impl BenchStats {
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n / self.mean_s)
+    }
+
+    /// One JSON case object of the `BENCH_<suite>.json` contract (see the
+    /// module docs).
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("name", JsonValue::str(&self.name)),
+            ("iters", JsonValue::num(self.iters as f64)),
+            ("mean_s", JsonValue::num(self.mean_s)),
+            ("median_s", JsonValue::num(self.median_s)),
+            ("p95_s", JsonValue::num(self.p95_s)),
+            ("min_s", JsonValue::num(self.min_s)),
+            (
+                "throughput_per_s",
+                match self.throughput() {
+                    Some(t) => JsonValue::num(t),
+                    None => JsonValue::Null,
+                },
+            ),
+        ])
     }
 
     pub fn report_line(&self) -> String {
@@ -106,6 +151,98 @@ impl Bench {
     }
 }
 
+/// Machine-readable collector for one bench binary: accumulates timed
+/// [`BenchStats`] and derived scalar metrics, then writes
+/// `BENCH_<suite>.json` next to the human-readable report.
+pub struct BenchSuite {
+    suite: String,
+    cases: Vec<BenchStats>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        BenchSuite { suite: suite.to_string(), cases: Vec::new() }
+    }
+
+    /// Record a timed case produced by [`Bench::run`].
+    pub fn record(&mut self, stats: &BenchStats) {
+        self.cases.push(stats.clone());
+    }
+
+    /// Record a derived scalar (modeled seconds, a ratio, a byte count):
+    /// stored with `iters = 1` and the value in all four statistics
+    /// fields, so every case shares one schema. Non-finite values are a
+    /// bench bug and panic (CI's bench-smoke job treats a panic as a
+    /// failure, which is the point).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        assert!(value.is_finite(), "bench metric `{name}` is not finite: {value}");
+        self.cases.push(BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: value,
+            median_s: value,
+            p95_s: value,
+            min_s: value,
+            items_per_iter: None,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.cases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cases.is_empty()
+    }
+
+    /// The whole-suite JSON object (see the module docs for the contract).
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("suite", JsonValue::str(&self.suite)),
+            ("git_rev", JsonValue::str(git_rev())),
+            ("cases", JsonValue::Arr(self.cases.iter().map(BenchStats::to_json).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<suite>.json` into `GSPLIT_BENCH_JSON_DIR` (default:
+    /// the current directory — the workspace root under `cargo bench`).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("GSPLIT_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write the JSON report, print where it went, and panic on failure —
+    /// the last line of every bench `main`.
+    pub fn finish(&self) {
+        assert!(!self.is_empty(), "bench suite `{}` recorded no cases", self.suite);
+        match self.write() {
+            Ok(path) => println!("\n[bench-json] wrote {} ({} cases)", path.display(), self.len()),
+            Err(e) => panic!("failed to write BENCH_{}.json: {e}", self.suite),
+        }
+    }
+}
+
+/// Short git revision for bench provenance: `GITHUB_SHA` when CI provides
+/// it, else `git rev-parse --short HEAD`, else `"unknown"`.
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Print a section header in bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -118,6 +255,52 @@ pub fn section(title: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stats_to_json_has_the_contract_fields() {
+        let s = BenchStats {
+            name: "case".into(),
+            iters: 7,
+            mean_s: 0.5,
+            median_s: 0.4,
+            p95_s: 0.9,
+            min_s: 0.3,
+            items_per_iter: Some(100.0),
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(j.get("iters").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("mean_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("min_s").unwrap().as_f64(), Some(0.3));
+        assert_eq!(j.get("throughput_per_s").unwrap().as_f64(), Some(200.0));
+        let none = BenchStats { items_per_iter: None, ..s };
+        assert_eq!(*none.to_json().get("throughput_per_s").unwrap(), JsonValue::Null);
+    }
+
+    #[test]
+    fn suite_json_roundtrips_and_degenerate_metrics() {
+        let mut suite = BenchSuite::new("unit_test");
+        suite.metric("epoch_total_s", 1.25);
+        let b = Bench { warmup_iters: 0, min_iters: 1, max_iters: 2, budget_s: 0.01 };
+        let s = b.run("noop", None, || 0u8);
+        suite.record(&s);
+        assert_eq!(suite.len(), 2);
+        let text = suite.to_json().to_string();
+        let parsed = JsonValue::parse(&text).expect("suite JSON must be valid");
+        assert_eq!(parsed.get("suite").unwrap().as_str(), Some("unit_test"));
+        assert!(!parsed.get("git_rev").unwrap().as_str().unwrap().is_empty());
+        let cases = parsed.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("iters").unwrap().as_u64(), Some(1));
+        assert_eq!(cases[0].get("mean_s").unwrap().as_f64(), Some(1.25));
+        assert_eq!(cases[0].get("p95_s").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    #[should_panic(expected = "not finite")]
+    fn non_finite_metric_panics() {
+        BenchSuite::new("x").metric("bad", f64::INFINITY);
+    }
 
     #[test]
     fn runs_and_reports() {

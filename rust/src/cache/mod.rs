@@ -16,6 +16,10 @@
 //! `d` obtain the input features of vertex `v`?* — locally, from an NVLink
 //! peer, or from host memory over PCIe.
 
+mod store;
+
+pub use store::{CachePolicy, CacheStore, LoadStats, ResidentCache};
+
 use crate::devices::Topology;
 use crate::partition::Partitioning;
 use crate::{DeviceId, Vid};
@@ -122,7 +126,13 @@ impl FeatureCache {
     }
 
     /// Resolve where device `d` fetches `v` from. Peer fetches require a
-    /// direct NVLink (Quiver's constraint, §7.4).
+    /// direct NVLink (Quiver's constraint, §7.4): a copy held only by a
+    /// linkless peer — e.g. across the cube mesh's missing links on the
+    /// truncated 5–8 GPU topologies — reports `Host`, never `Peer`, so
+    /// this classification always agrees with [`Topology::link`]. Copies
+    /// on devices the (possibly truncated) topology doesn't model at all
+    /// are ignored for the same reason ([`Topology::has_nvlink`] is total
+    /// and never links an unmodeled device).
     #[inline]
     pub fn fetch_source(&self, v: Vid, d: DeviceId, topo: &Topology) -> FetchSource {
         let m = self.mask[v as usize];
@@ -143,6 +153,41 @@ impl FeatureCache {
         FetchSource::Host
     }
 
+    /// Multi-host variant of [`Self::fetch_source`] under the §7.4
+    /// replication rule: every host caches the same rows, so a placement
+    /// bit for global device `o` means the row is resident on device
+    /// `o % gpus_per_host` of **every** host. The replica inside `d`'s
+    /// host block is then classified against the topology exactly like
+    /// [`Self::fetch_source`] — Local, NVLink peer, or (no direct link)
+    /// host memory. With a single host this is identical to
+    /// [`Self::fetch_source`].
+    pub fn fetch_source_replicated(
+        &self,
+        v: Vid,
+        d: DeviceId,
+        topo: &Topology,
+        gpus_per_host: usize,
+    ) -> FetchSource {
+        let g0 = (topo.host_of(d) * gpus_per_host) as DeviceId;
+        let mut peer: Option<DeviceId> = None;
+        let mut bits = self.mask[v as usize];
+        while bits != 0 {
+            let o = bits.trailing_zeros() as DeviceId;
+            bits &= bits - 1;
+            let replica = g0 + o % gpus_per_host as DeviceId;
+            if replica == d {
+                return FetchSource::Local;
+            }
+            if peer.is_none() && topo.has_nvlink(d, replica) {
+                peer = Some(replica);
+            }
+        }
+        match peer {
+            Some(o) => FetchSource::Peer(o),
+            None => FetchSource::Host,
+        }
+    }
+
     /// Fraction of all vertices cached on ≥1 device.
     pub fn coverage(&self) -> f64 {
         let cached = self.mask.iter().filter(|&&m| m != 0).count();
@@ -155,6 +200,10 @@ impl FeatureCache {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.mask.len()
     }
 }
 
@@ -275,6 +324,152 @@ mod tests {
         // Budgets respected.
         for d in 0..4u16 {
             assert!(c.rows_on(d) <= 50);
+        }
+    }
+
+    #[test]
+    fn distributed_replicates_only_across_linkless_groups() {
+        // Placement invariant: within one NVLink clique a row is cached at
+        // most once (partitioning, not replication); replication happens
+        // only between groups that share no direct link.
+        for topo in [Topology::p3_8xlarge(32.0), Topology::p3_16xlarge(32.0)] {
+            let ranking: Vec<u64> = (0..200).map(|v| 200 - v as u64).collect();
+            let c = FeatureCache::distributed(&ranking, 7, &topo);
+            let cliques = nvlink_cliques(&topo);
+            for v in 0..200u32 {
+                for clique in &cliques {
+                    let copies =
+                        clique.iter().filter(|&&d| c.is_cached_on(v, d)).count();
+                    assert!(copies <= 1, "vertex {v} cached {copies}× within one clique");
+                }
+            }
+            // On the all-NVLink 4-GPU host there is a single clique, so no
+            // vertex may be replicated at all.
+            if topo.num_gpus() == 4 {
+                for v in 0..200u32 {
+                    let copies = (0..4u16).filter(|&d| c.is_cached_on(v, d)).count();
+                    assert!(copies <= 1, "single clique must not replicate (vertex {v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_respects_per_device_budget() {
+        for gpus in [4usize, 8] {
+            let topo = Topology::for_gpus(gpus, 32.0);
+            let ranking: Vec<u64> = (0..500).map(|v| 500 - v as u64).collect();
+            let budget = 13u64;
+            let c = FeatureCache::distributed(&ranking, budget, &topo);
+            for d in 0..gpus as u16 {
+                assert!(c.rows_on(d) <= budget, "device {d} over budget: {}", c.rows_on(d));
+            }
+        }
+    }
+
+    #[test]
+    fn fetch_source_agrees_with_topology_on_truncated_meshes() {
+        // Regression (8-GPU cube mesh truncations): a vertex cached only on
+        // a peer the topology gives us no NVLink to must resolve to Host —
+        // Peer(o) is only ever returned with an actual direct link.
+        for gpus in [5usize, 6, 7, 8] {
+            let topo = Topology::for_gpus(gpus, 32.0);
+            let n = 300usize;
+            let ranking: Vec<u64> = (0..n).map(|v| n as u64 - v as u64).collect();
+            let c = FeatureCache::distributed(&ranking, 9, &topo);
+            for v in 0..n as Vid {
+                for d in 0..gpus as DeviceId {
+                    match c.fetch_source(v, d, &topo) {
+                        FetchSource::Local => assert!(c.is_cached_on(v, d)),
+                        FetchSource::Peer(o) => {
+                            assert!(c.is_cached_on(v, o), "Peer({o}) not actually cached");
+                            assert!(
+                                topo.has_nvlink(d, o),
+                                "gpus={gpus} v={v}: Peer({o}) reported for d={d} without NVLink"
+                            );
+                        }
+                        FetchSource::Host => {
+                            for o in 0..gpus as DeviceId {
+                                assert!(
+                                    !(c.is_cached_on(v, o) && (o == d || topo.has_nvlink(d, o))),
+                                    "gpus={gpus} v={v} d={d}: reachable copy on {o} missed"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Concrete pinned scenario on the 5-GPU truncation: cliques are
+        // {0,1,2,3} and {4}; with capacity 1 the 2nd-hottest vertex is
+        // cached only on device 1, which device 4 has no NVLink to.
+        let t5 = Topology::for_gpus(5, 32.0);
+        let ranking: Vec<u64> = (0..8).map(|v| 8 - v as u64).collect();
+        let c = FeatureCache::distributed(&ranking, 1, &t5);
+        assert!(c.is_cached_on(1, 1) && !c.is_cached_on(1, 4));
+        assert_eq!(
+            c.fetch_source(1, 4, &t5),
+            FetchSource::Host,
+            "copy on a linkless peer must fall back to host"
+        );
+        assert_eq!(c.fetch_source(1, 0, &t5), FetchSource::Peer(1));
+    }
+
+    #[test]
+    fn replicated_fetch_matches_plain_on_a_single_host() {
+        for gpus in [4usize, 6, 8] {
+            let topo = Topology::for_gpus(gpus, 32.0);
+            let ranking: Vec<u64> = (0..120).map(|v| 120 - v as u64).collect();
+            let c = FeatureCache::distributed(&ranking, 7, &topo);
+            for v in 0..120 as Vid {
+                for d in 0..gpus as DeviceId {
+                    assert_eq!(
+                        c.fetch_source_replicated(v, d, &topo, gpus),
+                        c.fetch_source(v, d, &topo),
+                        "gpus={gpus} v={v} d={d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_fetch_maps_copies_into_the_querying_host_block() {
+        // 2 hosts × 4 GPUs, ownership-partitioned cache over the global
+        // k=8 device set: under §7.4 every host holds the same rows, so a
+        // bit for global device `o` resolves within host 1's block.
+        let topo = Topology::multi_host(2, 32.0);
+        let part = Partitioning {
+            assignment: (0..32u32).map(|v| (v % 8) as DeviceId).collect(),
+            k: 8,
+        };
+        let ranking = vec![1u64; 32];
+        let c = FeatureCache::partitioned(&ranking, 4, &part);
+        // Vertex 2 is owned (and cached) by global device 2; host 1's
+        // replica lives on local device 2 = global 6.
+        assert_eq!(c.fetch_source_replicated(2, 6, &topo, 4), FetchSource::Local);
+        // Host 1's device 5 reaches that replica over the in-host NVLink.
+        assert_eq!(c.fetch_source_replicated(2, 5, &topo, 4), FetchSource::Peer(6));
+        // An uncached vertex still misses to host memory.
+        let none = FeatureCache::none(32, 8);
+        assert_eq!(none.fetch_source_replicated(2, 6, &topo, 4), FetchSource::Host);
+    }
+
+    #[test]
+    fn fetch_source_ignores_copies_outside_the_topology() {
+        // A placement built for 8 devices queried under a 4-GPU topology
+        // must not classify (or index) devices the topology doesn't model.
+        let t8 = Topology::p3_16xlarge(32.0);
+        let ranking: Vec<u64> = (0..64).map(|v| 64 - v as u64).collect();
+        let c = FeatureCache::distributed(&ranking, 4, &t8);
+        let t4 = Topology::p3_8xlarge(32.0);
+        for v in 0..64u32 {
+            for d in 0..4u16 {
+                match c.fetch_source(v, d, &t4) {
+                    FetchSource::Peer(o) => assert!((o as usize) < t4.num_gpus()),
+                    FetchSource::Local | FetchSource::Host => {}
+                }
+            }
         }
     }
 

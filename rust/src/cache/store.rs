@@ -1,0 +1,320 @@
+//! Resident cache storage for the real-compute trainer (paper §2.2, §6).
+//!
+//! [`FeatureCache`](super::FeatureCache) is a pure *placement* — a bitmask
+//! answering "which devices hold vertex `v`". The trainer's loading stage
+//! additionally needs the cached rows' **actual feature data** resident
+//! per simulated device, so a Local hit can be served without touching
+//! host memory and a Peer hit can be served by the owning device over the
+//! executor's channel fabric. [`CacheStore`] holds that data;
+//! [`ResidentCache`] bundles placement + store + topology into the one
+//! object the trainer consults on the hot path.
+//!
+//! Determinism: a cached row is a bit-exact copy of the host row (built
+//! once from the [`FeatureStore`]), so serving a row from Local, Peer, or
+//! Host yields identical f32 bits — caching can change *where bytes move*,
+//! never *what the model computes* (DESIGN.md §Loading).
+
+use anyhow::{bail, Result};
+
+use crate::devices::Topology;
+use crate::graph::FeatureStore;
+use crate::partition::Partitioning;
+use crate::{DeviceId, Vid};
+
+use super::{FeatureCache, FetchSource};
+
+/// Which placement policy the trainer's feature cache uses (the three
+/// systems of `cache/mod.rs`, selectable from the CLI via
+/// `--cache-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// DGL-style: nothing cached, every row loads from host memory.
+    None,
+    /// Quiver-style: hottest rows partitioned within NVLink cliques and
+    /// replicated across cliques.
+    Distributed,
+    /// GSplit-style: each device caches its hottest *owned* rows, keeping
+    /// the cache consistent with the splits.
+    Partitioned,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> Result<CachePolicy> {
+        match s {
+            "none" => Ok(CachePolicy::None),
+            "distributed" => Ok(CachePolicy::Distributed),
+            "partitioned" => Ok(CachePolicy::Partitioned),
+            other => bail!("unknown cache policy `{other}` (none|distributed|partitioned)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePolicy::None => "none",
+            CachePolicy::Distributed => "distributed",
+            CachePolicy::Partitioned => "partitioned",
+        }
+    }
+
+    /// Build the placement for this policy. `budget_rows` is the per-GPU
+    /// row budget; `ranking` orders vertices hottest-first (pre-sampling
+    /// frequency in the paper, §7.1).
+    pub fn build_placement(
+        self,
+        ranking: &[u64],
+        budget_rows: u64,
+        part: &Partitioning,
+        topo: &Topology,
+    ) -> FeatureCache {
+        assert_eq!(
+            part.k,
+            topo.num_gpus(),
+            "partitioning and topology must agree on the device count"
+        );
+        match self {
+            CachePolicy::None => FeatureCache::none(ranking.len(), part.k),
+            CachePolicy::Distributed => FeatureCache::distributed(ranking, budget_rows, topo),
+            CachePolicy::Partitioned => FeatureCache::partitioned(ranking, budget_rows, part),
+        }
+    }
+}
+
+/// Per-device byte accounting of one (or many) loading stages: where did
+/// each input-feature row come from?
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadStats {
+    /// Bytes served from the device's own resident cache (free).
+    pub local_bytes: u64,
+    /// Bytes pulled from an NVLink peer's resident cache.
+    pub peer_bytes: u64,
+    /// Bytes loaded from host memory over PCIe.
+    pub host_bytes: u64,
+}
+
+impl LoadStats {
+    /// All input bytes this device materialized, regardless of source.
+    /// Invariant: equal to the uncached total for the same plan — caching
+    /// re-routes bytes between sources, it never changes how many rows a
+    /// device needs.
+    pub fn total(&self) -> u64 {
+        self.local_bytes + self.peer_bytes + self.host_bytes
+    }
+
+    pub fn merge(&mut self, other: &LoadStats) {
+        self.local_bytes += other.local_bytes;
+        self.peer_bytes += other.peer_bytes;
+        self.host_bytes += other.host_bytes;
+    }
+
+    /// Sum many per-device stats (e.g. `Trainer::load_stats()`) into one.
+    pub fn sum<'a>(stats: impl IntoIterator<Item = &'a LoadStats>) -> LoadStats {
+        let mut acc = LoadStats::default();
+        for s in stats {
+            acc.merge(s);
+        }
+        acc
+    }
+}
+
+/// Resident feature rows per simulated device: the actual f32 data of
+/// every row the placement assigns to each device, copied once from the
+/// [`FeatureStore`] at build time.
+#[derive(Debug, Clone)]
+pub struct CacheStore {
+    dim: usize,
+    /// Cached vertex ids per device, ascending (lookup = binary search).
+    vids: Vec<Vec<Vid>>,
+    /// Row-major resident rows per device, aligned with `vids`.
+    data: Vec<Vec<f32>>,
+}
+
+impl CacheStore {
+    /// Materialize the rows the placement assigns to each device.
+    pub fn build(placement: &FeatureCache, features: &FeatureStore) -> CacheStore {
+        let k = placement.k();
+        let dim = features.dim();
+        let mut vids: Vec<Vec<Vid>> = vec![Vec::new(); k];
+        let mut data: Vec<Vec<f32>> = vec![Vec::new(); k];
+        for v in 0..placement.num_vertices() as Vid {
+            for d in 0..k {
+                if placement.is_cached_on(v, d as DeviceId) {
+                    vids[d].push(v);
+                    let start = data[d].len();
+                    data[d].resize(start + dim, 0.0);
+                    features.copy_row(v, &mut data[d][start..start + dim]);
+                }
+            }
+        }
+        CacheStore { dim, vids, data }
+    }
+
+    /// The resident row of `v` on device `d`, if cached there.
+    #[inline]
+    pub fn row(&self, d: DeviceId, v: Vid) -> Option<&[f32]> {
+        let i = self.vids[d as usize].binary_search(&v).ok()?;
+        Some(&self.data[d as usize][i * self.dim..(i + 1) * self.dim])
+    }
+
+    pub fn rows_on(&self, d: DeviceId) -> usize {
+        self.vids[d as usize].len()
+    }
+
+    pub fn bytes_on(&self, d: DeviceId) -> u64 {
+        (self.data[d as usize].len() * 4) as u64
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Everything the trainer's loading stage consults: the placement, the
+/// resident row data, and the topology that decides which cached copies
+/// are actually reachable over NVLink.
+#[derive(Debug, Clone)]
+pub struct ResidentCache {
+    policy: CachePolicy,
+    placement: FeatureCache,
+    store: CacheStore,
+    topo: Topology,
+}
+
+impl ResidentCache {
+    /// Build placement + resident store for `policy` under a per-GPU
+    /// `budget_rows`.
+    pub fn build(
+        policy: CachePolicy,
+        ranking: &[u64],
+        budget_rows: u64,
+        part: &Partitioning,
+        topo: &Topology,
+        features: &FeatureStore,
+    ) -> ResidentCache {
+        assert_eq!(ranking.len(), features.len(), "ranking must cover all vertices");
+        let placement = policy.build_placement(ranking, budget_rows, part, topo);
+        let store = CacheStore::build(&placement, features);
+        ResidentCache { policy, placement, store, topo: topo.clone() }
+    }
+
+    /// Where device `d` obtains the input features of `v` (topology-aware:
+    /// a copy on a linkless peer reports `Host`, never `Peer`).
+    #[inline]
+    pub fn fetch_source(&self, v: Vid, d: DeviceId) -> FetchSource {
+        self.placement.fetch_source(v, d, &self.topo)
+    }
+
+    /// The resident row of `v` on device `d`, if cached there.
+    #[inline]
+    pub fn resident_row(&self, d: DeviceId, v: Vid) -> Option<&[f32]> {
+        self.store.row(d, v)
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn placement(&self) -> &FeatureCache {
+        &self.placement
+    }
+
+    pub fn store(&self) -> &CacheStore {
+        &self.store
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn k(&self) -> usize {
+        self.placement.k()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_features(n: usize, dim: usize) -> FeatureStore {
+        let data: Vec<f32> = (0..n * dim).map(|i| i as f32).collect();
+        FeatureStore::dense(n, dim, data)
+    }
+
+    fn modulo_part(n: usize, k: usize) -> Partitioning {
+        Partitioning {
+            assignment: (0..n as Vid).map(|v| (v % k as Vid) as DeviceId).collect(),
+            k,
+        }
+    }
+
+    #[test]
+    fn store_holds_exactly_the_placement_rows_bit_identically() {
+        let n = 64;
+        let dim = 4;
+        let feats = toy_features(n, dim);
+        let part = modulo_part(n, 4);
+        let topo = Topology::p3_8xlarge(1.0);
+        let ranking: Vec<u64> = (0..n as u64).map(|v| n as u64 - v).collect();
+        let placement = FeatureCache::partitioned(&ranking, 8, &part);
+        let store = CacheStore::build(&placement, &feats);
+        let mut host_row = vec![0f32; dim];
+        for v in 0..n as Vid {
+            for d in 0..4u16 {
+                match store.row(d, v) {
+                    Some(row) => {
+                        assert!(placement.is_cached_on(v, d), "spurious resident row {v}@{d}");
+                        feats.copy_row(v, &mut host_row);
+                        assert_eq!(row, &host_row[..], "cached row must be a bit-exact copy");
+                    }
+                    None => assert!(!placement.is_cached_on(v, d), "missing resident row {v}@{d}"),
+                }
+            }
+        }
+        for d in 0..4u16 {
+            assert_eq!(store.rows_on(d) as u64, placement.rows_on(d));
+            assert_eq!(store.bytes_on(d), placement.rows_on(d) * (dim as u64 * 4));
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+            assert_eq!(CachePolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(CachePolicy::parse("quiver").is_err());
+    }
+
+    #[test]
+    fn resident_cache_serves_local_and_classifies() {
+        let n = 32;
+        let feats = toy_features(n, 2);
+        let part = modulo_part(n, 4);
+        let topo = Topology::p3_8xlarge(1.0);
+        let ranking: Vec<u64> = vec![1; n];
+        let rc =
+            ResidentCache::build(CachePolicy::Partitioned, &ranking, 4, &part, &topo, &feats);
+        let mut local = 0;
+        for v in 0..n as Vid {
+            let owner = part.device_of(v);
+            match rc.fetch_source(v, owner) {
+                FetchSource::Local => {
+                    assert!(rc.resident_row(owner, v).is_some());
+                    local += 1;
+                }
+                FetchSource::Host => assert!(rc.resident_row(owner, v).is_none()),
+                FetchSource::Peer(_) => {
+                    panic!("partitioned cache never serves the owner from a peer")
+                }
+            }
+        }
+        assert_eq!(local, 16, "4 devices × 4-row budget");
+    }
+
+    #[test]
+    fn load_stats_merge_and_total() {
+        let mut a = LoadStats { local_bytes: 1, peer_bytes: 2, host_bytes: 3 };
+        let b = LoadStats { local_bytes: 10, peer_bytes: 20, host_bytes: 30 };
+        a.merge(&b);
+        assert_eq!(a, LoadStats { local_bytes: 11, peer_bytes: 22, host_bytes: 33 });
+        assert_eq!(a.total(), 66);
+    }
+}

@@ -84,6 +84,9 @@ pub struct IterCounters {
     pub sample_comm: CommMatrix,
     /// Input-feature bytes each device loads from host memory over PCIe.
     pub host_load_bytes: Vec<u64>,
+    /// Input-feature bytes served from the device's own cache (free on the
+    /// timeline, but part of the Local/NVLink/PCIe loading split).
+    pub local_load_bytes: Vec<u64>,
     /// Input-feature bytes fetched from NVLink peers (distributed caches).
     pub peer_load: CommMatrix,
     /// Dense FLOPs per device (forward).
@@ -101,6 +104,7 @@ impl IterCounters {
             sampled_edges: vec![0; k],
             sample_comm: CommMatrix::new(k),
             host_load_bytes: vec![0; k],
+            local_load_bytes: vec![0; k],
             peer_load: CommMatrix::new(k),
             fwd_flops: vec![0; k],
             agg_bytes: vec![0; k],
@@ -113,6 +117,7 @@ impl IterCounters {
         for i in 0..self.k {
             self.sampled_edges[i] += other.sampled_edges[i];
             self.host_load_bytes[i] += other.host_load_bytes[i];
+            self.local_load_bytes[i] += other.local_load_bytes[i];
             self.fwd_flops[i] += other.fwd_flops[i];
             self.agg_bytes[i] += other.agg_bytes[i];
         }
@@ -124,6 +129,14 @@ impl IterCounters {
     /// Total input feature vectors loaded (any source), in bytes.
     pub fn total_load_bytes(&self) -> u64 {
         self.host_load_bytes.iter().sum::<u64>() + self.peer_load.total_remote()
+    }
+
+    /// Total input bytes *materialized* per iteration — cache hits plus
+    /// NVLink peer fetches plus PCIe host loads. Constant across cache
+    /// policies for the same plan (caching re-routes bytes, it never
+    /// changes how many rows a device needs).
+    pub fn total_input_bytes(&self) -> u64 {
+        self.local_load_bytes.iter().sum::<u64>() + self.total_load_bytes()
     }
 }
 

@@ -105,7 +105,14 @@ impl Topology {
         }
     }
 
+    /// Whether `a` and `b` share a direct NVLink. Total over all inputs:
+    /// device ids the topology doesn't model (e.g. cache-placement bits
+    /// from a wider device set than this — possibly truncated — topology)
+    /// are simply not linked, rather than a panic.
     pub fn has_nvlink(&self, a: DeviceId, b: DeviceId) -> bool {
+        if (a as usize) >= self.num_gpus() || (b as usize) >= self.num_gpus() {
+            return false;
+        }
         self.link(a, b) == LinkKind::NvLink
     }
 
@@ -294,6 +301,15 @@ mod tests {
         let t5 = Topology::for_gpus(5, 32.0);
         assert_eq!(t5.link(4, 0), LinkKind::NvLink);
         assert_eq!(t5.link(4, 1), LinkKind::PcieHost);
+    }
+
+    #[test]
+    fn has_nvlink_is_total_over_out_of_range_devices() {
+        let t = Topology::for_gpus(5, 32.0);
+        assert!(t.has_nvlink(0, 1));
+        assert!(!t.has_nvlink(0, 5), "unmodeled device is never linked");
+        assert!(!t.has_nvlink(9, 0));
+        assert!(!t.has_nvlink(3, 3), "self link is Local, not NVLink");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! partitioned per host, each host runs split parallelism internally over
 //! its own 4 GPUs, and gradients all-reduce across everything.
 
-use crate::cache::FeatureCache;
+use crate::cache::{FeatureCache, FetchSource};
 use crate::costmodel::IterCounters;
 use crate::exec::{add_grad_allreduce, Engine, EngineCtx};
 use crate::partition::Partitioning;
@@ -156,11 +156,17 @@ impl SplitParallel {
             }
         }
         // --- loading: each device loads only its own (non-overlapping)
-        // input frontier; cache hits are free (cache is owner-consistent).
+        // input frontier, classified Local / NVLink peer / PCIe host by the
+        // same topology-aware classifier the trainer's loading stage uses
+        // (under §7.4 replication every host caches the same rows): a copy
+        // only reachable without a direct NVLink counts as a host load.
         for (d, frontier) in plan.input_frontier.iter().enumerate() {
+            let dev = (g0 + d) as DeviceId;
             for &v in frontier {
-                if !self.cache.is_cached_on(v, self.part.device_of(v)) {
-                    c.host_load_bytes[g0 + d] += row_bytes;
+                match self.cache.fetch_source_replicated(v, dev, &ctx.topo, self.gpus_per_host) {
+                    FetchSource::Local => c.local_load_bytes[g0 + d] += row_bytes,
+                    FetchSource::Peer(o) => c.peer_load.add(o, dev, row_bytes),
+                    FetchSource::Host => c.host_load_bytes[g0 + d] += row_bytes,
                 }
             }
         }
@@ -276,6 +282,29 @@ mod tests {
         assert_eq!(manual.sampled_edges, via_engine.sampled_edges);
         assert_eq!(manual.train_comm, via_engine.train_comm);
         assert_eq!(manual.host_load_bytes, via_engine.host_load_bytes);
+        assert_eq!(manual.local_load_bytes, via_engine.local_load_bytes);
+        assert_eq!(manual.peer_load, via_engine.peer_load);
+    }
+
+    #[test]
+    fn loading_split_sums_to_uncached_total() {
+        // The Local/NVLink/PCIe split re-routes bytes; it never changes how
+        // many input rows an iteration materializes.
+        let ds = StandIn::Tiny.load().unwrap();
+        let targets: Vec<Vid> = (0..256).collect();
+        let (ctx_nc, p_nc, w_nc) = setup(&ds, Topology::p3_8xlarge(1000.0)); // no cache fits
+        let uncached = SplitParallel::new(&ctx_nc, p_nc, &w_nc.vertex, 128)
+            .iteration(&ctx_nc, &targets, 3);
+        assert_eq!(uncached.local_load_bytes.iter().sum::<u64>(), 0);
+        let (ctx_c, p_c, w_c) = setup(&ds, Topology::p3_8xlarge(1.0)); // fully cached
+        let cached =
+            SplitParallel::new(&ctx_c, p_c, &w_c.vertex, 128).iteration(&ctx_c, &targets, 3);
+        assert!(cached.local_load_bytes.iter().sum::<u64>() > 0);
+        assert_eq!(
+            cached.total_input_bytes(),
+            uncached.total_input_bytes(),
+            "cache policy must not change the materialized input volume"
+        );
     }
 
     #[test]

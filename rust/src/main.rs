@@ -8,7 +8,10 @@
 //!   gen        generate and cache a stand-in dataset graph
 //!   info       print dataset/topology/manifest information
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
+use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
 use gsplit::cli::Args;
 use gsplit::config::{parse_dataset, parse_model};
 use gsplit::costmodel::PhaseBreakdown;
@@ -103,6 +106,8 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         ("backend", true, "native|pjrt (default native)"),
         ("artifacts", true, "artifacts dir for --backend pjrt (default artifacts)"),
         ("parallel-workers", true, "worker threads for the pipelined executor (0 = serial, default 0)"),
+        ("cache-policy", true, "feature cache: none|distributed|partitioned (default none)"),
+        ("cache-budget", true, "cached feature rows per simulated GPU (default 4096)"),
     ];
     let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
     let (backend, cfg, fanout) = resolve_backend(&a)?;
@@ -136,6 +141,33 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?
             .with_parallel_workers(workers);
 
+    // Cache-aware loading stage (DESIGN.md §Loading): serve input rows
+    // from per-GPU resident caches, ranked by pre-sampling frequency.
+    let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    if policy != CachePolicy::None {
+        if !(1..=8).contains(&k) {
+            bail!("--cache-policy needs a modeled topology: --gpus must be between 1 and 8");
+        }
+        let budget = a.get_u64("cache-budget", 4096)?;
+        let topo = Topology::for_gpus(k, 1.0);
+        let cache = Arc::new(ResidentCache::build(
+            policy,
+            &pw.vertex,
+            budget,
+            trainer.partitioning(),
+            &topo,
+            &ds.features,
+        ));
+        let placement = cache.placement();
+        println!(
+            "# cache {} | budget {budget} rows/GPU | coverage {:.1}% | resident {}",
+            policy.name(),
+            placement.coverage() * 100.0,
+            gsplit::util::fmt_bytes((0..k as u16).map(|d| cache.store().bytes_on(d)).sum::<u64>()),
+        );
+        trainer.set_cache(Some(cache))?;
+    }
+
     let exec = match trainer.exec_mode() {
         ExecMode::Serial => "serial".to_string(),
         ExecMode::Pipelined(p) => format!("pipelined({} workers)", p.workers),
@@ -164,6 +196,14 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     }
     let val = trainer.evaluate(&ds, &ds.labels.val_set[..batch.min(ds.labels.val_set.len())], 9999)?;
     println!("# final val accuracy {:.4} (random = {:.4})", val.accuracy(), 1.0 / cfg.num_classes as f32);
+    let split = LoadStats::sum(trainer.load_stats());
+    println!(
+        "# loading: local {} | peer(nvlink) {} | host(pcie) {} | total {}",
+        gsplit::util::fmt_bytes(split.local_bytes),
+        gsplit::util::fmt_bytes(split.peer_bytes),
+        gsplit::util::fmt_bytes(split.host_bytes),
+        gsplit::util::fmt_bytes(split.total()),
+    );
     Ok(())
 }
 

@@ -15,6 +15,14 @@
 //!   thread runs the plan stage for batch *t+1* (cooperative sampling +
 //!   input-feature gather), the paper §6 inter-batch overlap.
 //!
+//! When the trainer has a [`ResidentCache`] installed, each batch starts
+//! with an extra **loading exchange** phase: rows the plan stage
+//! classified as `Peer` are served out of the owning device's resident
+//! cache over the same channel fabric, before the first forward shuffle
+//! (DESIGN.md §Loading). Destination rows are distinct and the payloads
+//! are bit-exact copies of host rows, so the phase preserves the
+//! determinism contract below at every cache policy and budget.
+//!
 //! # Determinism contract
 //!
 //! The executor is **bit-identical** to the serial trainer for the same
@@ -48,13 +56,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cache::ResidentCache;
 use crate::graph::Dataset;
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::Backend;
 use crate::split::SplitPlan;
-use crate::Vid;
+use crate::{DeviceId, Vid};
 
-use super::plan::{prepare_batch, PreparedBatch};
+use super::plan::PreparedBatch;
 use super::{IterStats, Trainer};
 
 /// How a [`Trainer`] executes mini-batches.
@@ -184,6 +193,7 @@ pub(super) fn run_batches(
     let model_cfg = trainer.params.cfg.clone();
     let kernel_k = trainer.fanouts[0];
     let lr = trainer.lr;
+    let cache = trainer.cache.clone();
 
     // k × k typed row channels; each (from→to) sender goes to the worker
     // owning `from`, the receiver to the worker owning `to`.
@@ -219,6 +229,7 @@ pub(super) fn run_batches(
             let res_tx = res_tx.clone();
             let abort = Arc::clone(&abort);
             let model_cfg = model_cfg.clone();
+            let cache = cache.clone();
             scope.spawn(move || {
                 let guard = AbortOnDrop(Arc::clone(&abort));
                 let worker = Worker {
@@ -226,6 +237,7 @@ pub(super) fn run_batches(
                     ds,
                     cfg: model_cfg,
                     kernel_k,
+                    cache,
                     owned,
                     send,
                     recv,
@@ -243,14 +255,7 @@ pub(super) fn run_batches(
         for (t, spec) in specs.iter().enumerate() {
             let prep = match next_prep.take() {
                 Some(p) => p,
-                None => Arc::new(prepare_batch(
-                    &mut trainer.sampler,
-                    ds,
-                    &spec.targets,
-                    &trainer.fanouts,
-                    &trainer.part,
-                    spec.plan_seed,
-                )),
+                None => Arc::new(trainer.prepare(ds, &spec.targets, spec.plan_seed)),
             };
             let params = Arc::new(trainer.params.clone());
             for jtx in &job_txs {
@@ -264,14 +269,7 @@ pub(super) fn run_batches(
             }
             // Plan stage for batch t+1 overlaps the workers training batch t.
             if let Some(next) = specs.get(t + 1) {
-                next_prep = Some(Arc::new(prepare_batch(
-                    &mut trainer.sampler,
-                    ds,
-                    &next.targets,
-                    &trainer.fanouts,
-                    &trainer.part,
-                    next.plan_seed,
-                )));
+                next_prep = Some(Arc::new(trainer.prepare(ds, &next.targets, next.plan_seed)));
             }
             // Collect every device's result, then reduce in device order.
             // Timed receive: a worker that panics sets the abort flag (via
@@ -367,6 +365,9 @@ struct Worker<'e> {
     ds: &'e Dataset,
     cfg: ModelConfig,
     kernel_k: usize,
+    /// Resident feature cache shared with the trainer; this worker serves
+    /// its owned devices' cached rows during the loading exchange phase.
+    cache: Option<Arc<ResidentCache>>,
     /// Owned device ids, ascending.
     owned: Vec<usize>,
     /// `send[li][to]` — sender of the (owned[li] → to) channel.
@@ -412,20 +413,52 @@ impl<'e> Worker<'e> {
         }
     }
 
-    /// Pack `src` rows at `idx` positions into chunks of ≤ `chunk_rows`.
-    fn pack_rows(&self, src: &[f32], idx: &[u32], width: usize) -> VecDeque<RowChunk> {
-        let mut out = VecDeque::with_capacity(self.chunks_of(idx.len()));
+    /// Pack `n_rows` logical rows into [`RowChunk`]s of ≤ `chunk_rows`,
+    /// `append(i, buf)` supplying row `i`'s `width` values. The one
+    /// chunking implementation behind every exchange phase — sender and
+    /// receiver chunk counts must always agree ([`Worker::chunks_of`]).
+    fn pack_chunks(
+        &self,
+        n_rows: usize,
+        width: usize,
+        mut append: impl FnMut(usize, &mut Vec<f32>),
+    ) -> VecDeque<RowChunk> {
+        let mut out = VecDeque::with_capacity(self.chunks_of(n_rows));
         let mut start = 0usize;
-        while start < idx.len() {
-            let n = (idx.len() - start).min(self.chunk_rows);
+        while start < n_rows {
+            let n = (n_rows - start).min(self.chunk_rows);
             let mut rows = Vec::with_capacity(n * width);
-            for &p in &idx[start..start + n] {
-                rows.extend_from_slice(&src[p as usize * width..(p as usize + 1) * width]);
+            for i in start..start + n {
+                append(i, &mut rows);
             }
             out.push_back(RowChunk { start: start as u32, rows });
             start += n;
         }
         out
+    }
+
+    /// Pack `src` rows at `idx` positions into chunks of ≤ `chunk_rows`.
+    fn pack_rows(&self, src: &[f32], idx: &[u32], width: usize) -> VecDeque<RowChunk> {
+        self.pack_chunks(idx.len(), width, |i, rows| {
+            let p = idx[i] as usize;
+            rows.extend_from_slice(&src[p * width..(p + 1) * width]);
+        })
+    }
+
+    /// Pack resident-cache rows of device `d` for `vids` (the loading
+    /// exchange phase's counterpart of [`Worker::pack_rows`]).
+    fn pack_cache_rows(
+        &self,
+        cache: &ResidentCache,
+        d: DeviceId,
+        vids: &[Vid],
+        width: usize,
+    ) -> VecDeque<RowChunk> {
+        self.pack_chunks(vids.len(), width, |i, rows| {
+            rows.extend_from_slice(
+                cache.resident_row(d, vids[i]).expect("peer-served row resident on server"),
+            );
+        })
     }
 
     /// Drive queued sends and expected receives of one exchange phase to
@@ -516,6 +549,49 @@ impl<'e> Worker<'e> {
         // mixed[i][li]: materialized mixed-frontier inputs, kept for backward.
         let mut mixed: Vec<Vec<Vec<f32>>> =
             (0..num_layers).map(|_| vec![Vec::new(); n_own]).collect();
+
+        // --- Loading exchange: serve Peer-classified rows out of this
+        // worker's resident caches and fill the holes the plan stage left
+        // in the input buffers (DESIGN.md §Loading). Whether this phase
+        // exists is a trainer-level invariant (cache installed or not), so
+        // every worker agrees on the phase sequence; expected chunk counts
+        // derive from the shared LoadingPlan; destination rows are
+        // distinct, so arrival order is irrelevant.
+        if let Some(cache) = &self.cache {
+            let dim = self.ds.features.dim();
+            let load = &prep.loading;
+            let mut outgoing: Vec<OutQueue> = Vec::new();
+            for (li, &d) in owned.iter().enumerate() {
+                for to in 0..k {
+                    let pf = &load.peer_fetch[d][to];
+                    if pf.is_empty() {
+                        continue;
+                    }
+                    outgoing.push(OutQueue {
+                        li,
+                        to,
+                        q: self.pack_cache_rows(cache, d as DeviceId, &pf.vids, dim),
+                    });
+                }
+            }
+            let mut expect = vec![vec![0usize; k]; n_own];
+            for (li, &d) in owned.iter().enumerate() {
+                for from in 0..k {
+                    expect[li][from] = self.chunks_of(load.peer_fetch[from][d].len());
+                }
+            }
+            let hidden_mut = &mut hidden;
+            self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                let pf = &load.peer_fetch[from][owned[li]];
+                let nrows = chunk.rows.len() / dim;
+                let start = chunk.start as usize;
+                for j in 0..nrows {
+                    let pos = pf.dst_rows[start + j] as usize;
+                    hidden_mut[li][pos * dim..(pos + 1) * dim]
+                        .copy_from_slice(&chunk.rows[j * dim..(j + 1) * dim]);
+                }
+            })?;
+        }
 
         // --- Forward, bottom-up ---
         for i in (0..num_layers).rev() {

@@ -14,7 +14,12 @@
 //! Execution is split into three stages (DESIGN.md §Executor):
 //!
 //! * **plan** ([`plan`] module) — cooperative sampling + input-feature
-//!   gather, independent of the model parameters;
+//!   gather, independent of the model parameters. With a
+//!   [`ResidentCache`] installed ([`Trainer::set_cache`]), the gather is
+//!   cache-aware: rows are classified Local / Peer / Host and peer rows
+//!   travel through an extra pre-forward exchange phase (DESIGN.md
+//!   §Loading) — numerics are identical at any policy or budget, only
+//!   the Local/NVLink/PCIe byte split ([`Trainer::load_stats`]) changes;
 //! * **compute** — per-device [`Backend`] layer calls;
 //! * **exchange** — the per-layer all-to-alls and the gradient all-reduce.
 //!
@@ -31,10 +36,13 @@ mod plan;
 mod serial;
 
 pub use executor::{ExecMode, PipelineConfig};
-pub use plan::PreparedBatch;
+pub use plan::{LoadingPlan, PeerFetch, PreparedBatch};
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use crate::cache::{LoadStats, ResidentCache};
 use crate::graph::Dataset;
 use crate::model::{ModelConfig, ParamStore};
 use crate::partition::Partitioning;
@@ -107,6 +115,12 @@ pub struct Trainer<'a> {
     fanouts: Vec<usize>,
     lr: f32,
     mode: ExecMode,
+    /// Cache-aware loading stage (DESIGN.md §Loading). `None` gathers
+    /// every input row from host memory.
+    cache: Option<Arc<ResidentCache>>,
+    /// Per-device Local/NVLink/PCIe byte accounting, accumulated across
+    /// every plan stage this trainer ran.
+    load_stats: Vec<LoadStats>,
 }
 
 impl<'a> Trainer<'a> {
@@ -127,6 +141,7 @@ impl<'a> Trainer<'a> {
         ensure!(cfg.num_layers > 0, "model needs at least one layer");
         ensure!(fanout > 0, "fanout must be positive");
         ensure!(part.k > 0, "partitioning needs at least one device");
+        let load_stats = vec![LoadStats::default(); part.k];
         Ok(Trainer {
             backend,
             params: ParamStore::init(cfg, seed),
@@ -135,11 +150,70 @@ impl<'a> Trainer<'a> {
             fanouts: vec![fanout; cfg.num_layers],
             lr,
             mode: ExecMode::Serial,
+            cache: None,
+            load_stats,
         })
     }
 
     pub fn partitioning(&self) -> &Partitioning {
         &self.part
+    }
+
+    /// Install (or remove) the cache-aware loading stage. Both executors
+    /// honour it; numerics are unaffected at any policy or budget because
+    /// cached rows are bit-exact copies of the host rows (DESIGN.md
+    /// §Loading) — only the Local/NVLink/PCIe byte split changes.
+    pub fn set_cache(&mut self, cache: Option<Arc<ResidentCache>>) -> Result<()> {
+        if let Some(c) = &cache {
+            ensure!(
+                c.k() == self.part.k,
+                "cache built for {} devices, trainer has {}",
+                c.k(),
+                self.part.k
+            );
+        }
+        self.cache = cache;
+        Ok(())
+    }
+
+    /// Builder-style [`Trainer::set_cache`].
+    pub fn with_cache(mut self, cache: Arc<ResidentCache>) -> Result<Self> {
+        self.set_cache(Some(cache))?;
+        Ok(self)
+    }
+
+    /// The installed cache, if any.
+    pub fn cache(&self) -> Option<&ResidentCache> {
+        self.cache.as_deref()
+    }
+
+    /// Per-device Local/NVLink/PCIe loading byte split, accumulated over
+    /// every iteration (training and evaluation) this trainer executed.
+    pub fn load_stats(&self) -> &[LoadStats] {
+        &self.load_stats
+    }
+
+    pub fn reset_load_stats(&mut self) {
+        self.load_stats = vec![LoadStats::default(); self.part.k];
+    }
+
+    /// Run the plan stage (sampling + cache-classified feature gather) and
+    /// accumulate its byte accounting — the single entry point both
+    /// executors share.
+    fn prepare(&mut self, ds: &Dataset, targets: &[Vid], plan_seed: u64) -> PreparedBatch {
+        let prep = plan::prepare_batch(
+            &mut self.sampler,
+            ds,
+            targets,
+            &self.fanouts,
+            &self.part,
+            self.cache.as_deref(),
+            plan_seed,
+        );
+        for (acc, s) in self.load_stats.iter_mut().zip(&prep.loading.stats) {
+            acc.merge(s);
+        }
+        prep
     }
 
     /// Select the executor. [`ExecMode::Pipelined`] spawns its worker
@@ -171,14 +245,7 @@ impl<'a> Trainer<'a> {
         let mode = self.mode;
         match mode {
             ExecMode::Serial => {
-                let prep = plan::prepare_batch(
-                    &mut self.sampler,
-                    ds,
-                    targets,
-                    &self.fanouts,
-                    &self.part,
-                    plan_seed,
-                );
+                let prep = self.prepare(ds, targets, plan_seed);
                 let (stats, grads) = self.forward_backward(ds, prep, true)?;
                 self.params.sgd_step(&grads.expect("grads requested"), self.lr);
                 Ok(stats)
@@ -197,14 +264,7 @@ impl<'a> Trainer<'a> {
         let mode = self.mode;
         match mode {
             ExecMode::Serial => {
-                let prep = plan::prepare_batch(
-                    &mut self.sampler,
-                    ds,
-                    targets,
-                    &self.fanouts,
-                    &self.part,
-                    plan_seed,
-                );
+                let prep = self.prepare(ds, targets, plan_seed);
                 let (stats, _) = self.forward_backward(ds, prep, false)?;
                 Ok(stats)
             }

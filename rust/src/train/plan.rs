@@ -1,31 +1,97 @@
-//! Plan stage of the split-parallel executor (DESIGN.md §Executor).
+//! Plan stage of the split-parallel executor (DESIGN.md §Executor,
+//! §Loading).
 //!
 //! Producing a mini-batch's [`SplitPlan`] (cooperative sampling + shuffle
 //! index, the paper's S phase) and gathering each device's non-overlapping
 //! input-feature rows (the L phase) depend only on the dataset, the
-//! partitioning, and the iteration seed — **not** on the model parameters.
-//! Packaging both as one [`PreparedBatch`] lets the serial executor consume
-//! it inline and lets the pipelined executor prepare batch *t+1* while the
-//! workers are still training batch *t* (the paper §6 inter-batch overlap).
+//! partitioning, the cache placement, and the iteration seed — **not** on
+//! the model parameters. Packaging both as one [`PreparedBatch`] lets the
+//! serial executor consume it inline and lets the pipelined executor
+//! prepare batch *t+1* while the workers are still training batch *t* (the
+//! paper §6 inter-batch overlap).
+//!
+//! With a [`ResidentCache`] installed, the loading stage classifies every
+//! input row by [`FetchSource`]:
+//!
+//! * **Local** — copied here from the device's own resident cache;
+//! * **Peer(o)** — left as a hole in `feats[d]`, recorded in the
+//!   [`LoadingPlan`] so the executor's pre-forward exchange phase can pull
+//!   it from device `o`'s resident cache (serial: direct copy in fixed
+//!   device order; pipelined: over the k×k channel fabric);
+//! * **Host** — copied here from host memory (the PCIe fallback).
+//!
+//! All three sources hold bit-exact copies of the same rows, so the cache
+//! policy can never change the numerics — only the byte accounting.
 
+use crate::cache::{FetchSource, LoadStats, ResidentCache};
 use crate::graph::Dataset;
 use crate::partition::Partitioning;
 use crate::split::{SplitPlan, SplitSampler};
-use crate::Vid;
+use crate::{DeviceId, Vid};
+
+/// One (server → client) slice of the pre-forward exchange: rows the
+/// client needs from the server's resident cache.
+#[derive(Debug, Clone, Default)]
+pub struct PeerFetch {
+    /// Vertices to serve, in the client's deterministic request order.
+    pub vids: Vec<Vid>,
+    /// For each vid, the destination row in the client's `feats` buffer
+    /// (positions are distinct: each hole is filled exactly once).
+    pub dst_rows: Vec<u32>,
+}
+
+impl PeerFetch {
+    pub fn len(&self) -> usize {
+        self.vids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vids.is_empty()
+    }
+}
+
+/// Loading-stage output of the plan stage: the peer-exchange wiring plus
+/// per-device Local/NVLink/PCIe byte accounting.
+#[derive(Debug, Clone, Default)]
+pub struct LoadingPlan {
+    /// `peer_fetch[server][client]` — rows `client` pulls from `server`'s
+    /// resident cache. All-empty when no cache is installed.
+    pub peer_fetch: Vec<Vec<PeerFetch>>,
+    /// Per-device byte split of this batch's input rows.
+    pub stats: Vec<LoadStats>,
+}
+
+impl LoadingPlan {
+    fn empty(k: usize) -> Self {
+        LoadingPlan {
+            peer_fetch: (0..k).map(|_| vec![PeerFetch::default(); k]).collect(),
+            stats: vec![LoadStats::default(); k],
+        }
+    }
+
+    /// Whether any row travels through the pre-forward exchange phase.
+    pub fn has_peer_traffic(&self) -> bool {
+        self.peer_fetch.iter().flatten().any(|pf| !pf.is_empty())
+    }
+}
 
 /// Everything the compute/exchange stages need for one mini-batch: the
-/// cooperative [`SplitPlan`] plus each device's gathered input-feature rows
+/// cooperative [`SplitPlan`], each device's gathered input-feature rows
 /// (ordered like `plan.input_frontier[d]`, which is also the order the
-/// bottom layer's shuffle `send` indices refer to).
+/// bottom layer's shuffle `send` indices refer to), and the loading plan.
+/// Rows classified `Peer` are zero-filled holes in `feats` until the
+/// executor's exchange phase materializes them.
 #[derive(Debug, Clone)]
 pub struct PreparedBatch {
     pub plan: SplitPlan,
     /// `feats[d]` — row-major `[input_frontier[d].len(), feat_dim]`.
     pub feats: Vec<Vec<f32>>,
+    pub loading: LoadingPlan,
 }
 
 /// Run the plan stage for one mini-batch: sample + split cooperatively,
-/// then gather every device's own input frontier.
+/// then gather every device's own input frontier, classifying each row
+/// against the cache placement (if any).
 ///
 /// `plan_seed` must already be the per-iteration derived seed; the same
 /// seed always yields the same `PreparedBatch` regardless of which
@@ -36,16 +102,50 @@ pub(super) fn prepare_batch(
     targets: &[Vid],
     fanouts: &[usize],
     part: &Partitioning,
+    cache: Option<&ResidentCache>,
     plan_seed: u64,
 ) -> PreparedBatch {
     let plan = sampler.sample(&ds.graph, targets, fanouts, part, plan_seed);
+    let k = plan.k;
+    let dim = ds.features.dim();
+    let row_bytes = ds.features.row_bytes();
     // Loading: each device gathers ONLY its own input frontier (the
     // paper's non-overlapping loads property).
-    let mut feats: Vec<Vec<f32>> = Vec::with_capacity(plan.k);
-    for d in 0..plan.k {
-        let mut buf = Vec::new();
-        ds.features.gather(&plan.input_frontier[d], &mut buf);
+    let mut feats: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut loading = LoadingPlan::empty(k);
+    for d in 0..k {
+        let frontier = &plan.input_frontier[d];
+        let mut buf = vec![0f32; frontier.len() * dim];
+        match cache {
+            None => {
+                for (row, &v) in frontier.iter().enumerate() {
+                    ds.features.copy_row(v, &mut buf[row * dim..(row + 1) * dim]);
+                }
+                loading.stats[d].host_bytes = frontier.len() as u64 * row_bytes;
+            }
+            Some(c) => {
+                for (row, &v) in frontier.iter().enumerate() {
+                    match c.fetch_source(v, d as DeviceId) {
+                        FetchSource::Local => {
+                            let src = c.resident_row(d as DeviceId, v).expect("Local row resident");
+                            buf[row * dim..(row + 1) * dim].copy_from_slice(src);
+                            loading.stats[d].local_bytes += row_bytes;
+                        }
+                        FetchSource::Peer(o) => {
+                            let pf = &mut loading.peer_fetch[o as usize][d];
+                            pf.vids.push(v);
+                            pf.dst_rows.push(row as u32);
+                            loading.stats[d].peer_bytes += row_bytes;
+                        }
+                        FetchSource::Host => {
+                            ds.features.copy_row(v, &mut buf[row * dim..(row + 1) * dim]);
+                            loading.stats[d].host_bytes += row_bytes;
+                        }
+                    }
+                }
+            }
+        }
         feats.push(buf);
     }
-    PreparedBatch { plan, feats }
+    PreparedBatch { plan, feats, loading }
 }

@@ -25,10 +25,34 @@ impl<'a> Trainer<'a> {
         backward: bool,
     ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
         let cfg = self.params.cfg.clone();
-        let PreparedBatch { plan, feats } = prep;
+        let PreparedBatch { plan, mut feats, loading } = prep;
         let k = plan.k;
         let num_layers = plan.layers.len();
         let kernel_k = self.fanouts[0];
+
+        // --- Loading exchange: materialize Peer-classified rows from the
+        // owning devices' resident caches, in fixed (server, client) order
+        // — the reference ordering the pipelined executor's pre-forward
+        // exchange phase must reproduce (DESIGN.md §Loading). Destination
+        // rows are distinct, so this is a pure scatter of bit-exact host
+        // copies; order only matters for auditability.
+        if let Some(cache) = &self.cache {
+            let dim = ds.features.dim();
+            for server in 0..k {
+                for client in 0..k {
+                    let pf = &loading.peer_fetch[server][client];
+                    for (&v, &row) in pf.vids.iter().zip(&pf.dst_rows) {
+                        let src = cache
+                            .resident_row(server as crate::DeviceId, v)
+                            .expect("peer-served row resident on server");
+                        feats[client][row as usize * dim..(row as usize + 1) * dim]
+                            .copy_from_slice(src);
+                    }
+                }
+            }
+        } else {
+            debug_assert!(!loading.has_peer_traffic(), "peer fetches require a cache");
+        }
 
         // --- Forward, bottom-up; keep mixed inputs for the backward ---
         // mixed[i][d]: the materialized mixed-frontier rows of layer i.

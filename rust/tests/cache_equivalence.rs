@@ -1,0 +1,216 @@
+//! Serial-vs-pipelined bit-identity with the cache-aware loading stage
+//! enabled (DESIGN.md §Loading): for every cache policy × budget × worker
+//! count, one epoch through the pipelined executor (including its
+//! pre-forward peer-exchange phase) must match the serial trainer bit for
+//! bit — and BOTH must match the uncached serial reference, because
+//! cached rows are bit-exact copies of the host rows. Also pins the
+//! loading-stage byte accounting: the Local/Peer/Host split always sums
+//! to the uncached total.
+
+use std::sync::Arc;
+
+use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
+use gsplit::devices::Topology;
+use gsplit::graph::{Dataset, StandIn};
+use gsplit::model::{GnnKind, ModelConfig, ParamStore};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+use gsplit::{DeviceId, Vid};
+
+const FANOUT: usize = 5;
+const BATCH: usize = 512;
+const SEED: u64 = 42;
+
+fn tiny_cfg(num_layers: usize) -> ModelConfig {
+    ModelConfig { kind: GnnKind::GraphSage, feat_dim: 32, hidden: 32, num_classes: 16, num_layers }
+}
+
+fn modulo_part(ds: &Dataset, k: usize) -> Partitioning {
+    Partitioning {
+        assignment: (0..ds.graph.num_vertices() as Vid)
+            .map(|v| (v % k as Vid) as DeviceId)
+            .collect(),
+        k,
+    }
+}
+
+fn degree_ranking(ds: &Dataset) -> Vec<u64> {
+    (0..ds.graph.num_vertices() as Vid).map(|v| ds.graph.degree(v) as u64).collect()
+}
+
+fn assert_params_bit_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (t, (ta, tb)) in la.tensors.iter().zip(&lb.tensors).enumerate() {
+            for (i, (x, y)) in ta.iter().zip(tb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: param layer {l} tensor {t} elem {i}: {x} != {y}"
+                );
+            }
+        }
+    }
+}
+
+fn assert_stats_bit_identical(a: &[IterStats], b: &[IterStats], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: iteration counts differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.examples, y.examples, "{what}: iter {i} examples");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: iter {i} loss");
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "{what}: iter {i} correct");
+    }
+}
+
+/// One epoch three ways — uncached serial (oracle), cached serial, cached
+/// pipelined — all bit-identical; returns the cached run's byte split and
+/// the oracle's uncached total.
+fn check_case(
+    topo: &Topology,
+    policy: CachePolicy,
+    budget: u64,
+    workers: usize,
+    what: &str,
+) -> (LoadStats, u64) {
+    let ds = StandIn::Tiny.load().unwrap();
+    let k = topo.num_gpus();
+    let cfg = tiny_cfg(2);
+    let part = modulo_part(&ds, k);
+    let backend = NativeBackend::new();
+    let cache = Arc::new(ResidentCache::build(
+        policy,
+        &degree_ranking(&ds),
+        budget,
+        &part,
+        topo,
+        &ds.features,
+    ));
+
+    let mut oracle = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    serial.set_cache(Some(Arc::clone(&cache))).unwrap();
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
+    pipelined.set_cache(Some(cache)).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+
+    let a = train_epoch(&mut oracle, &ds, BATCH, SEED).unwrap();
+    let b = train_epoch(&mut serial, &ds, BATCH, SEED).unwrap();
+    let c = train_epoch(&mut pipelined, &ds, BATCH, SEED).unwrap();
+    assert!(!a.is_empty());
+    assert_stats_bit_identical(&a, &b, &format!("{what}: cached serial vs uncached oracle"));
+    assert_stats_bit_identical(&a, &c, &format!("{what}: cached pipelined vs uncached oracle"));
+    assert_params_bit_identical(&oracle.params, &serial.params, what);
+    assert_params_bit_identical(&oracle.params, &pipelined.params, what);
+
+    // Byte accounting: both cached executors saw the identical split, and
+    // it sums to exactly what the oracle loaded from host memory.
+    let oracle_split = LoadStats::sum(oracle.load_stats());
+    assert_eq!(oracle_split.local_bytes + oracle_split.peer_bytes, 0, "{what}: oracle uncached");
+    let serial_split = LoadStats::sum(serial.load_stats());
+    let pipelined_split = LoadStats::sum(pipelined.load_stats());
+    assert_eq!(serial_split, pipelined_split, "{what}: executors disagree on the byte split");
+    assert_eq!(
+        serial_split.total(),
+        oracle_split.host_bytes,
+        "{what}: Local/Peer/Host split must sum to the uncached total"
+    );
+    (serial_split, oracle_split.host_bytes)
+}
+
+#[test]
+fn cached_epochs_bit_identical_across_policies_budgets_workers() {
+    let topo = Topology::p3_8xlarge(1.0);
+    for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+        for budget in [64u64, 1024] {
+            for workers in [1usize, 2, 4] {
+                let what = format!("{}/budget{budget}/workers{workers}", policy.name());
+                let (split, total) = check_case(&topo, policy, budget, workers, &what);
+                match policy {
+                    CachePolicy::None => {
+                        assert_eq!(split.local_bytes + split.peer_bytes, 0, "{what}");
+                        assert_eq!(split.host_bytes, total, "{what}");
+                    }
+                    CachePolicy::Distributed => {
+                        // All-NVLink 4-GPU host: the single-copy cache is
+                        // partitioned, so hits split into Local and Peer.
+                        assert!(split.local_bytes > 0, "{what}: no local hits");
+                        assert!(split.peer_bytes > 0, "{what}: no peer fetches");
+                    }
+                    CachePolicy::Partitioned => {
+                        assert!(split.local_bytes > 0, "{what}: no local hits");
+                        assert_eq!(
+                            split.peer_bytes, 0,
+                            "{what}: owner-consistent cache never fetches from peers"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_epochs_bit_identical_on_truncated_cube_mesh() {
+    // k = 6 cube-mesh truncation: some cached copies sit behind missing
+    // NVLinks, so the Distributed policy exercises Local, Peer, AND the
+    // linkless-copy → Host fallback in one run — still bit-identical.
+    let topo = Topology::for_gpus(6, 1.0);
+    let (split, _) = check_case(&topo, CachePolicy::Distributed, 256, 3, "cube6/distributed");
+    assert!(split.local_bytes > 0 && split.peer_bytes > 0 && split.host_bytes > 0);
+    let (split_p, _) = check_case(&topo, CachePolicy::Partitioned, 256, 6, "cube6/partitioned");
+    assert_eq!(split_p.peer_bytes, 0);
+}
+
+#[test]
+fn backpressure_stress_with_peer_exchange() {
+    // Single-row chunks through capacity-1 channels while the loading
+    // exchange phase is active: maximal backpressure on the same fabric
+    // the forward/backward shuffles use.
+    let ds = StandIn::Tiny.load().unwrap();
+    let topo = Topology::p3_8xlarge(1.0);
+    let cfg = tiny_cfg(2);
+    let part = modulo_part(&ds, 4);
+    let backend = NativeBackend::new();
+    let cache = Arc::new(ResidentCache::build(
+        CachePolicy::Distributed,
+        &degree_ranking(&ds),
+        512,
+        &part,
+        &topo,
+        &ds.features,
+    ));
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 9).unwrap();
+    serial.set_cache(Some(Arc::clone(&cache))).unwrap();
+    let mut stressed = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 9).unwrap();
+    stressed.set_cache(Some(cache)).unwrap();
+    stressed.set_exec_mode(ExecMode::Pipelined(PipelineConfig {
+        workers: 3,
+        channel_cap: 1,
+        chunk_rows: 1,
+    }));
+    let a = train_epoch(&mut serial, &ds, BATCH, 9).unwrap();
+    let b = train_epoch(&mut stressed, &ds, BATCH, 9).unwrap();
+    assert_stats_bit_identical(&a, &b, "backpressure + peer exchange");
+    assert_params_bit_identical(&serial.params, &stressed.params, "backpressure + peer exchange");
+    assert!(LoadStats::sum(stressed.load_stats()).peer_bytes > 0, "stress must exercise the exchange");
+}
+
+#[test]
+fn set_cache_rejects_mismatched_device_count() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let topo = Topology::p3_8xlarge(1.0);
+    let part4 = modulo_part(&ds, 4);
+    let part2 = modulo_part(&ds, 2);
+    let backend = NativeBackend::new();
+    let cache = Arc::new(ResidentCache::build(
+        CachePolicy::Partitioned,
+        &degree_ranking(&ds),
+        64,
+        &part4,
+        &topo,
+        &ds.features,
+    ));
+    let cfg = tiny_cfg(2);
+    let mut trainer = Trainer::new(&backend, &cfg, FANOUT, part2, 0.2, SEED).unwrap();
+    assert!(trainer.set_cache(Some(cache)).is_err(), "k mismatch must be rejected");
+}

@@ -1,0 +1,70 @@
+//! Validate machine-readable bench reports (`BENCH_<suite>.json`) against
+//! the contract in `bench_harness` (see its module docs): a `suite` name,
+//! a `git_rev`, and a non-empty `cases` array whose entries carry finite,
+//! non-negative statistics. CI's `bench-smoke` job runs this over every
+//! JSON artifact the benches emitted and fails the build on any violation.
+//!
+//! Usage: `cargo run --release --bin check_bench_json -- BENCH_*.json`
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use gsplit::util::JsonValue;
+
+fn main() -> Result<()> {
+    let files: Vec<String> = std::env::args().skip(1).collect();
+    ensure!(!files.is_empty(), "usage: check_bench_json <BENCH_*.json>...");
+    let mut total_cases = 0usize;
+    for f in &files {
+        let n = check_file(f).with_context(|| format!("{f}: invalid bench report"))?;
+        println!("{f}: OK ({n} cases)");
+        total_cases += n;
+    }
+    println!("{} file(s), {total_cases} case(s): all valid", files.len());
+    Ok(())
+}
+
+fn str_field<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    v.get(key)?.as_str().ok_or_else(|| anyhow!("`{key}` must be a string"))
+}
+
+fn num_field(v: &JsonValue, key: &str) -> Result<f64> {
+    v.get(key)?.as_f64().ok_or_else(|| anyhow!("`{key}` must be a number"))
+}
+
+/// Validate one report; returns its case count.
+fn check_file(path: &str) -> Result<usize> {
+    let text = std::fs::read_to_string(path).context("cannot read file")?;
+    let v = JsonValue::parse(&text).context("not valid JSON")?;
+    ensure!(!str_field(&v, "suite")?.is_empty(), "`suite` must be non-empty");
+    ensure!(!str_field(&v, "git_rev")?.is_empty(), "`git_rev` must be non-empty");
+    let cases =
+        v.get("cases")?.as_arr().ok_or_else(|| anyhow!("`cases` must be an array"))?;
+    ensure!(!cases.is_empty(), "`cases` must be non-empty");
+    for (i, case) in cases.iter().enumerate() {
+        check_case(case).with_context(|| format!("case #{i}"))?;
+    }
+    Ok(cases.len())
+}
+
+fn check_case(case: &JsonValue) -> Result<()> {
+    ensure!(!str_field(case, "name")?.is_empty(), "`name` must be non-empty");
+    let iters = num_field(case, "iters")?;
+    ensure!(iters.fract() == 0.0 && iters >= 1.0, "`iters` must be a positive integer: {iters}");
+    let stat = |key: &str| -> Result<f64> {
+        let x = num_field(case, key)?;
+        ensure!(x.is_finite() && x >= 0.0, "`{key}` must be finite and >= 0, got {x}");
+        Ok(x)
+    };
+    let mean = stat("mean_s")?;
+    let median = stat("median_s")?;
+    let p95 = stat("p95_s")?;
+    let min = stat("min_s")?;
+    ensure!(min <= mean && min <= median && min <= p95, "`min_s` must be the smallest statistic");
+    match case.get("throughput_per_s")? {
+        JsonValue::Null => {}
+        JsonValue::Num(t) => {
+            ensure!(t.is_finite() && *t >= 0.0, "`throughput_per_s` must be finite and >= 0")
+        }
+        other => bail!("`throughput_per_s` must be a number or null, got {other}"),
+    }
+    Ok(())
+}
