@@ -1,8 +1,10 @@
 //! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md): neighbor
 //! sampling rate, online splitting + shuffle-index build rate, vertex-map
-//! throughput, partitioner wall time, feature gather bandwidth, and the
-//! serial-vs-pipelined real-compute epoch wall-clock (DESIGN.md
-//! §Executor).
+//! throughput, partitioner wall time, feature gather bandwidth, per-kernel
+//! GFLOP/s for the blocked/simd compute kernels (DESIGN.md §Perf "Rust
+//! kernel blocking"), the end-to-end epoch wall-clock under each
+//! `GSPLIT_KERNELS` variant, and the serial-vs-pipelined real-compute
+//! epoch wall-clock (DESIGN.md §Executor).
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -14,6 +16,7 @@ use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::{partition_graph, Partitioning, Strategy};
 use gsplit::presample::PresampleWeights;
 use gsplit::rng::{derive_seed, Pcg32};
+use gsplit::runtime::kernels::{self, KernelKind};
 use gsplit::runtime::NativeBackend;
 use gsplit::sampling::{Sampler, VertexMap};
 use gsplit::split::SplitSampler;
@@ -92,6 +95,117 @@ fn main() {
     });
     suite.record(&s);
 
+    // --- compute kernels: per-variant GFLOP/s on the hot primitives ---
+    // The acceptance bar (ISSUE 6): blocked ≥3× scalar GFLOP/s on the
+    // dense-transform kernels. Metric names are stable so
+    // check_bench_json --baseline can diff them across PRs.
+    let (km, kdin, kdout, kk) = if quick() { (256, 96, 96, 15) } else { (1024, 256, 256, 15) };
+    section("compute kernels per variant (dense/gather/attention)");
+    let mut krng = Pcg32::new(9);
+    let mut fill = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| krng.next_f32() - 0.5).collect::<Vec<f32>>()
+    };
+    let a1 = fill(km * kdin);
+    let a2 = fill(km * kdin);
+    let w1 = fill(kdin * kdout);
+    let w2 = fill(kdin * kdout);
+    let kbias = fill(kdout);
+    let g_up = fill(km * kdout);
+    let z_att = fill(km * kdout);
+    let s_src = fill(km);
+    let s_dst = fill(km);
+    let x_gather = fill(km * kdin);
+    drop(fill);
+    let mut kneigh = vec![gsplit::sampling::NO_NEIGHBOR; km * kk];
+    {
+        let mut nrng = Pcg32::new(11);
+        for slot in kneigh.iter_mut() {
+            if nrng.gen_range(5) != 0 {
+                *slot = nrng.gen_range(km as u32);
+            }
+        }
+    }
+    let variants: Vec<KernelKind> = KernelKind::all()
+        .into_iter()
+        .filter(|&kv| {
+            let ok = kv != KernelKind::Simd || kernels::simd_available();
+            if !ok {
+                println!("kernels/*/simd                   skipped (AVX2+FMA unavailable)");
+            }
+            ok
+        })
+        .collect();
+    // Dual dense transform (the GraphSage forward shape): 4 FLOPs/(i,p,q).
+    let flops_dual = 4.0 * (km * kdin * kdout) as f64;
+    let mut kout = vec![0f32; km * kdout];
+    for &kv in &variants {
+        let s = bench.run(&format!("kernels/dense_fwd/{}", kv.name()), Some(flops_dual), || {
+            gsplit::runtime::kernels::dense::dense_bias_act(
+                kv,
+                km,
+                kdin,
+                kdout,
+                &a1,
+                &w1,
+                Some((&a2, &w2)),
+                Some(&kbias),
+                true,
+                &mut kout,
+            );
+            kout[0]
+        });
+        suite.record(&s);
+    }
+    // Input-side VJP g·Wᵀ and weight-side VJP Aᵀ·g: 2 FLOPs/(i,p,q) each.
+    let flops_vjp = 2.0 * (km * kdin * kdout) as f64;
+    let mut kgx = vec![0f32; km * kdin];
+    for &kv in &variants {
+        let s = bench.run(&format!("kernels/dense_gx/{}", kv.name()), Some(flops_vjp), || {
+            kgx.fill(0.0);
+            gsplit::runtime::kernels::dense::matmul_gx_acc(
+                kv, km, kdin, kdout, &g_up, &w1, &mut kgx,
+            );
+            kgx[0]
+        });
+        suite.record(&s);
+    }
+    let mut kgw = vec![0f32; kdin * kdout];
+    for &kv in &variants {
+        let s = bench.run(&format!("kernels/dense_gw/{}", kv.name()), Some(flops_vjp), || {
+            kgw.fill(0.0);
+            gsplit::runtime::kernels::dense::matmul_gw_acc(
+                kv, km, kdin, kdout, &a1, &g_up, &mut kgw,
+            );
+            kgw[0]
+        });
+        suite.record(&s);
+    }
+    // Gather-mean: ~1 add per (edge, feature); identical numerics across
+    // variants, so throughput is the only thing that may differ.
+    let flops_gather = (km * kk * kdin) as f64;
+    let mut kagg = vec![0f32; km * kdin];
+    let mut kden = vec![0f32; km];
+    for &kv in &variants {
+        let s = bench.run(&format!("kernels/gather_mean/{}", kv.name()), Some(flops_gather), || {
+            gsplit::runtime::kernels::gather::gather_mean(
+                kv, &x_gather, &kneigh, km, kk, kdin, &mut kagg, &mut kden,
+            );
+            kagg[0]
+        });
+        suite.record(&s);
+    }
+    // One-pass GAT attention forward: ~2 FLOPs per (edge+self, channel).
+    let flops_attn = 2.0 * (km * (kk + 1) * kdout) as f64;
+    for &kv in &variants {
+        let s = bench.run(&format!("kernels/gat_attn/{}", kv.name()), Some(flops_attn), || {
+            gsplit::runtime::kernels::attn::attention_fwd(
+                kv, &z_att, &s_src, &s_dst, &kneigh, km, kk, kdout, &kbias, true, &mut kout,
+            );
+            kout[0]
+        });
+        suite.record(&s);
+    }
+
     // --- threaded pipelined executor: real-compute epoch wall-clock ---
     // Same seeds ⇒ bit-identical numerics (asserted below); the speedup
     // comes from per-device compute parallelism plus the sampling-ahead
@@ -165,6 +279,39 @@ fn main() {
         );
         suite.metric("executor/pipelined_cached_epoch_s", t);
         suite.metric("executor/cached_peer_bytes", peer as f64);
+    }
+
+    // --- end-to-end epoch per kernel variant (serial executor) ---
+    // The measured scalar→blocked/simd speedup the README quotes; blocked
+    // must stay bit-identical to scalar (asserted on the loss bits).
+    section("end-to-end epoch per kernel variant (serial, GraphSage)");
+    let mut t_scalar = f64::NAN;
+    let mut scalar_losses: Vec<u32> = Vec::new();
+    for &kv in &variants {
+        let kb = NativeBackend::with_kernels(kv);
+        let mut tr = Trainer::new(&kb, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
+        let (t, stats) =
+            timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("per-kernel epoch"));
+        let losses: Vec<u32> = stats.iter().map(|s| s.loss.to_bits()).collect();
+        if kv == KernelKind::Scalar {
+            t_scalar = t;
+            scalar_losses = losses;
+            println!("{:<8}                     {t:>8.3} s/epoch", kv.name());
+        } else {
+            if kv == KernelKind::Blocked {
+                assert_eq!(
+                    scalar_losses, losses,
+                    "blocked epoch diverged bitwise from the scalar oracle"
+                );
+            }
+            println!(
+                "{:<8}                     {t:>8.3} s/epoch   speedup {:.2}x vs scalar",
+                kv.name(),
+                t_scalar / t
+            );
+            suite.metric(&format!("kernels/epoch_speedup/{}", kv.name()), t_scalar / t);
+        }
+        suite.metric(&format!("kernels/epoch_s/{}", kv.name()), t);
     }
     suite.finish();
 }

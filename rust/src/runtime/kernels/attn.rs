@@ -1,0 +1,335 @@
+//! One-pass GAT attention: logits → LeakyReLU → masked softmax → weighted
+//! accumulate, per destination, without re-reading neighbor rows.
+//!
+//! The Rust port of `python/compile/kernels/gat_attn.py`'s fused scheme.
+//! These kernels take the *projected* features `z = x·W` and the per-row
+//! attention terms `s_src = z·a_src`, `s_dst = (z·a_dst)[:m]` (produced by
+//! [`super::dense`] plus plain dots) and run the attention stage; the
+//! projection VJPs are composed at the layer level in `native.rs`.
+//!
+//! **Numeric contract**: `blocked` is bit-identical to the scalar oracle —
+//! the softmax keeps the exact scalar operation order (LeakyReLU, running
+//! max, exp of the shifted logit, one divide), and the weighted accumulate
+//! adds neighbor contributions in the same ascending-`j` order per output
+//! element (lane-splitting the `dout` loop never reorders the additions one
+//! element sees). The `simd` variant fuses the `α·z` multiply-add and
+//! vectorizes the backward's `g·z` dot, so those results match within
+//! [`SIMD_REL_TOL`](super::SIMD_REL_TOL); its softmax stays scalar and
+//! bit-exact.
+
+use super::KernelKind;
+use crate::sampling::NO_NEIGHBOR;
+
+/// GAT LeakyReLU slope (Velickovic et al. 2018). Must match `LEAKY_SLOPE`
+/// in `native.rs`; the kernel-equivalence tests compare full layers across
+/// kernel kinds, so a divergence fails loudly.
+pub const LEAKY_SLOPE: f32 = 0.2;
+
+fn leaky(v: f32) -> f32 {
+    if v >= 0.0 {
+        v
+    } else {
+        LEAKY_SLOPE * v
+    }
+}
+
+/// Attention rows of destination `i`: the implicit self edge first, then
+/// every real neighbor. `logits` gets the raw (pre-LeakyReLU) scores
+/// `s_dst[i] + s_src[r]`. Same construction as `attention_rows` in
+/// `native.rs`.
+pub(super) fn rows_and_logits(
+    neigh: &[u32],
+    i: usize,
+    k: usize,
+    s_src: &[f32],
+    s_dst: &[f32],
+    rows: &mut Vec<usize>,
+    logits: &mut Vec<f32>,
+) {
+    rows.clear();
+    logits.clear();
+    rows.push(i);
+    logits.push(s_dst[i] + s_src[i]);
+    for &v in &neigh[i * k..(i + 1) * k] {
+        if v != NO_NEIGHBOR {
+            rows.push(v as usize);
+            logits.push(s_dst[i] + s_src[v as usize]);
+        }
+    }
+}
+
+/// Softmax of `leaky(logits)` in place, max-shifted; `logits` becomes α.
+/// Exact operation order of `softmax_leaky` in `native.rs`.
+pub(super) fn softmax_leaky(logits: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for t in logits.iter_mut() {
+        *t = leaky(*t);
+        mx = mx.max(*t);
+    }
+    let mut sum = 0f32;
+    for t in logits.iter_mut() {
+        *t = (*t - mx).exp();
+        sum += *t;
+    }
+    for t in logits.iter_mut() {
+        *t /= sum;
+    }
+}
+
+/// Fused attention forward for all `m` destinations:
+/// `out[i,:] = act(bias + Σ_j α_ij · z[r_ij,:])` with α from the masked
+/// LeakyReLU softmax over `{self} ∪ real neighbors`. `z` is `n×dout`,
+/// `out` (`m×dout`) is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd(
+    kind: KernelKind,
+    z: &[f32],
+    s_src: &[f32],
+    s_dst: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    dout: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(neigh.len(), m * k);
+    debug_assert_eq!(out.len(), m * dout);
+    debug_assert_eq!(bias.len(), dout);
+    debug_assert!(s_dst.len() >= m);
+    match kind.resolve() {
+        KernelKind::Scalar | KernelKind::Blocked => {
+            // The scalar and blocked paths share this loop: the accumulate
+            // is a j-outer axpy over contiguous rows, which autovectorizes;
+            // blocking beyond that buys nothing because each destination's
+            // working set (one α vector + one out row) already fits in
+            // registers + L1. Kept as one arm so both kinds are trivially
+            // bit-identical.
+            let mut rows = Vec::with_capacity(k + 1);
+            let mut alpha = Vec::with_capacity(k + 1);
+            for i in 0..m {
+                rows_and_logits(neigh, i, k, s_src, s_dst, &mut rows, &mut alpha);
+                softmax_leaky(&mut alpha);
+                let o = &mut out[i * dout..(i + 1) * dout];
+                o.copy_from_slice(bias);
+                for (&r, &a) in rows.iter().zip(&alpha) {
+                    let zr = &z[r * dout..(r + 1) * dout];
+                    for (ov, &zv) in o.iter_mut().zip(zr) {
+                        *ov += a * zv;
+                    }
+                }
+                if relu {
+                    for v in o.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+            }
+        }
+        KernelKind::Simd => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: `resolve()` returns `Simd` only when AVX2+FMA were
+            // detected at runtime.
+            unsafe {
+                super::simd::attention_fwd(z, s_src, s_dst, neigh, m, k, dout, bias, relu, out)
+            }
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            unreachable!("KernelKind::resolve folds simd away when unavailable")
+        }
+    }
+}
+
+/// Attention-stage VJP for all `m` destinations, accumulating into
+/// `g_z` (`n×dout`), `g_ssrc` (`n`), `g_sdst` (`m`), and `g_b` (`dout`).
+/// Recomputes α from `z`/`s_src`/`s_dst` exactly as the forward did; the
+/// ReLU mask recomputes the pre-activation. Mirrors the per-destination
+/// loop of `gat_bwd` in `native.rs` operation-for-operation (the `g·z`
+/// dot keeps a single ascending-`q` accumulator), so `blocked` is
+/// bit-identical to scalar.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd(
+    kind: KernelKind,
+    z: &[f32],
+    s_src: &[f32],
+    s_dst: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    dout: usize,
+    bias: &[f32],
+    relu: bool,
+    g_out: &[f32],
+    g_z: &mut [f32],
+    g_ssrc: &mut [f32],
+    g_sdst: &mut [f32],
+    g_b: &mut [f32],
+) {
+    debug_assert_eq!(neigh.len(), m * k);
+    debug_assert_eq!(g_out.len(), m * dout);
+    debug_assert_eq!(g_b.len(), dout);
+    debug_assert!(g_sdst.len() >= m);
+    let simd = matches!(kind.resolve(), KernelKind::Simd);
+    let mut rows = Vec::with_capacity(k + 1);
+    let mut ells = Vec::with_capacity(k + 1);
+    let mut alpha = Vec::with_capacity(k + 1);
+    let mut g_alpha = Vec::with_capacity(k + 1);
+    let mut g = vec![0f32; dout];
+    let mut h = vec![0f32; dout];
+    for i in 0..m {
+        rows_and_logits(neigh, i, k, s_src, s_dst, &mut rows, &mut ells);
+        alpha.clear();
+        alpha.extend_from_slice(&ells);
+        softmax_leaky(&mut alpha);
+        g.copy_from_slice(&g_out[i * dout..(i + 1) * dout]);
+        if relu {
+            // Recompute h_pre = bias + Σ α z for the mask. j-outer order:
+            // each h element still accumulates in ascending j, matching the
+            // scalar reference's per-q inner loop bit-for-bit.
+            h.copy_from_slice(bias);
+            for (&r, &a) in rows.iter().zip(&alpha) {
+                let zr = &z[r * dout..(r + 1) * dout];
+                if simd {
+                    axpy(a, zr, &mut h);
+                } else {
+                    for (hv, &zv) in h.iter_mut().zip(zr) {
+                        *hv += a * zv;
+                    }
+                }
+            }
+            for (gq, &hv) in g.iter_mut().zip(&h) {
+                if hv <= 0.0 {
+                    *gq = 0.0;
+                }
+            }
+        }
+        for (b, &gq) in g_b.iter_mut().zip(&g) {
+            *b += gq;
+        }
+        // out_i = Σ_j α_j z[r_j]:  g_α_j = g · z[r_j],  g_z[r_j] += α_j g.
+        g_alpha.clear();
+        for (&r, &a) in rows.iter().zip(&alpha) {
+            let zr = &z[r * dout..(r + 1) * dout];
+            let grow = &mut g_z[r * dout..(r + 1) * dout];
+            let d = if simd {
+                let d = dot(&g, zr);
+                axpy(a, &g, grow);
+                d
+            } else {
+                let mut d = 0f32;
+                for q in 0..dout {
+                    d += g[q] * zr[q];
+                }
+                for (gv, &gq) in grow.iter_mut().zip(&g) {
+                    *gv += a * gq;
+                }
+                d
+            };
+            g_alpha.push(d);
+        }
+        // Softmax VJP: g_t_j = α_j (g_α_j − Σ_l α_l g_α_l), then the
+        // LeakyReLU VJP on the raw logit ℓ_j.
+        let s: f32 = alpha.iter().zip(&g_alpha).map(|(a, ga)| a * ga).sum();
+        for ((&a, &ga), (&ell, &r)) in alpha.iter().zip(&g_alpha).zip(ells.iter().zip(&rows)) {
+            let slope = if ell >= 0.0 { 1.0 } else { LEAKY_SLOPE };
+            let g_ell = a * (ga - s) * slope;
+            g_sdst[i] += g_ell;
+            g_ssrc[r] += g_ell;
+        }
+    }
+}
+
+/// `y += a·x`, dispatched to FMA when the simd path is active.
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_available() {
+        // SAFETY: AVX2+FMA detected.
+        unsafe { super::simd::axpy(a, x, y) };
+        return;
+    }
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// `Σ x·y`, dispatched to a lane-parallel FMA reduction when the simd path
+/// is active (reassociates; tolerance-gated per the module contract).
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd_available() {
+        // SAFETY: AVX2+FMA detected.
+        return unsafe { super::simd::dot(x, y) };
+    }
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NB: u32 = NO_NEIGHBOR;
+
+    fn ramp(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
+    }
+
+    #[test]
+    fn blocked_attention_is_bit_identical_to_scalar() {
+        let (n, m, k, dout) = (9, 4, 3, 7);
+        let z = ramp(n * dout, 2.0);
+        let s_src = ramp(n, 1.0);
+        let s_dst = ramp(m, 1.0);
+        let bias = ramp(dout, 0.3);
+        let neigh = [4, 5, NB, 6, NB, NB, NB, NB, NB, 7, 8, 4];
+        let g_out = ramp(m * dout, 1.0);
+        for relu in [false, true] {
+            let mut o_s = vec![0f32; m * dout];
+            let mut o_b = vec![3f32; m * dout];
+            attention_fwd(
+                KernelKind::Scalar, &z, &s_src, &s_dst, &neigh, m, k, dout, &bias, relu, &mut o_s,
+            );
+            attention_fwd(
+                KernelKind::Blocked, &z, &s_src, &s_dst, &neigh, m, k, dout, &bias, relu, &mut o_b,
+            );
+            assert_eq!(o_s, o_b, "relu={relu}");
+
+            let mk = |_| (vec![0f32; n * dout], vec![0f32; n], vec![0f32; m], vec![0f32; dout]);
+            let (mut gz_s, mut gs_s, mut gd_s, mut gb_s) = mk(());
+            let (mut gz_b, mut gs_b, mut gd_b, mut gb_b) = mk(());
+            attention_bwd(
+                KernelKind::Scalar, &z, &s_src, &s_dst, &neigh, m, k, dout, &bias, relu, &g_out,
+                &mut gz_s, &mut gs_s, &mut gd_s, &mut gb_s,
+            );
+            attention_bwd(
+                KernelKind::Blocked, &z, &s_src, &s_dst, &neigh, m, k, dout, &bias, relu, &g_out,
+                &mut gz_b, &mut gs_b, &mut gd_b, &mut gb_b,
+            );
+            assert_eq!(gz_s, gz_b, "relu={relu}");
+            assert_eq!(gs_s, gs_b);
+            assert_eq!(gd_s, gd_b);
+            assert_eq!(gb_s, gb_b);
+        }
+    }
+
+    #[test]
+    fn isolated_destination_attends_to_self_only() {
+        let (n, m, k, dout) = (2, 1, 3, 2);
+        let z = vec![1.0, -2.0, 5.0, 5.0];
+        let bias = vec![0.25, 0.25];
+        let mut out = vec![0f32; m * dout];
+        attention_fwd(
+            KernelKind::Blocked,
+            &z,
+            &[0.3, 0.9],
+            &[0.1],
+            &[NB, NB, NB],
+            m,
+            k,
+            dout,
+            &bias,
+            false,
+            &mut out,
+        );
+        // α collapses onto the self edge: out = z[0] + bias.
+        assert_eq!(out, vec![1.25, -1.75]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Destination-tiled masked gather-mean aggregation.
+//!
+//! The Rust port of `python/compile/kernels/gather_mean.py`: for each
+//! destination vertex, sum the feature rows of its real sampled neighbors
+//! (slots equal to [`NO_NEIGHBOR`] are padding) and scale by
+//! `1/max(count, 1)`, fusing the reduce with the scale in one pass over the
+//! neighbor rows. Unlike the per-row `aggregate_row` helper in `native.rs`,
+//! this materializes the whole `m×din` aggregate matrix in one call — which
+//! is what lets the fast GraphSage path replace `m` rank-1 updates with one
+//! register-blocked dense transform (see [`super::dense`]).
+//!
+//! **Bit-identity contract**: every variant — including `simd` — is
+//! bit-identical to the scalar oracle. Each output element receives plain
+//! additions in ascending slot order followed by one multiply by the
+//! reciprocal count; lane-splitting an elementwise add never reorders the
+//! additions *a single element* sees, and AVX2 `add_ps`/`mul_ps` round
+//! exactly like their scalar counterparts.
+
+use super::KernelKind;
+use crate::sampling::NO_NEIGHBOR;
+
+/// Destination rows per tile. Matches the spirit of `BLOCK_M` in
+/// `gather_mean.py` scaled to CPU cache lines: 8 destination rows of
+/// accumulators stay L1-resident for typical `din ≤ 1024`.
+pub const BM: usize = 8;
+
+/// Masked mean over sampled neighbors for all `m` destinations.
+///
+/// `x` is `n×din` (only rows referenced by `neigh` are read), `neigh` is
+/// `m×k` with [`NO_NEIGHBOR`] padding, `agg` (`m×din`) and `denoms` (`m`)
+/// are fully overwritten; `denoms[i] = max(real_count(i), 1)` — the divisor
+/// the mean actually used, which the GraphSage backward needs to scale the
+/// scattered gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_mean(
+    kind: KernelKind,
+    x: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    agg: &mut [f32],
+    denoms: &mut [f32],
+) {
+    debug_assert_eq!(neigh.len(), m * k);
+    debug_assert_eq!(agg.len(), m * din);
+    debug_assert_eq!(denoms.len(), m);
+    match kind.resolve() {
+        KernelKind::Scalar => {
+            for i in 0..m {
+                denoms[i] = row_scalar(x, neigh, i, k, din, &mut agg[i * din..(i + 1) * din]);
+            }
+        }
+        KernelKind::Blocked => {
+            // Destination tiles: the BM rows of accumulators written by one
+            // tile stay cache-resident while their (random) neighbor rows
+            // stream through. Per element the additions still run in
+            // ascending slot order — bit-identical to scalar.
+            let mut i0 = 0;
+            while i0 < m {
+                let ie = (i0 + BM).min(m);
+                for i in i0..ie {
+                    denoms[i] = row_scalar(x, neigh, i, k, din, &mut agg[i * din..(i + 1) * din]);
+                }
+                i0 = ie;
+            }
+        }
+        KernelKind::Simd => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: `resolve()` returns `Simd` only when AVX2+FMA were
+            // detected at runtime.
+            unsafe {
+                super::simd::gather_mean(x, neigh, m, k, din, agg, denoms)
+            }
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            unreachable!("KernelKind::resolve folds simd away when unavailable")
+        }
+    }
+}
+
+/// One destination row: zero, sum real neighbor rows in slot order, scale
+/// by `1/max(count,1)`. Returns the divisor. Same operation order as
+/// `aggregate_row` in `native.rs`.
+fn row_scalar(x: &[f32], neigh: &[u32], i: usize, k: usize, din: usize, agg: &mut [f32]) -> f32 {
+    agg.fill(0.0);
+    let mut cnt = 0u32;
+    for &v in &neigh[i * k..(i + 1) * k] {
+        if v != NO_NEIGHBOR {
+            let row = &x[v as usize * din..(v as usize + 1) * din];
+            for (a, &b) in agg.iter_mut().zip(row) {
+                *a += b;
+            }
+            cnt += 1;
+        }
+    }
+    let denom = cnt.max(1) as f32;
+    let inv = 1.0 / denom;
+    for a in agg.iter_mut() {
+        *a *= inv;
+    }
+    denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NB: u32 = NO_NEIGHBOR;
+
+    fn ramp(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_scalar() {
+        // m spans tile boundaries; neigh mixes real slots, padding, an
+        // all-padded (isolated) row, and repeated neighbors.
+        let (m, k, din, n) = (11, 3, 13, 20);
+        let x = ramp(n * din, 2.0);
+        let mut neigh = vec![NB; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                if i != 4 && (i + j) % 3 != 2 {
+                    neigh[i * k + j] = ((m + i + 2 * j) % n) as u32;
+                }
+            }
+        }
+        let (mut a_s, mut d_s) = (vec![0f32; m * din], vec![0f32; m]);
+        let (mut a_b, mut d_b) = (vec![9f32; m * din], vec![9f32; m]);
+        gather_mean(KernelKind::Scalar, &x, &neigh, m, k, din, &mut a_s, &mut d_s);
+        gather_mean(KernelKind::Blocked, &x, &neigh, m, k, din, &mut a_b, &mut d_b);
+        assert_eq!(a_s, a_b);
+        assert_eq!(d_s, d_b);
+        // The isolated row aggregated to zeros with divisor 1.
+        assert!(a_s[4 * din..5 * din].iter().all(|&v| v == 0.0));
+        assert_eq!(d_s[4], 1.0);
+    }
+
+    #[test]
+    fn k_zero_gives_zero_aggregates() {
+        let (m, din) = (3, 5);
+        let x = ramp(m * din, 1.0);
+        let mut agg = vec![7f32; m * din];
+        let mut den = vec![0f32; m];
+        gather_mean(KernelKind::Blocked, &x, &[], m, 0, din, &mut agg, &mut den);
+        assert!(agg.iter().all(|&v| v == 0.0));
+        assert!(den.iter().all(|&v| v == 1.0));
+    }
+}

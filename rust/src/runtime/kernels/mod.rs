@@ -1,0 +1,184 @@
+//! Cache-blocked, vectorizable compute kernels for [`NativeBackend`].
+//!
+//! This module ports the blocking/padding scheme of the Pallas kernels
+//! (`python/compile/kernels/gather_mean.py` / `gat_attn.py`, DESIGN.md
+//! §Hardware-Adaptation) to the Rust backend, per DESIGN.md §Perf "Rust
+//! kernel blocking":
+//!
+//! * [`dense`] — register-blocked, tiled dense transforms (the `x·W`
+//!   halves of GraphSage and GAT) and their VJPs,
+//! * [`gather`] — destination-tiled masked gather-mean aggregation fusing
+//!   the neighbor reduce with the `1/max(count,1)` scale,
+//! * [`attn`] — one-pass GAT attention: logits → LeakyReLU → masked
+//!   softmax → weighted accumulate, without re-reading neighbor rows,
+//! * [`simd`] (cargo feature `simd`, `x86_64` only) — `std::arch`
+//!   AVX2/FMA inner loops behind runtime feature detection.
+//!
+//! Three variants are selectable per [`KernelKind`], overridden at runtime
+//! with `GSPLIT_KERNELS=scalar|blocked|simd` for A/B testing:
+//!
+//! | kind      | inner loops | numeric contract vs the scalar oracle |
+//! |-----------|-------------|----------------------------------------|
+//! | `scalar`  | the original straight loops in `runtime/native.rs` | **is** the oracle |
+//! | `blocked` | fixed-width-lane blocked scalar code (autovectorizes) | **bit-identical** (per-element accumulation order preserved by construction) |
+//! | `simd`    | AVX2 + FMA intrinsics | bit-identical for gather-mean; dense transforms and attention accumulates fuse multiply-add and reassociate dot reductions, so they match within [`SIMD_REL_TOL`] |
+//!
+//! The `blocked` bit-identity contract is what keeps the golden and
+//! finite-difference tests in `native.rs` bit-level, and is enforced (with
+//! the tolerance-gated `simd` comparison) by
+//! `rust/tests/kernel_equivalence.rs`. The serial and pipelined executors
+//! remain bit-identical *to each other* under every kernel choice because
+//! the choice is per-backend-instance and per-device compute is
+//! self-contained (DESIGN.md §Executor).
+
+pub mod attn;
+pub mod dense;
+pub mod gather;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod simd;
+
+use std::sync::OnceLock;
+
+use anyhow::bail;
+
+use crate::Result;
+
+/// Relative tolerance for comparing `simd` kernel outputs against the
+/// scalar oracle where the contract relaxes bit-identity (FMA fuses the
+/// multiply-add rounding step; lane-parallel dot reductions reassociate).
+/// Per element the error is bounded by `terms × ulp`; test shapes keep
+/// `din, dout ≤ 96` and inputs O(1), so 1e-4 × (1 + |oracle|) is ~3
+/// decimal orders above the worst case while still catching real bugs.
+pub const SIMD_REL_TOL: f32 = 1e-4;
+
+/// Which inner-loop implementation the backend dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The original straight scalar loops — the reference oracle.
+    Scalar,
+    /// Register-blocked / tiled scalar code that autovectorizes.
+    /// Bit-identical to `Scalar` by construction.
+    Blocked,
+    /// AVX2/FMA intrinsics (`--features simd`, runtime-detected).
+    Simd,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+            KernelKind::Simd => "simd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        match s {
+            "scalar" => Ok(KernelKind::Scalar),
+            "blocked" => Ok(KernelKind::Blocked),
+            "simd" => Ok(KernelKind::Simd),
+            other => bail!("unknown kernel kind `{other}` (scalar|blocked|simd)"),
+        }
+    }
+
+    /// Every kind, for sweeps (benches, property tests). `Simd` is
+    /// included even when unavailable; [`KernelKind::resolve`] then folds
+    /// it back to `Blocked`.
+    pub fn all() -> [KernelKind; 3] {
+        [KernelKind::Scalar, KernelKind::Blocked, KernelKind::Simd]
+    }
+
+    /// Fold an unavailable choice onto the best available one: `Simd`
+    /// degrades to `Blocked` when the `simd` feature is not compiled in or
+    /// the CPU lacks AVX2+FMA. `Scalar`/`Blocked` are always available.
+    pub fn resolve(self) -> KernelKind {
+        match self {
+            KernelKind::Simd if !simd_available() => KernelKind::Blocked,
+            k => k,
+        }
+    }
+
+    /// The kernel choice for this process: `GSPLIT_KERNELS` if set (an
+    /// invalid value warns once and is ignored), else `Blocked` — the
+    /// fastest kind whose numerics are machine-independent. `simd` is
+    /// opt-in because FMA results differ per microarchitecture, and the
+    /// repo's defaults are reproducible everywhere.
+    pub fn from_env() -> KernelKind {
+        static CHOICE: OnceLock<KernelKind> = OnceLock::new();
+        *CHOICE.get_or_init(|| {
+            let requested = match std::env::var("GSPLIT_KERNELS") {
+                Ok(v) => match KernelKind::parse(&v) {
+                    Ok(k) => k,
+                    Err(e) => {
+                        eprintln!("[gsplit] ignoring GSPLIT_KERNELS: {e}");
+                        KernelKind::Blocked
+                    }
+                },
+                Err(_) => KernelKind::Blocked,
+            };
+            let resolved = requested.resolve();
+            if resolved != requested {
+                eprintln!(
+                    "[gsplit] GSPLIT_KERNELS={} unavailable (feature `simd` compiled: {}, \
+                     AVX2+FMA detected: {}); falling back to `{}`",
+                    requested.name(),
+                    simd_compiled(),
+                    simd_available(),
+                    resolved.name()
+                );
+            }
+            resolved
+        })
+    }
+}
+
+/// Whether the `simd` cargo feature (and the x86_64 target) was compiled.
+pub fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Whether the AVX2/FMA path is usable at runtime: compiled in *and* the
+/// host CPU reports both features.
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for k in KernelKind::all() {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn resolve_folds_unavailable_simd() {
+        assert_eq!(KernelKind::Scalar.resolve(), KernelKind::Scalar);
+        assert_eq!(KernelKind::Blocked.resolve(), KernelKind::Blocked);
+        let r = KernelKind::Simd.resolve();
+        if simd_available() {
+            assert_eq!(r, KernelKind::Simd);
+        } else {
+            assert_eq!(r, KernelKind::Blocked);
+        }
+    }
+
+    #[test]
+    fn simd_available_implies_compiled() {
+        if simd_available() {
+            assert!(simd_compiled());
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! AVX2/FMA inner loops (`--features simd`, `x86_64` only).
+//!
+//! Every function here is an `unsafe fn` carrying
+//! `#[target_feature(enable = "avx2,fma")]` — on the pinned 1.84 toolchain
+//! `target_feature` requires `unsafe fn` (safe `target_feature` stabilized
+//! later) — and is only reachable through [`super::KernelKind::resolve`],
+//! which returns `Simd` exclusively when `is_x86_feature_detected!` reports
+//! both AVX2 and FMA at runtime.
+//!
+//! Numerics (see the contract table in [`super`]): [`gather_mean`] uses
+//! only `add_ps`/`mul_ps`, which round exactly like their scalar
+//! counterparts and preserve the ascending-slot order per element, so it is
+//! **bit-identical** to the scalar oracle. The dense transforms and
+//! attention accumulates use `fmadd_ps` (one rounding instead of two) and
+//! [`dot`] reassociates the reduction across 8 lanes — those match within
+//! [`super::SIMD_REL_TOL`].
+
+#![allow(clippy::missing_safety_doc)] // one shared contract, documented above
+
+use std::arch::x86_64::*;
+
+use crate::sampling::NO_NEIGHBOR;
+
+const L: usize = 8; // f32 lanes per AVX2 vector
+
+/// Horizontal sum of one vector. Stores to a stack array and sums in lane
+/// order — this is the only reassociation the simd dot introduces.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let mut t = [0f32; L];
+    _mm256_storeu_ps(t.as_mut_ptr(), v);
+    let mut s = 0f32;
+    for x in t {
+        s += x;
+    }
+    s
+}
+
+/// `Σ x·y` with lane-parallel FMA accumulation.
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn imp(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let full = n - n % L;
+        let mut acc = _mm256_setzero_ps();
+        let mut q = 0;
+        while q < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(q));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(q));
+            acc = _mm256_fmadd_ps(xv, yv, acc);
+            q += L;
+        }
+        let mut s = hsum(acc);
+        for q in full..n {
+            s += x[q] * y[q];
+        }
+        s
+    }
+    imp(x, y)
+}
+
+/// `y += a·x` with FMA.
+pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn imp(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let full = n - n % L;
+        let av = _mm256_set1_ps(a);
+        let mut q = 0;
+        while q < full {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(q));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(q));
+            _mm256_storeu_ps(y.as_mut_ptr().add(q), _mm256_fmadd_ps(av, xv, yv));
+            q += L;
+        }
+        for q in full..n {
+            y[q] += a * x[q];
+        }
+    }
+    imp(a, x, y)
+}
+
+/// FMA twin of `dense::dense_bias_act`: MR=4 destination rows × one AVX2
+/// vector of output columns held in registers across the whole `din`
+/// reduction; scalar row/column tails.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn dense_bias_act(
+    m: usize,
+    din: usize,
+    dout: usize,
+    a1: &[f32],
+    w1: &[f32],
+    pair: Option<(&[f32], &[f32])>,
+    bias: Option<&[f32]>,
+    relu: bool,
+    out: &mut [f32],
+) {
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn imp(
+        m: usize,
+        din: usize,
+        dout: usize,
+        a1: &[f32],
+        w1: &[f32],
+        pair: Option<(&[f32], &[f32])>,
+        bias: Option<&[f32]>,
+        relu: bool,
+        out: &mut [f32],
+    ) {
+        const MR: usize = 4;
+        let q_full = dout - dout % L;
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < m {
+            let mr = (m - i).min(MR);
+            let mut q0 = 0;
+            while q0 < q_full {
+                let init = match bias {
+                    Some(b) => _mm256_loadu_ps(b.as_ptr().add(q0)),
+                    None => zero,
+                };
+                let mut acc = [init; MR];
+                match pair {
+                    Some((a2, w2)) => {
+                        for p in 0..din {
+                            let w1v = _mm256_loadu_ps(w1.as_ptr().add(p * dout + q0));
+                            let w2v = _mm256_loadu_ps(w2.as_ptr().add(p * dout + q0));
+                            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                                let x1 = _mm256_set1_ps(a1[(i + r) * din + p]);
+                                let x2 = _mm256_set1_ps(a2[(i + r) * din + p]);
+                                *accr = _mm256_fmadd_ps(x1, w1v, *accr);
+                                *accr = _mm256_fmadd_ps(x2, w2v, *accr);
+                            }
+                        }
+                    }
+                    None => {
+                        for p in 0..din {
+                            let w1v = _mm256_loadu_ps(w1.as_ptr().add(p * dout + q0));
+                            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                                let x1 = _mm256_set1_ps(a1[(i + r) * din + p]);
+                                *accr = _mm256_fmadd_ps(x1, w1v, *accr);
+                            }
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    let v = if relu { _mm256_max_ps(*accr, zero) } else { *accr };
+                    _mm256_storeu_ps(out.as_mut_ptr().add((i + r) * dout + q0), v);
+                }
+                q0 += L;
+            }
+            for q in q_full..dout {
+                for r in 0..mr {
+                    let mut acc = bias.map_or(0.0, |b| b[q]);
+                    let a1r = &a1[(i + r) * din..(i + r + 1) * din];
+                    match pair {
+                        Some((a2, w2)) => {
+                            let a2r = &a2[(i + r) * din..(i + r + 1) * din];
+                            for p in 0..din {
+                                acc += a1r[p] * w1[p * dout + q] + a2r[p] * w2[p * dout + q];
+                            }
+                        }
+                        None => {
+                            for p in 0..din {
+                                acc += a1r[p] * w1[p * dout + q];
+                            }
+                        }
+                    }
+                    out[(i + r) * dout + q] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+            i += mr;
+        }
+    }
+    imp(m, din, dout, a1, w1, pair, bias, relu, out)
+}
+
+/// FMA twin of `dense::matmul_gx_acc`. Both `g[i,:]` and `w[p,:]` are
+/// `dout`-contiguous, so each `gx[i,p]` is one vectorized dot — no
+/// transpose needed.
+pub unsafe fn matmul_gx_acc(
+    m: usize,
+    din: usize,
+    dout: usize,
+    g: &[f32],
+    w: &[f32],
+    gx: &mut [f32],
+) {
+    for i in 0..m {
+        let grow = &g[i * dout..(i + 1) * dout];
+        let gxrow = &mut gx[i * din..(i + 1) * din];
+        for (p, o) in gxrow.iter_mut().enumerate() {
+            *o += dot(grow, &w[p * dout..(p + 1) * dout]);
+        }
+    }
+}
+
+/// FMA twin of `dense::matmul_gw_acc`: rank-1 update per `(i,p)` as an
+/// axpy over the contiguous `gw[p,:]` row.
+pub unsafe fn matmul_gw_acc(
+    m: usize,
+    din: usize,
+    dout: usize,
+    a: &[f32],
+    g: &[f32],
+    gw: &mut [f32],
+) {
+    for i in 0..m {
+        let grow = &g[i * dout..(i + 1) * dout];
+        for p in 0..din {
+            axpy(a[i * din + p], grow, &mut gw[p * dout..(p + 1) * dout]);
+        }
+    }
+}
+
+/// AVX2 twin of `gather::gather_mean`. Only `add_ps`/`mul_ps` — rounds
+/// exactly like scalar, per-element slot order preserved: bit-identical to
+/// the oracle.
+pub unsafe fn gather_mean(
+    x: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    agg: &mut [f32],
+    denoms: &mut [f32],
+) {
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn imp(
+        x: &[f32],
+        neigh: &[u32],
+        m: usize,
+        k: usize,
+        din: usize,
+        agg: &mut [f32],
+        denoms: &mut [f32],
+    ) {
+        let full = din - din % L;
+        for i in 0..m {
+            let arow = &mut agg[i * din..(i + 1) * din];
+            arow.fill(0.0);
+            let mut cnt = 0u32;
+            for &v in &neigh[i * k..(i + 1) * k] {
+                if v != NO_NEIGHBOR {
+                    let row = &x[v as usize * din..(v as usize + 1) * din];
+                    let mut p = 0;
+                    while p < full {
+                        let av = _mm256_loadu_ps(arow.as_ptr().add(p));
+                        let rv = _mm256_loadu_ps(row.as_ptr().add(p));
+                        _mm256_storeu_ps(arow.as_mut_ptr().add(p), _mm256_add_ps(av, rv));
+                        p += L;
+                    }
+                    for p in full..din {
+                        arow[p] += row[p];
+                    }
+                    cnt += 1;
+                }
+            }
+            let denom = cnt.max(1) as f32;
+            let inv = 1.0 / denom;
+            let invv = _mm256_set1_ps(inv);
+            let mut p = 0;
+            while p < full {
+                let av = _mm256_loadu_ps(arow.as_ptr().add(p));
+                _mm256_storeu_ps(arow.as_mut_ptr().add(p), _mm256_mul_ps(av, invv));
+                p += L;
+            }
+            for a in &mut arow[full..] {
+                *a *= inv;
+            }
+            denoms[i] = denom;
+        }
+    }
+    imp(x, neigh, m, k, din, agg, denoms)
+}
+
+/// FMA twin of `attn::attention_fwd`: scalar (bit-exact) softmax, FMA
+/// weighted accumulate.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn attention_fwd(
+    z: &[f32],
+    s_src: &[f32],
+    s_dst: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    dout: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    let mut rows = Vec::with_capacity(k + 1);
+    let mut alpha = Vec::with_capacity(k + 1);
+    for i in 0..m {
+        super::attn::rows_and_logits(neigh, i, k, s_src, s_dst, &mut rows, &mut alpha);
+        super::attn::softmax_leaky(&mut alpha);
+        let o = &mut out[i * dout..(i + 1) * dout];
+        o.copy_from_slice(bias);
+        for (&r, &a) in rows.iter().zip(&alpha) {
+            axpy(a, &z[r * dout..(r + 1) * dout], o);
+        }
+        if relu {
+            for v in o.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{simd_available, SIMD_REL_TOL};
+    use super::*;
+
+    fn ramp(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 * scale - scale / 2.0).collect()
+    }
+
+    #[test]
+    fn simd_dot_and_axpy_match_scalar_within_tolerance() {
+        if !simd_available() {
+            return;
+        }
+        for n in [1, 7, 8, 9, 31, 64] {
+            let x = ramp(n, 2.0);
+            let y = ramp(n, 1.0);
+            let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            // SAFETY: guarded by simd_available above.
+            let got = unsafe { dot(&x, &y) };
+            assert!(
+                (want - got).abs() <= SIMD_REL_TOL * (1.0 + want.abs()),
+                "dot n={n}: {want} vs {got}"
+            );
+            let mut ys = y.clone();
+            let mut yv = y.clone();
+            for (o, &xv) in ys.iter_mut().zip(&x) {
+                *o += 0.37 * xv;
+            }
+            // SAFETY: guarded by simd_available above.
+            unsafe { axpy(0.37, &x, &mut yv) };
+            for (s, v) in ys.iter().zip(&yv) {
+                assert!((s - v).abs() <= SIMD_REL_TOL * (1.0 + s.abs()), "axpy n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_gather_mean_is_bit_identical_to_scalar() {
+        if !simd_available() {
+            return;
+        }
+        use super::super::{gather, KernelKind};
+        let (m, k, din, n) = (5, 4, 19, 12);
+        let x = ramp(n * din, 2.0);
+        let neigh: Vec<u32> = (0..m * k)
+            .map(|s| if s % 3 == 2 { NO_NEIGHBOR } else { (s % n) as u32 })
+            .collect();
+        let (mut a_s, mut d_s) = (vec![0f32; m * din], vec![0f32; m]);
+        let (mut a_v, mut d_v) = (vec![0f32; m * din], vec![0f32; m]);
+        gather::gather_mean(KernelKind::Scalar, &x, &neigh, m, k, din, &mut a_s, &mut d_s);
+        // SAFETY: guarded by simd_available above.
+        unsafe { gather_mean(&x, &neigh, m, k, din, &mut a_v, &mut d_v) };
+        assert_eq!(a_s, a_v);
+        assert_eq!(d_s, d_v);
+    }
+}

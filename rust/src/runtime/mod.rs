@@ -18,7 +18,9 @@
 //! * [`NativeBackend`] (default) — pure Rust, zero external dependencies,
 //!   numerically validated against the JAX references in
 //!   `python/compile/kernels/ref.py`. This is what a fresh clone builds,
-//!   trains, and tests with.
+//!   trains, and tests with. Its hot loops dispatch through the
+//!   cache-blocked [`kernels`] module ([`KernelKind`], overridable with
+//!   `GSPLIT_KERNELS=scalar|blocked|simd`).
 //! * `Runtime` (requires the `pjrt` cargo feature) — loads the AOT HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them
 //!   through a PJRT client, exactly as before the backend split. See
@@ -37,6 +39,7 @@
 //!   (GraphSage: `[w_self, w_neigh, bias]`; GAT:
 //!   `[w, a_src, a_dst, bias]`), and gradients are returned in that order.
 
+pub mod kernels;
 mod manifest;
 mod native;
 
@@ -45,6 +48,7 @@ mod pjrt;
 #[cfg(feature = "pjrt")]
 mod tensors;
 
+pub use kernels::KernelKind;
 pub use manifest::{ArtifactMeta, Manifest};
 pub use native::NativeBackend;
 

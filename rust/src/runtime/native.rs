@@ -21,13 +21,21 @@
 //! oracles, and finite-difference tests check every gradient path against
 //! the forward implementation.
 //!
-//! This backend favors clarity over speed (straight scalar loops, row-major
-//! slices, no SIMD); it exists so that a fresh clone can build, train, and
-//! test with zero external artifacts. Keep it boring — it is the oracle
-//! faster backends are tested against.
+//! The straight scalar loops in this file are the **reference oracle** —
+//! keep them boring; faster paths are tested against them. Execution
+//! dispatches per [`KernelKind`]: `Scalar` runs the oracle loops verbatim,
+//! while `Blocked`/`Simd` compose the same layers from the cache-blocked
+//! primitives in [`super::kernels`] (batch gather-mean → register-blocked
+//! dense transform → fused attention). `Blocked` — the default — is
+//! bit-identical to `Scalar` by construction (see the contract table in
+//! `kernels/mod.rs`), so every golden/finite-difference test below runs
+//! unchanged under either; `simd` relaxes to a documented tolerance and is
+//! compared in `rust/tests/kernel_equivalence.rs`. Override the choice per
+//! process with `GSPLIT_KERNELS=scalar|blocked|simd`.
 
 use anyhow::{bail, ensure};
 
+use super::kernels::{self, KernelKind};
 use super::{Backend, LayerGrads, LossOut};
 use crate::model::{GnnKind, LayerParams};
 use crate::sampling::NO_NEIGHBOR;
@@ -36,13 +44,36 @@ use crate::Result;
 /// GAT LeakyReLU slope (Velickovic et al. 2018), matching `ref.py`.
 const LEAKY_SLOPE: f32 = 0.2;
 
-/// Pure-Rust execution backend. Stateless and `Copy`; construct freely.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct NativeBackend;
+/// Pure-Rust execution backend. `Copy` and cheap to construct; the only
+/// state is the kernel choice, fixed per instance so concurrent executor
+/// threads sharing one backend always agree on numerics.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBackend {
+    kernels: KernelKind,
+}
 
 impl NativeBackend {
+    /// Backend with the process-wide kernel choice (`GSPLIT_KERNELS` if
+    /// set, else `blocked`; see [`KernelKind::from_env`]).
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { kernels: KernelKind::from_env() }
+    }
+
+    /// Backend pinned to a specific kernel variant (A/B tests, benches).
+    /// An unavailable `Simd` request folds back to `Blocked`.
+    pub fn with_kernels(kind: KernelKind) -> NativeBackend {
+        NativeBackend { kernels: kind.resolve() }
+    }
+
+    /// The kernel variant this instance dispatches to.
+    pub fn kernels(&self) -> KernelKind {
+        self.kernels
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> NativeBackend {
+        NativeBackend::new()
     }
 }
 
@@ -68,13 +99,26 @@ impl Backend for NativeBackend {
         match model {
             GnnKind::GraphSage => {
                 let (w_self, w_neigh, bias) = sage_params(params);
-                Ok(sage_fwd(x, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias))
+                Ok(match self.kernels {
+                    KernelKind::Scalar => {
+                        sage_fwd(x, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias)
+                    }
+                    k => sage_fwd_fast(
+                        k, x, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias,
+                    ),
+                })
             }
             GnnKind::Gat => {
                 let (w, a_src, a_dst, bias) = gat_params(params);
-                Ok(gat_fwd(
-                    x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias,
-                ))
+                Ok(match self.kernels {
+                    KernelKind::Scalar => gat_fwd(
+                        x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias,
+                    ),
+                    k => gat_fwd_fast(
+                        k, x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst,
+                        bias,
+                    ),
+                })
             }
         }
     }
@@ -103,15 +147,29 @@ impl Backend for NativeBackend {
         match model {
             GnnKind::GraphSage => {
                 let (w_self, w_neigh, bias) = sage_params(params);
-                Ok(sage_bwd(
-                    x, n_real, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias, g_out,
-                ))
+                Ok(match self.kernels {
+                    KernelKind::Scalar => sage_bwd(
+                        x, n_real, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh, bias,
+                        g_out,
+                    ),
+                    k => sage_bwd_fast(
+                        k, x, n_real, neigh, m_real, k_real, din, dout, relu, w_self, w_neigh,
+                        bias, g_out,
+                    ),
+                })
             }
             GnnKind::Gat => {
                 let (w, a_src, a_dst, bias) = gat_params(params);
-                Ok(gat_bwd(
-                    x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias, g_out,
-                ))
+                Ok(match self.kernels {
+                    KernelKind::Scalar => gat_bwd(
+                        x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst, bias,
+                        g_out,
+                    ),
+                    k => gat_bwd_fast(
+                        k, x, n_real, neigh, m_real, k_real, din, dout, relu, w, a_src, a_dst,
+                        bias, g_out,
+                    ),
+                })
             }
         }
     }
@@ -207,9 +265,16 @@ fn check_layer_args(
             bail!("neigh[{slot}] = {v} out of range for {n_real} mixed rows");
         }
     }
+    // Validate each parameter tensor against the layer dims *by name*, so a
+    // din/dout mismatch fails here with a pointed message instead of
+    // slice-panicking deep inside the kernels.
     let want = match model {
-        GnnKind::GraphSage => vec![din * dout, din * dout, dout],
-        GnnKind::Gat => vec![din * dout, dout, dout, dout],
+        GnnKind::GraphSage => {
+            vec![("w_self", din * dout), ("w_neigh", din * dout), ("bias", dout)]
+        }
+        GnnKind::Gat => {
+            vec![("w", din * dout), ("a_src", dout), ("a_dst", dout), ("bias", dout)]
+        }
     };
     ensure!(
         params.tensors.len() == want.len(),
@@ -217,10 +282,11 @@ fn check_layer_args(
         want.len(),
         params.tensors.len()
     );
-    for (t, (tensor, w)) in params.tensors.iter().zip(&want).enumerate() {
+    for (tensor, (name, w)) in params.tensors.iter().zip(&want) {
         ensure!(
             tensor.len() == *w,
-            "{model:?} parameter tensor {t} has {} values, expected {w}",
+            "{model:?} parameter tensor `{name}` has {} values, expected {w} for din={din}, \
+             dout={dout}",
             tensor.len()
         );
     }
@@ -613,6 +679,241 @@ fn gat_bwd(
     LayerGrads { g_x, g_params: vec![g_w, g_asrc, g_adst, g_b] }
 }
 
+// ---------------------------------------------------------------------------
+// Fast paths: the same layers composed from the blocked/simd kernel
+// primitives (batch gather-mean → register-blocked dense → fused attention).
+// With `KernelKind::Blocked` every function here is bit-identical to its
+// scalar twin above — each output element sees the same additions in the
+// same order — which `rust/tests/kernel_equivalence.rs` enforces.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn sage_fwd_fast(
+    kind: KernelKind,
+    x: &[f32],
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w_self: &[f32],
+    w_neigh: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    // Materializing the m×din aggregate matrix turns the per-row rank-1
+    // updates of the scalar path into one register-blocked dual transform.
+    let mut agg = vec![0f32; m * din];
+    let mut denoms = vec![0f32; m];
+    kernels::gather::gather_mean(kind, x, neigh, m, k, din, &mut agg, &mut denoms);
+    let mut out = vec![0f32; m * dout];
+    kernels::dense::dense_bias_act(
+        kind,
+        m,
+        din,
+        dout,
+        &x[..m * din],
+        w_self,
+        Some((&agg, w_neigh)),
+        Some(bias),
+        relu,
+        &mut out,
+    );
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sage_bwd_fast(
+    kind: KernelKind,
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w_self: &[f32],
+    w_neigh: &[f32],
+    bias: &[f32],
+    g_out: &[f32],
+) -> LayerGrads {
+    let mut agg = vec![0f32; m * din];
+    let mut denoms = vec![0f32; m];
+    kernels::gather::gather_mean(kind, x, neigh, m, k, din, &mut agg, &mut denoms);
+    let x_self = &x[..m * din];
+    let mut g = g_out.to_vec();
+    if relu {
+        // Recompute the pre-activation batch-wide for the mask; bit-equal
+        // to the scalar recompute, so the masks agree exactly.
+        let mut h = vec![0f32; m * dout];
+        kernels::dense::dense_bias_act(
+            kind,
+            m,
+            din,
+            dout,
+            x_self,
+            w_self,
+            Some((&agg, w_neigh)),
+            Some(bias),
+            false,
+            &mut h,
+        );
+        for (gv, &hv) in g.iter_mut().zip(&h) {
+            if hv <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+    }
+    let mut g_b = vec![0f32; dout];
+    for i in 0..m {
+        for (b, &gq) in g_b.iter_mut().zip(&g[i * dout..(i + 1) * dout]) {
+            *b += gq;
+        }
+    }
+    let mut g_ws = vec![0f32; din * dout];
+    kernels::dense::matmul_gw_acc(kind, m, din, dout, x_self, &g, &mut g_ws);
+    let mut g_wn = vec![0f32; din * dout];
+    kernels::dense::matmul_gw_acc(kind, m, din, dout, &agg, &g, &mut g_wn);
+    // Per-destination input gradients: s_self = G @ w_selfᵀ feeds the
+    // destination's own row, s_nbr = (G @ w_neighᵀ) / denom is scattered to
+    // its sampled neighbors.
+    let mut s_self = vec![0f32; m * din];
+    kernels::dense::matmul_gx_acc(kind, m, din, dout, &g, w_self, &mut s_self);
+    let mut s_nbr = vec![0f32; m * din];
+    kernels::dense::matmul_gx_acc(kind, m, din, dout, &g, w_neigh, &mut s_nbr);
+    for i in 0..m {
+        let d = denoms[i];
+        for v in &mut s_nbr[i * din..(i + 1) * din] {
+            *v /= d;
+        }
+    }
+    // The write order into g_x must stay per-destination-interleaved (self
+    // add, then the neighbor scatter, destinations ascending): a row can
+    // receive its self gradient from i₁ and scattered gradients from some
+    // i₂ < i₁, and float addition does not commute bitwise.
+    let mut g_x = vec![0f32; n * din];
+    for i in 0..m {
+        for (o, &s) in g_x[i * din..(i + 1) * din].iter_mut().zip(&s_self[i * din..(i + 1) * din])
+        {
+            *o += s;
+        }
+        let srow = &s_nbr[i * din..(i + 1) * din];
+        for &v in &neigh[i * k..(i + 1) * k] {
+            if v != NO_NEIGHBOR {
+                let row = &mut g_x[v as usize * din..(v as usize + 1) * din];
+                for (r, &ga) in row.iter_mut().zip(srow) {
+                    *r += ga;
+                }
+            }
+        }
+    }
+    LayerGrads { g_x, g_params: vec![g_ws, g_wn, g_b] }
+}
+
+/// Fast twin of `gat_project`: blocked dense for `z = x @ w`, then the same
+/// ascending-`q` scalar dots for `s_src`/`s_dst` under every kernel kind
+/// (they are O(n·dout) and keeping them scalar keeps them bit-exact).
+#[allow(clippy::too_many_arguments)]
+fn gat_project_fast(
+    kind: KernelKind,
+    x: &[f32],
+    n: usize,
+    m: usize,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut z = vec![0f32; n * dout];
+    kernels::dense::dense_bias_act(kind, n, din, dout, x, w, None, None, false, &mut z);
+    let dot = |row: &[f32], a: &[f32]| -> f32 { row.iter().zip(a).map(|(x, y)| x * y).sum() };
+    let s_src: Vec<f32> = (0..n).map(|r| dot(&z[r * dout..(r + 1) * dout], a_src)).collect();
+    let s_dst: Vec<f32> = (0..m).map(|r| dot(&z[r * dout..(r + 1) * dout], a_dst)).collect();
+    (z, s_src, s_dst)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gat_fwd_fast(
+    kind: KernelKind,
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let (z, s_src, s_dst) = gat_project_fast(kind, x, n, m, din, dout, w, a_src, a_dst);
+    let mut out = vec![0f32; m * dout];
+    kernels::attn::attention_fwd(
+        kind, &z, &s_src, &s_dst, neigh, m, k, dout, bias, relu, &mut out,
+    );
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gat_bwd_fast(
+    kind: KernelKind,
+    x: &[f32],
+    n: usize,
+    neigh: &[u32],
+    m: usize,
+    k: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    w: &[f32],
+    a_src: &[f32],
+    a_dst: &[f32],
+    bias: &[f32],
+    g_out: &[f32],
+) -> LayerGrads {
+    let (z, s_src, s_dst) = gat_project_fast(kind, x, n, m, din, dout, w, a_src, a_dst);
+    let mut g_z = vec![0f32; n * dout];
+    let mut g_ssrc = vec![0f32; n];
+    let mut g_sdst = vec![0f32; m];
+    let mut g_b = vec![0f32; dout];
+    kernels::attn::attention_bwd(
+        kind, &z, &s_src, &s_dst, neigh, m, k, dout, bias, relu, g_out, &mut g_z, &mut g_ssrc,
+        &mut g_sdst, &mut g_b,
+    );
+    // s_src = z @ a_src and s_dst = (z @ a_dst)[:m] feed back into z and
+    // the attention vectors — same loops as the scalar path.
+    let mut g_asrc = vec![0f32; dout];
+    let mut g_adst = vec![0f32; dout];
+    for r in 0..n {
+        let zr = &z[r * dout..(r + 1) * dout];
+        let grow = &mut g_z[r * dout..(r + 1) * dout];
+        let gs = g_ssrc[r];
+        for q in 0..dout {
+            grow[q] += gs * a_src[q];
+            g_asrc[q] += gs * zr[q];
+        }
+    }
+    for i in 0..m {
+        let zr = &z[i * dout..(i + 1) * dout];
+        let grow = &mut g_z[i * dout..(i + 1) * dout];
+        let gd = g_sdst[i];
+        for q in 0..dout {
+            grow[q] += gd * a_dst[q];
+            g_adst[q] += gd * zr[q];
+        }
+    }
+    // Projection VJP over all n mixed rows: g_x = g_z @ wᵀ, g_w = xᵀ @ g_z.
+    let mut g_x = vec![0f32; n * din];
+    kernels::dense::matmul_gx_acc(kind, n, din, dout, &g_z, w, &mut g_x);
+    let mut g_w = vec![0f32; din * dout];
+    kernels::dense::matmul_gw_acc(kind, n, din, dout, x, &g_z, &mut g_w);
+    LayerGrads { g_x, g_params: vec![g_w, g_asrc, g_adst, g_b] }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -866,6 +1167,77 @@ mod tests {
         assert!(b.layer_fwd(GnnKind::Gat, 2, 2, false, &x, 3, &[1, 2], 1, 2, &params).is_err());
         // Label out of range.
         assert!(b.loss(&[0.0, 0.0], &[5], 1, 2).is_err());
+    }
+
+    #[test]
+    fn param_validation_names_offending_tensor() {
+        // Satellite bugfix regression: a din/dout-inconsistent parameter
+        // tensor must fail validation naming the tensor, not slice-panic
+        // inside the kernels.
+        let (x, mut params) = sage_identity();
+        params.tensors[1] = vec![0.0; 3]; // w_neigh should be din*dout = 4
+        let err = be()
+            .layer_fwd(GnnKind::GraphSage, 2, 2, false, &x, 3, &[1, 2], 1, 2, &params)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`w_neigh`"), "message should name the tensor: {err}");
+        assert!(err.contains("expected 4"), "message should state the expected size: {err}");
+        assert!(err.contains("din=2"), "message should echo the dims: {err}");
+
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        let gat = LayerParams {
+            tensors: vec![eye, vec![0.3, -0.2], vec![-0.1], vec![1.0, 1.0]], // a_dst too short
+            shapes: vec![(2, 2), (1, 2), (1, 2), (1, 2)],
+        };
+        let err = be()
+            .layer_fwd(GnnKind::Gat, 2, 2, false, &x, 3, &[1, 2], 1, 2, &gat)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("`a_dst`"), "message should name the tensor: {err}");
+    }
+
+    #[test]
+    fn blocked_layers_are_bit_identical_to_scalar() {
+        // Spot check through the Backend API; the full shape sweep lives in
+        // rust/tests/kernel_equivalence.rs.
+        let (din, dout, m, k) = (6, 4, 5, 3);
+        let n = m * (k + 1);
+        let x = ramp(n * din, 2.0);
+        let mut neigh = vec![NB; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                if (i + j) % 4 != 3 {
+                    neigh[i * k + j] = (m + i * k + j) as u32;
+                }
+            }
+        }
+        let g_out = ramp(m * dout, 1.0);
+        let scalar = NativeBackend::with_kernels(KernelKind::Scalar);
+        let blocked = NativeBackend::with_kernels(KernelKind::Blocked);
+        for kind in [GnnKind::GraphSage, GnnKind::Gat] {
+            let cfg = ModelConfig {
+                kind,
+                feat_dim: din,
+                hidden: dout,
+                num_classes: 4,
+                num_layers: 2,
+            };
+            let store = ParamStore::init(&cfg, 7);
+            let params = &store.layers[0];
+            let o_s =
+                scalar.layer_fwd(kind, din, dout, true, &x, n, &neigh, m, k, params).unwrap();
+            let o_b =
+                blocked.layer_fwd(kind, din, dout, true, &x, n, &neigh, m, k, params).unwrap();
+            assert_eq!(o_s, o_b, "{kind:?} fwd");
+            let g_s = scalar
+                .layer_bwd(kind, din, dout, true, &x, n, &neigh, m, k, &g_out, params)
+                .unwrap();
+            let g_b = blocked
+                .layer_bwd(kind, din, dout, true, &x, n, &neigh, m, k, &g_out, params)
+                .unwrap();
+            assert_eq!(g_s.g_x, g_b.g_x, "{kind:?} g_x");
+            assert_eq!(g_s.g_params, g_b.g_params, "{kind:?} g_params");
+        }
     }
 
     #[test]

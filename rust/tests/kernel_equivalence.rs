@@ -1,0 +1,188 @@
+//! Property tests for the kernel dispatch contract (DESIGN.md §Perf "Rust
+//! kernel blocking"): sweeping kernel variants × shapes — `m`/`din`/`dout`/
+//! fanout including non-multiples of the register-block size, isolated
+//! vertices, and `k = 0` rows — the `blocked` and `simd` layer paths must
+//! match the scalar oracle through the public `Backend` API:
+//!
+//! * `blocked` **bit-exactly** (its contract preserves each element's
+//!   accumulation order),
+//! * `simd` within `SIMD_REL_TOL` (FMA + lane-reassociated dots), except
+//!   gather-mean, which stays bit-exact under every variant.
+
+use gsplit::model::{GnnKind, LayerParams};
+use gsplit::rng::Pcg32;
+use gsplit::runtime::kernels::{self, KernelKind, SIMD_REL_TOL};
+use gsplit::runtime::{Backend, NativeBackend};
+use gsplit::sampling::NO_NEIGHBOR;
+use gsplit::testing::for_all_seeds;
+
+fn rand_vec(rng: &mut Pcg32, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.next_f32() - 0.5) * scale).collect()
+}
+
+/// Random neighbor table with ~25% padded slots; when `m ≥ 2` and `k > 0`,
+/// row 1 is fully padded (an isolated vertex) and row 0 repeats a neighbor.
+fn rand_neigh(rng: &mut Pcg32, m: usize, k: usize, n: usize) -> Vec<u32> {
+    let mut neigh = vec![NO_NEIGHBOR; m * k];
+    for i in 0..m {
+        if i == 1 {
+            continue;
+        }
+        for j in 0..k {
+            if rng.gen_range(4) != 0 {
+                neigh[i * k + j] = rng.gen_range(n as u32);
+            }
+        }
+    }
+    if m >= 1 && k >= 2 {
+        neigh[0] = 0; // self as neighbor
+        neigh[1] = 0; // repeated neighbor
+    }
+    neigh
+}
+
+fn rand_params(rng: &mut Pcg32, model: GnnKind, din: usize, dout: usize) -> LayerParams {
+    match model {
+        GnnKind::GraphSage => LayerParams {
+            tensors: vec![
+                rand_vec(rng, din * dout, 1.0),
+                rand_vec(rng, din * dout, 1.0),
+                rand_vec(rng, dout, 0.5),
+            ],
+            shapes: vec![(din, dout), (din, dout), (1, dout)],
+        },
+        GnnKind::Gat => LayerParams {
+            tensors: vec![
+                rand_vec(rng, din * dout, 1.0),
+                rand_vec(rng, dout, 0.8),
+                rand_vec(rng, dout, 0.8),
+                rand_vec(rng, dout, 0.5),
+            ],
+            shapes: vec![(din, dout), (1, dout), (1, dout), (1, dout)],
+        },
+    }
+}
+
+/// `bit = true` → exact equality; otherwise the documented simd tolerance.
+fn assert_close(tag: &str, got: &[f32], want: &[f32], bit: bool) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    if bit {
+        assert_eq!(got, want, "{tag}: expected bit-identical output");
+    } else {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= SIMD_REL_TOL * (1.0 + w.abs()),
+                "{tag}[{i}]: {g} vs oracle {w} exceeds SIMD_REL_TOL"
+            );
+        }
+    }
+}
+
+/// The non-scalar variants worth testing on this host, with whether their
+/// contract is bit-exact for the dense/attention layer paths.
+fn variants() -> Vec<(KernelKind, bool)> {
+    let mut v = vec![(KernelKind::Blocked, true)];
+    if kernels::simd_available() {
+        v.push((KernelKind::Simd, false));
+    }
+    v
+}
+
+#[test]
+fn kernel_variants_match_scalar_oracle_across_shapes() {
+    // First cases pin adversarial shapes: singleton dims, exact multiples
+    // of the 4×8 register tile, non-multiples straddling both tails, k = 0
+    // (no neighbor table at all), and a wide-but-short batch.
+    const FIXED: [(usize, usize, usize, usize); 7] = [
+        (1, 1, 1, 0),
+        (1, 8, 8, 1),
+        (4, 8, 16, 2),
+        (3, 9, 7, 3),
+        (5, 13, 24, 4),
+        (2, 33, 5, 6),
+        (7, 17, 9, 0),
+    ];
+    let scalar = NativeBackend::with_kernels(KernelKind::Scalar);
+    for_all_seeds("kernel-equivalence", 24, |rng, case| {
+        let (m, din, dout, k) = if (case as usize) < FIXED.len() {
+            FIXED[case as usize]
+        } else {
+            (
+                1 + rng.gen_range(8) as usize,
+                1 + rng.gen_range(34) as usize,
+                1 + rng.gen_range(34) as usize,
+                rng.gen_range(6) as usize,
+            )
+        };
+        let n = m + rng.gen_range(2 * (k as u32) + 3) as usize;
+        let x = rand_vec(rng, n * din, 2.0);
+        let neigh = rand_neigh(rng, m, k, n);
+        let g_out = rand_vec(rng, m * dout, 1.0);
+        for model in [GnnKind::GraphSage, GnnKind::Gat] {
+            let params = rand_params(rng, model, din, dout);
+            for relu in [false, true] {
+                let o_s = scalar
+                    .layer_fwd(model, din, dout, relu, &x, n, &neigh, m, k, &params)
+                    .unwrap();
+                let b_s = scalar
+                    .layer_bwd(model, din, dout, relu, &x, n, &neigh, m, k, &g_out, &params)
+                    .unwrap();
+                for (kind, bit) in variants() {
+                    let be = NativeBackend::with_kernels(kind);
+                    let tag = format!("{model:?}/{}/relu={relu}/m={m},din={din},dout={dout},k={k}",
+                        kind.name());
+                    let o = be
+                        .layer_fwd(model, din, dout, relu, &x, n, &neigh, m, k, &params)
+                        .unwrap();
+                    assert_close(&format!("{tag}/fwd"), &o, &o_s, bit);
+                    let b = be
+                        .layer_bwd(model, din, dout, relu, &x, n, &neigh, m, k, &g_out, &params)
+                        .unwrap();
+                    assert_close(&format!("{tag}/g_x"), &b.g_x, &b_s.g_x, bit);
+                    assert_eq!(b.g_params.len(), b_s.g_params.len());
+                    for (t, (gp, gp_s)) in b.g_params.iter().zip(&b_s.g_params).enumerate() {
+                        assert_close(&format!("{tag}/g_params[{t}]"), gp, gp_s, bit);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gather_mean_is_bit_exact_under_every_kernel() {
+    // The gather-mean contract is stricter: every variant, including simd,
+    // is bit-identical (plain adds in slot order + one reciprocal scale).
+    for_all_seeds("gather-mean-bit-exact", 16, |rng, _| {
+        let m = 1 + rng.gen_range(10) as usize;
+        let k = rng.gen_range(7) as usize;
+        let din = 1 + rng.gen_range(40) as usize;
+        let n = m + rng.gen_range(8) as usize;
+        let x = rand_vec(rng, n * din, 2.0);
+        let neigh = rand_neigh(rng, m, k, n);
+        let mut agg_s = vec![0f32; m * din];
+        let mut den_s = vec![0f32; m];
+        kernels::gather::gather_mean(
+            KernelKind::Scalar, &x, &neigh, m, k, din, &mut agg_s, &mut den_s,
+        );
+        for kind in [KernelKind::Blocked, KernelKind::Simd] {
+            let mut agg = vec![1f32; m * din];
+            let mut den = vec![1f32; m];
+            kernels::gather::gather_mean(kind, &x, &neigh, m, k, din, &mut agg, &mut den);
+            assert_eq!(agg_s, agg, "{} agg", kind.name());
+            assert_eq!(den_s, den, "{} denoms", kind.name());
+        }
+    });
+}
+
+#[test]
+fn with_kernels_resolves_and_reports() {
+    let be = NativeBackend::with_kernels(KernelKind::Blocked);
+    assert_eq!(be.kernels(), KernelKind::Blocked);
+    let be = NativeBackend::with_kernels(KernelKind::Simd);
+    if kernels::simd_available() {
+        assert_eq!(be.kernels(), KernelKind::Simd);
+    } else {
+        assert_eq!(be.kernels(), KernelKind::Blocked);
+    }
+}

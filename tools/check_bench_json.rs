@@ -4,21 +4,66 @@
 //! non-negative statistics. CI's `bench-smoke` job runs this over every
 //! JSON artifact the benches emitted and fails the build on any violation.
 //!
-//! Usage: `cargo run --release --bin check_bench_json -- BENCH_*.json`
+//! With `--baseline <dir>` each report is additionally diffed against the
+//! committed baseline of the same filename (`bench_baseline/` in-repo):
+//! cases present in both are compared on `mean_s`, and a change worse than
+//! 20% is flagged as a regression — on wall-clock-style metrics a higher
+//! mean is worse, on `speedup` metrics a lower one is. Metrics missing on
+//! either side are reported but never fatal (suites grow and shrink).
+//! Regressions are warnings by default — smoke-mode timings on shared CI
+//! runners are noisy — and only fail the run under `--strict`.
+//!
+//! Usage:
+//!   cargo run --release --bin check_bench_json -- BENCH_*.json
+//!   cargo run --release --bin check_bench_json -- \
+//!       --baseline bench_baseline [--strict] BENCH_*.json
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use gsplit::util::JsonValue;
 
+/// Relative change beyond which a metric counts as regressed.
+const REGRESSION_TOL: f64 = 0.20;
+
 fn main() -> Result<()> {
-    let files: Vec<String> = std::env::args().skip(1).collect();
-    ensure!(!files.is_empty(), "usage: check_bench_json <BENCH_*.json>...");
+    let mut baseline_dir: Option<String> = None;
+    let mut strict = false;
+    let mut files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline" => {
+                baseline_dir =
+                    Some(args.next().ok_or_else(|| anyhow!("--baseline needs a directory"))?)
+            }
+            "--strict" => strict = true,
+            _ => files.push(a),
+        }
+    }
+    ensure!(
+        !files.is_empty(),
+        "usage: check_bench_json [--baseline <dir>] [--strict] <BENCH_*.json>..."
+    );
     let mut total_cases = 0usize;
+    let mut regressions = 0usize;
     for f in &files {
-        let n = check_file(f).with_context(|| format!("{f}: invalid bench report"))?;
-        println!("{f}: OK ({n} cases)");
-        total_cases += n;
+        let report = check_file(f).with_context(|| format!("{f}: invalid bench report"))?;
+        println!("{f}: OK ({} cases)", report.1);
+        total_cases += report.1;
+        if let Some(dir) = &baseline_dir {
+            regressions += diff_against_baseline(f, &report.0, dir)?;
+        }
     }
     println!("{} file(s), {total_cases} case(s): all valid", files.len());
+    if regressions > 0 {
+        let msg = format!(
+            "{regressions} metric(s) regressed >{:.0}% vs baseline",
+            REGRESSION_TOL * 100.0
+        );
+        if strict {
+            bail!("{msg}");
+        }
+        println!("WARNING: {msg} (non-strict mode: not failing)");
+    }
     Ok(())
 }
 
@@ -30,19 +75,22 @@ fn num_field(v: &JsonValue, key: &str) -> Result<f64> {
     v.get(key)?.as_f64().ok_or_else(|| anyhow!("`{key}` must be a number"))
 }
 
-/// Validate one report; returns its case count.
-fn check_file(path: &str) -> Result<usize> {
+/// Validate one report; returns the parsed value and its case count.
+fn check_file(path: &str) -> Result<(JsonValue, usize)> {
     let text = std::fs::read_to_string(path).context("cannot read file")?;
     let v = JsonValue::parse(&text).context("not valid JSON")?;
     ensure!(!str_field(&v, "suite")?.is_empty(), "`suite` must be non-empty");
     ensure!(!str_field(&v, "git_rev")?.is_empty(), "`git_rev` must be non-empty");
-    let cases =
-        v.get("cases")?.as_arr().ok_or_else(|| anyhow!("`cases` must be an array"))?;
-    ensure!(!cases.is_empty(), "`cases` must be non-empty");
-    for (i, case) in cases.iter().enumerate() {
-        check_case(case).with_context(|| format!("case #{i}"))?;
-    }
-    Ok(cases.len())
+    let n = {
+        let cases =
+            v.get("cases")?.as_arr().ok_or_else(|| anyhow!("`cases` must be an array"))?;
+        ensure!(!cases.is_empty(), "`cases` must be non-empty");
+        for (i, case) in cases.iter().enumerate() {
+            check_case(case).with_context(|| format!("case #{i}"))?;
+        }
+        cases.len()
+    };
+    Ok((v, n))
 }
 
 fn check_case(case: &JsonValue) -> Result<()> {
@@ -67,4 +115,85 @@ fn check_case(case: &JsonValue) -> Result<()> {
         other => bail!("`throughput_per_s` must be a number or null, got {other}"),
     }
     Ok(())
+}
+
+/// `(name, mean_s)` for every case of a validated report.
+fn case_means(v: &JsonValue) -> Vec<(String, f64)> {
+    v.get("cases")
+        .ok()
+        .and_then(|c| c.as_arr())
+        .map(|cases| {
+            cases
+                .iter()
+                .filter_map(|c| {
+                    let name = c.get("name").ok()?.as_str()?.to_string();
+                    Some((name, c.get("mean_s").ok()?.as_f64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// On most metrics a larger value is worse (wall-clock seconds, bytes
+/// moved); `speedup` metrics invert that.
+fn higher_is_better(name: &str) -> bool {
+    name.contains("speedup")
+}
+
+/// Diff `new` against `<dir>/<basename of path>`. Returns the number of
+/// regressed metrics; missing baselines and mismatched case sets only warn.
+fn diff_against_baseline(path: &str, new: &JsonValue, dir: &str) -> Result<usize> {
+    let base_name = std::path::Path::new(path)
+        .file_name()
+        .ok_or_else(|| anyhow!("{path}: no file name"))?;
+    let base_path = std::path::Path::new(dir).join(base_name);
+    let text = match std::fs::read_to_string(&base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("  baseline: {} not found, skipping diff", base_path.display());
+            return Ok(0);
+        }
+    };
+    let base = JsonValue::parse(&text)
+        .with_context(|| format!("{}: baseline is not valid JSON", base_path.display()))?;
+    let base_means = case_means(&base);
+    let new_means = case_means(new);
+    let mut regressed = 0usize;
+    for (name, old) in &base_means {
+        let Some((_, cur)) = new_means.iter().find(|(n, _)| n == name) else {
+            println!("  baseline: metric `{name}` missing from new run");
+            continue;
+        };
+        if *old <= 0.0 {
+            // Zero baselines carry no information to diff against.
+            continue;
+        }
+        let ratio = cur / old;
+        let worse = if higher_is_better(name) {
+            ratio < 1.0 - REGRESSION_TOL
+        } else {
+            ratio > 1.0 + REGRESSION_TOL
+        };
+        if worse {
+            regressed += 1;
+            println!(
+                "  REGRESSION `{name}`: baseline {old:.6} -> {cur:.6} ({:+.1}%)",
+                (ratio - 1.0) * 100.0
+            );
+        }
+    }
+    for (name, _) in &new_means {
+        if !base_means.iter().any(|(n, _)| n == name) {
+            println!("  baseline: new metric `{name}` not in baseline (add on next refresh)");
+        }
+    }
+    if regressed == 0 {
+        println!(
+            "  baseline: {} metrics compared against {}, none regressed >{:.0}%",
+            base_means.len(),
+            base_path.display(),
+            REGRESSION_TOL * 100.0
+        );
+    }
+    Ok(regressed)
 }
