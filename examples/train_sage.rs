@@ -180,10 +180,11 @@ fn main() -> Result<()> {
     );
     let split = LoadStats::sum(trainer.load_stats());
     println!(
-        "# loading: local {} | peer(nvlink) {} | host(pcie) {}",
+        "# loading: local {} | peer(nvlink) {} | host(pcie) {} | disk {}",
         gsplit::util::fmt_bytes(split.local_bytes),
         gsplit::util::fmt_bytes(split.peer_bytes),
         gsplit::util::fmt_bytes(split.host_bytes),
+        gsplit::util::fmt_bytes(split.disk_bytes),
     );
     if val_acc < 2.0 / cfg.num_classes as f32 {
         anyhow::bail!("training failed to beat the random baseline");

@@ -200,8 +200,40 @@ pub fn build_gsplit(ctx: &EngineCtx, strategy: Strategy, batch: usize) -> SplitP
     SplitParallel::new(ctx, part, &w.vertex, batch)
 }
 
+/// Load a stand-in, smoke-aware. Under `BENCH_SMOKE=1` the features are
+/// additionally served **out-of-core** from a `.gsg` file in the bench
+/// cache, so every smoke run also exercises the disk path end to end
+/// (DESIGN.md §Loading, disk tier) — bit-identical numerics, by contract.
+pub fn load_standin(full: StandIn) -> Dataset {
+    let s = smoke_standin(full);
+    if smoke() {
+        ooc_dataset(s)
+    } else {
+        s.load().expect("dataset")
+    }
+}
+
+/// A stand-in served out-of-core: written once to `target/bench_cache/`
+/// (tmp + rename, so concurrent benches never read a half-written file)
+/// and reopened with a disk-backed feature source. The spec is copied
+/// from the in-RAM dataset so offline cache keys and `scale_divisor`
+/// stay exactly what the in-RAM path would use.
+pub fn ooc_dataset(s: StandIn) -> Dataset {
+    let ram = s.load().expect("dataset");
+    let path = cache_dir().join(format!("{}_ooc.gsg", ram.spec.name));
+    if !path.exists() {
+        let tmp = cache_dir().join(format!("{}_ooc.gsg.tmp{}", ram.spec.name, std::process::id()));
+        ram.write_gsg(&tmp).expect("write .gsg");
+        std::fs::rename(&tmp, &path).expect("publish .gsg");
+    }
+    let mut ds = Dataset::open_ooc(&path, ram.spec.train_frac, ram.spec.seed ^ 0x5717)
+        .expect("open .gsg out-of-core");
+    ds.spec = ram.spec.clone();
+    ds
+}
+
 pub fn all_datasets() -> Vec<Dataset> {
-    smoke_standins(&StandIn::all_paper()).iter().map(|s| s.load().expect("dataset")).collect()
+    smoke_standins(&StandIn::all_paper()).iter().map(|&s| load_standin(s)).collect()
 }
 
 /// Format a speedup column like the paper ("4.4×"; empty for the baseline).

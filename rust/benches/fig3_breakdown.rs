@@ -10,6 +10,10 @@
 //!     bytes must be nonzero where the policy predicts them and must sum
 //!     to the uncached total — caching re-routes bytes, it never changes
 //!     how many rows the model consumes.
+//! (+) the same sweep with the dataset served **out-of-core** from a v2
+//!     `.gsg` file: cache-miss host rows further split into Host (chunk
+//!     buffer) and Disk (fault), the four tiers sum to the same in-RAM
+//!     uncached total, and the distributed policy shows all four nonzero.
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -37,7 +41,7 @@ fn main() {
     let mut quiver_pct: Vec<(String, f64, f64, f64)> = Vec::new();
 
     for standin in smoke_standins(&[StandIn::OrkutS, StandIn::PapersS]) {
-        let ds = standin.load().expect("dataset");
+        let ds = load_standin(standin);
         for kind in [GnnKind::GraphSage, GnnKind::Gat] {
             let ctx = EngineCtx::new(
                 &ds,
@@ -97,13 +101,16 @@ fn main() {
          but Papers100M loading stays high (~30%); P3* has lowest L but highest FB."
     );
 
-    loading_split_section(&mut suite);
+    let uncached_total = loading_split_section(&mut suite);
+    loading_split_section_ooc(&mut suite, uncached_total);
     suite.finish();
 }
 
 /// Run the real-compute trainer's cache-aware loading stage under every
 /// policy and report (and assert) the Local / Peer / Host byte split.
-fn loading_split_section(suite: &mut BenchSuite) {
+/// Returns the uncached total byte volume for the out-of-core section to
+/// check against.
+fn loading_split_section(suite: &mut BenchSuite) -> u64 {
     println!("\nLoading-stage byte split — real-compute trainer, per cache policy\n");
     let k = 4usize;
     let n_vertices = if quick() { 2048 } else { 8192 };
@@ -151,9 +158,11 @@ fn loading_split_section(suite: &mut BenchSuite) {
             ("local_bytes", split.local_bytes),
             ("peer_bytes", split.peer_bytes),
             ("host_bytes", split.host_bytes),
+            ("disk_bytes", split.disk_bytes),
         ] {
             suite.metric(&format!("trainer_load/{}/{kind}", policy.name()), bytes as f64);
         }
+        assert_eq!(split.disk_bytes, 0, "the in-RAM source has no disk tier");
 
         // The acceptance invariants: every policy materializes exactly the
         // uncached byte volume, and the distributed policy produces a
@@ -185,5 +194,105 @@ fn loading_split_section(suite: &mut BenchSuite) {
     println!(
         "\nGSplit's partitioned cache serves hits locally (owner-consistent, zero peer\n\
          traffic); Quiver-style distributed caching trades host loads for NVLink pulls."
+    );
+    uncached_total.expect("the CachePolicy::None pass ran first")
+}
+
+/// The same policy sweep with the dataset served out-of-core: features
+/// come from a v2 `.gsg` file through a chunk-buffered `DiskFeatureStore`,
+/// so the Host leg of the split divides into Host (buffer hit) and Disk
+/// (chunk fault) — and the four tiers still sum to the in-RAM uncached
+/// total, because the feature source never changes what the model reads.
+fn loading_split_section_ooc(suite: &mut BenchSuite, ram_uncached_total: u64) {
+    println!("\nLoading-stage byte split — out-of-core dataset (v2 .gsg), per cache policy\n");
+    let k = 4usize;
+    let n_vertices = if quick() { 2048 } else { 8192 };
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: 32,
+        hidden: 32,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    // Write the SAME SBM dataset the in-RAM section trained on, then train
+    // from disk. Each policy opens a fresh store so the chunk buffer
+    // starts cold and the Host/Disk split is reproducible.
+    let ram = Dataset::sbm_learnable(n_vertices, cfg.num_classes, cfg.feat_dim, 0.6, SEED);
+    let dir = std::env::temp_dir().join(format!("gsplit_fig3_ooc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("sbm.gsg");
+    ram.write_gsg(&path).expect("write .gsg");
+    let part = Partitioning {
+        assignment: (0..n_vertices as Vid).map(|v| (v % k as Vid) as u16).collect(),
+        k,
+    };
+    let topo = Topology::p3_8xlarge(1.0);
+    let ranking: Vec<u64> = (0..n_vertices as Vid).map(|v| ram.graph.degree(v) as u64).collect();
+    let budget = (n_vertices / 8) as u64;
+    let backend = NativeBackend::new();
+    let batch = 256usize;
+
+    let mut table =
+        Table::new(&["Policy", "Local", "Peer (NVLink)", "Host (buffer)", "Disk", "Total"]).left(0);
+    for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+        // Split-seed derivation matches `sbm_learnable`, so the train/val
+        // sets — and therefore every sampled batch — are identical.
+        let mut ds = Dataset::open_ooc(&path, 0.5, SEED ^ 0x5717).expect("open .gsg");
+        let store = gsplit::graph::DiskFeatureStore::open(&path).expect("open features");
+        ds.features = Arc::new(store.with_buffer(256, 8));
+        let mut trainer =
+            Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED).expect("trainer");
+        if policy != CachePolicy::None {
+            let cache = ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features);
+            trainer.set_cache(Some(Arc::new(cache))).expect("cache fits trainer");
+        }
+        train_epoch(&mut trainer, &ds, batch, 0).expect("epoch");
+        let split = LoadStats::sum(trainer.load_stats());
+        table.row(vec![
+            policy.name().to_string(),
+            fmt_bytes(split.local_bytes),
+            fmt_bytes(split.peer_bytes),
+            fmt_bytes(split.host_bytes),
+            fmt_bytes(split.disk_bytes),
+            fmt_bytes(split.total()),
+        ]);
+        for (kind, bytes) in [
+            ("local_bytes", split.local_bytes),
+            ("peer_bytes", split.peer_bytes),
+            ("host_bytes", split.host_bytes),
+            ("disk_bytes", split.disk_bytes),
+        ] {
+            suite.metric(&format!("trainer_load_ooc/{}/{kind}", policy.name()), bytes as f64);
+        }
+
+        // Acceptance invariants (ISSUE 7): a nonzero four-tier split that
+        // sums to the in-RAM uncached total.
+        assert_eq!(
+            split.total(),
+            ram_uncached_total,
+            "{}: the four-tier split must sum to the in-RAM uncached total",
+            policy.name()
+        );
+        assert!(split.disk_bytes > 0, "{}: cold chunk buffer must fault", policy.name());
+        match policy {
+            CachePolicy::None => {
+                assert_eq!(split.local_bytes + split.peer_bytes, 0, "no cache, no hits")
+            }
+            CachePolicy::Distributed => assert!(
+                split.local_bytes > 0
+                    && split.peer_bytes > 0
+                    && split.host_bytes > 0
+                    && split.disk_bytes > 0,
+                "distributed policy must produce a nonzero four-tier split, got {split:?}"
+            ),
+            CachePolicy::Partitioned => {
+                assert_eq!(split.peer_bytes, 0, "owner-consistent cache never fetches from peers")
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\nOut-of-core changes where bytes come FROM, never what the model consumes:\n\
+         first touch of a chunk faults from disk, re-touches hit the host buffer."
     );
 }

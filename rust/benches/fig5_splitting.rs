@@ -29,7 +29,7 @@ fn main() {
         "Figure 5 — splitting quality per mini-batch on Papers100M (4 splits,\n\
          fanout 15, 3 layers, batch 1024): workload imbalance and % cross edges.\n"
     );
-    let ds = smoke_standin(StandIn::PapersS).load().expect("dataset");
+    let ds = load_standin(StandIn::PapersS);
     let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
     let fanouts = vec![FANOUT; LAYERS];
     let strategies =

@@ -43,7 +43,7 @@ fn run_all(
 
 fn main() {
     let mut suite = BenchSuite::new("fig6_ablations");
-    let ds = smoke_standin(StandIn::FriendsterS).load().expect("dataset");
+    let ds = load_standin(StandIn::FriendsterS);
     let topo = || Topology::p3_8xlarge(ds.spec.scale_divisor);
     let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
 
@@ -115,7 +115,7 @@ fn main() {
 
     // --- extra ablation 1: pre-sampling epoch count (§7.3) ---
     println!("\nAblation — pre-sampling epochs vs splitting quality (Papers100M)\n");
-    let dsp = smoke_standin(StandIn::PapersS).load().expect("dataset");
+    let dsp = load_standin(StandIn::PapersS);
     let mut t = Table::new(&["Presample epochs", "Cut frac", "Imbalance"]).left(0);
     for epochs in [2usize, 10, 30] {
         if quick() && epochs > 10 {

@@ -11,7 +11,7 @@ mod bench_common;
 
 use bench_common::*;
 use gsplit::bench_harness::{section, Bench, BenchSuite};
-use gsplit::graph::{Dataset, StandIn};
+use gsplit::graph::{Dataset, FeatureSource, StandIn};
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::{partition_graph, Partitioning, Strategy};
 use gsplit::presample::PresampleWeights;
@@ -26,7 +26,7 @@ use gsplit::Vid;
 
 fn main() {
     let mut suite = BenchSuite::new("micro_hotpaths");
-    let ds = smoke_standin(StandIn::OrkutS).load().expect("dataset");
+    let ds = load_standin(StandIn::OrkutS);
     let bench = if quick() { Bench::quick() } else { Bench::default().with_budget(3.0) };
     let fanouts = vec![FANOUT; LAYERS];
     let targets: Vec<Vid> = ds.epoch_targets(SEED).into_iter().take(BATCH).collect();

@@ -10,14 +10,14 @@
 //! object the trainer consults on the hot path.
 //!
 //! Determinism: a cached row is a bit-exact copy of the host row (built
-//! once from the [`FeatureStore`]), so serving a row from Local, Peer, or
+//! once from the [`FeatureSource`]), so serving a row from Local, Peer, or
 //! Host yields identical f32 bits — caching can change *where bytes move*,
 //! never *what the model computes* (DESIGN.md §Loading).
 
 use anyhow::{bail, Result};
 
 use crate::devices::Topology;
-use crate::graph::FeatureStore;
+use crate::graph::FeatureSource;
 use crate::partition::Partitioning;
 use crate::{DeviceId, Vid};
 
@@ -87,8 +87,12 @@ pub struct LoadStats {
     pub local_bytes: u64,
     /// Bytes pulled from an NVLink peer's resident cache.
     pub peer_bytes: u64,
-    /// Bytes loaded from host memory over PCIe.
+    /// Bytes loaded from host RAM over PCIe (the feature source served
+    /// them from memory: an in-RAM store, or a chunk-buffer hit).
     pub host_bytes: u64,
+    /// Bytes that fell through host RAM to disk (out-of-core chunk-buffer
+    /// miss) before crossing PCIe — the fourth tier of DESIGN.md §Loading.
+    pub disk_bytes: u64,
 }
 
 impl LoadStats {
@@ -97,13 +101,14 @@ impl LoadStats {
     /// re-routes bytes between sources, it never changes how many rows a
     /// device needs.
     pub fn total(&self) -> u64 {
-        self.local_bytes + self.peer_bytes + self.host_bytes
+        self.local_bytes + self.peer_bytes + self.host_bytes + self.disk_bytes
     }
 
     pub fn merge(&mut self, other: &LoadStats) {
         self.local_bytes += other.local_bytes;
         self.peer_bytes += other.peer_bytes;
         self.host_bytes += other.host_bytes;
+        self.disk_bytes += other.disk_bytes;
     }
 
     /// Sum many per-device stats (e.g. `Trainer::load_stats()`) into one.
@@ -118,7 +123,7 @@ impl LoadStats {
 
 /// Resident feature rows per simulated device: the actual f32 data of
 /// every row the placement assigns to each device, copied once from the
-/// [`FeatureStore`] at build time.
+/// [`FeatureSource`] at build time.
 #[derive(Debug, Clone)]
 pub struct CacheStore {
     dim: usize,
@@ -130,7 +135,12 @@ pub struct CacheStore {
 
 impl CacheStore {
     /// Materialize the rows the placement assigns to each device.
-    pub fn build(placement: &FeatureCache, features: &FeatureStore) -> CacheStore {
+    ///
+    /// This is an *offline* bulk read: afterwards the source's host-tier
+    /// state is reset (`reset_host_tiers`), so the online Host/Disk
+    /// accounting starts cold and does not depend on which rows the cache
+    /// build happened to pull through an out-of-core chunk buffer.
+    pub fn build(placement: &FeatureCache, features: &dyn FeatureSource) -> CacheStore {
         let k = placement.k();
         let dim = features.dim();
         let mut vids: Vec<Vec<Vid>> = vec![Vec::new(); k];
@@ -145,6 +155,7 @@ impl CacheStore {
                 }
             }
         }
+        features.reset_host_tiers();
         CacheStore { dim, vids, data }
     }
 
@@ -188,7 +199,7 @@ impl ResidentCache {
         budget_rows: u64,
         part: &Partitioning,
         topo: &Topology,
-        features: &FeatureStore,
+        features: &dyn FeatureSource,
     ) -> ResidentCache {
         assert_eq!(ranking.len(), features.len(), "ranking must cover all vertices");
         let placement = policy.build_placement(ranking, budget_rows, part, topo);
@@ -233,6 +244,7 @@ impl ResidentCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::FeatureStore;
 
     fn toy_features(n: usize, dim: usize) -> FeatureStore {
         let data: Vec<f32> = (0..n * dim).map(|i| i as f32).collect();
@@ -311,10 +323,34 @@ mod tests {
 
     #[test]
     fn load_stats_merge_and_total() {
-        let mut a = LoadStats { local_bytes: 1, peer_bytes: 2, host_bytes: 3 };
-        let b = LoadStats { local_bytes: 10, peer_bytes: 20, host_bytes: 30 };
+        let mut a = LoadStats { local_bytes: 1, peer_bytes: 2, host_bytes: 3, disk_bytes: 4 };
+        let b = LoadStats { local_bytes: 10, peer_bytes: 20, host_bytes: 30, disk_bytes: 40 };
         a.merge(&b);
-        assert_eq!(a, LoadStats { local_bytes: 11, peer_bytes: 22, host_bytes: 33 });
-        assert_eq!(a.total(), 66);
+        assert_eq!(
+            a,
+            LoadStats { local_bytes: 11, peer_bytes: 22, host_bytes: 33, disk_bytes: 44 }
+        );
+        assert_eq!(a.total(), 110);
+    }
+
+    #[test]
+    fn load_stats_sum_covers_all_four_tiers() {
+        // sum() over per-device stats must equal the element-wise totals —
+        // the invariant the four-tier loading split rests on: re-routing
+        // bytes between tiers never changes the total.
+        let per_device = [
+            LoadStats { local_bytes: 5, peer_bytes: 0, host_bytes: 9, disk_bytes: 2 },
+            LoadStats { local_bytes: 0, peer_bytes: 7, host_bytes: 0, disk_bytes: 11 },
+            LoadStats::default(),
+            LoadStats { local_bytes: 1, peer_bytes: 1, host_bytes: 1, disk_bytes: 1 },
+        ];
+        let s = LoadStats::sum(per_device.iter());
+        assert_eq!(
+            s,
+            LoadStats { local_bytes: 6, peer_bytes: 8, host_bytes: 10, disk_bytes: 14 }
+        );
+        let tier_sum = s.local_bytes + s.peer_bytes + s.host_bytes + s.disk_bytes;
+        assert_eq!(s.total(), tier_sum);
+        assert_eq!(s.total(), per_device.iter().map(LoadStats::total).sum::<u64>());
     }
 }

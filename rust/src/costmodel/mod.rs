@@ -82,10 +82,14 @@ pub struct IterCounters {
     pub sampled_edges: Vec<u64>,
     /// Vertex-id shuffle during cooperative sampling (GSplit only).
     pub sample_comm: CommMatrix,
-    /// Input-feature bytes each device loads from host memory over PCIe.
+    /// Input-feature bytes each device loads from host RAM over PCIe.
     pub host_load_bytes: Vec<u64>,
+    /// Input-feature bytes that fell through host RAM to disk (out-of-core
+    /// chunk-buffer miss) before crossing PCIe — the fourth tier of the
+    /// loading split (DESIGN.md §Loading).
+    pub disk_load_bytes: Vec<u64>,
     /// Input-feature bytes served from the device's own cache (free on the
-    /// timeline, but part of the Local/NVLink/PCIe loading split).
+    /// timeline, but part of the Local/Peer/Host/Disk loading split).
     pub local_load_bytes: Vec<u64>,
     /// Input-feature bytes fetched from NVLink peers (distributed caches).
     pub peer_load: CommMatrix,
@@ -104,6 +108,7 @@ impl IterCounters {
             sampled_edges: vec![0; k],
             sample_comm: CommMatrix::new(k),
             host_load_bytes: vec![0; k],
+            disk_load_bytes: vec![0; k],
             local_load_bytes: vec![0; k],
             peer_load: CommMatrix::new(k),
             fwd_flops: vec![0; k],
@@ -117,6 +122,7 @@ impl IterCounters {
         for i in 0..self.k {
             self.sampled_edges[i] += other.sampled_edges[i];
             self.host_load_bytes[i] += other.host_load_bytes[i];
+            self.disk_load_bytes[i] += other.disk_load_bytes[i];
             self.local_load_bytes[i] += other.local_load_bytes[i];
             self.fwd_flops[i] += other.fwd_flops[i];
             self.agg_bytes[i] += other.agg_bytes[i];
@@ -126,15 +132,19 @@ impl IterCounters {
         self.train_comm.merge(&other.train_comm);
     }
 
-    /// Total input feature vectors loaded (any source), in bytes.
+    /// Total input feature vectors loaded (any non-local source), in
+    /// bytes: host RAM + disk fall-through + NVLink peer fetches.
     pub fn total_load_bytes(&self) -> u64 {
-        self.host_load_bytes.iter().sum::<u64>() + self.peer_load.total_remote()
+        self.host_load_bytes.iter().sum::<u64>()
+            + self.disk_load_bytes.iter().sum::<u64>()
+            + self.peer_load.total_remote()
     }
 
     /// Total input bytes *materialized* per iteration — cache hits plus
-    /// NVLink peer fetches plus PCIe host loads. Constant across cache
-    /// policies for the same plan (caching re-routes bytes, it never
-    /// changes how many rows a device needs).
+    /// NVLink peer fetches plus host RAM and disk loads. Constant across
+    /// cache policies *and* feature sources for the same plan (caching and
+    /// out-of-core buffering re-route bytes between tiers, they never
+    /// change how many rows a device needs).
     pub fn total_input_bytes(&self) -> u64 {
         self.local_load_bytes.iter().sum::<u64>() + self.total_load_bytes()
     }
@@ -181,12 +191,21 @@ pub fn iter_time(c: &IterCounters, topo: &Topology) -> PhaseBreakdown {
         .fold(0.0f64, f64::max);
     let sampling = sample_work + c.sample_comm.all_to_all_time(topo);
 
-    // --- Loading: host PCIe loads per device (parallel across devices, the
-    // bus is per-GPU on p3) + NVLink peer fetches.
-    let host = c
-        .host_load_bytes
-        .iter()
-        .map(|&b| if b > 0 { topo.host_load_time(b) } else { 0.0 })
+    // --- Loading: per-device host PCIe loads plus disk fall-through
+    // (sequential per device: a disk row crosses both the SSD and PCIe;
+    // parallel across devices, the bus is per-GPU on p3) + NVLink peer
+    // fetches.
+    let host = (0..c.k)
+        .map(|d| {
+            let mut t = 0.0;
+            if c.host_load_bytes[d] > 0 {
+                t += topo.host_load_time(c.host_load_bytes[d]);
+            }
+            if c.disk_load_bytes[d] > 0 {
+                t += topo.disk_load_time(c.disk_load_bytes[d]);
+            }
+            t
+        })
         .fold(0.0f64, f64::max);
     let loading = host + c.peer_load.all_to_all_time(topo);
 
@@ -257,6 +276,53 @@ mod tests {
         let time_cross_host = iter_time(&c, &t_net).fb;
         assert!(time_cross_host > time_same_host);
         let _ = t_nv;
+    }
+
+    #[test]
+    fn merge_and_totals_cover_all_four_tiers() {
+        let mut a = IterCounters::new(2);
+        a.local_load_bytes = vec![100, 0];
+        a.host_load_bytes = vec![10, 20];
+        a.disk_load_bytes = vec![0, 7];
+        a.peer_load.add(0, 1, 5);
+        let mut b = IterCounters::new(2);
+        b.local_load_bytes = vec![1, 1];
+        b.host_load_bytes = vec![2, 2];
+        b.disk_load_bytes = vec![3, 3];
+        b.peer_load.add(1, 0, 4);
+        a.merge(&b);
+        assert_eq!(a.local_load_bytes, vec![101, 1]);
+        assert_eq!(a.host_load_bytes, vec![12, 22]);
+        assert_eq!(a.disk_load_bytes, vec![3, 10]);
+        // total_load = host + disk + peer; total_input adds local.
+        assert_eq!(a.total_load_bytes(), 34 + 13 + 9);
+        assert_eq!(a.total_input_bytes(), 102 + 34 + 13 + 9);
+        // The four tiers sum to the total an uncached run would report as
+        // pure host+disk loads: re-routing never changes the total.
+        let tiers = a.local_load_bytes.iter().sum::<u64>()
+            + a.host_load_bytes.iter().sum::<u64>()
+            + a.disk_load_bytes.iter().sum::<u64>()
+            + a.peer_load.total_remote();
+        assert_eq!(a.total_input_bytes(), tiers);
+    }
+
+    #[test]
+    fn disk_loads_cost_more_than_host_loads() {
+        let mut ram = IterCounters::new(4);
+        ram.host_load_bytes[0] = 100 << 20;
+        let mut disk = IterCounters::new(4);
+        disk.disk_load_bytes[0] = 100 << 20;
+        let t = topo();
+        let (t_ram, t_disk) = (iter_time(&ram, &t), iter_time(&disk, &t));
+        assert!(t_disk.loading > t_ram.loading, "disk tier must be slower than PCIe alone");
+        // A disk row still crosses PCIe: its time includes the host time.
+        assert!(t_disk.loading > t_ram.loading * 1.5);
+        // Both tiers on one device are sequential, not max().
+        let mut both = IterCounters::new(4);
+        both.host_load_bytes[0] = 100 << 20;
+        both.disk_load_bytes[0] = 100 << 20;
+        let t_both = iter_time(&both, &t);
+        assert!((t_both.loading - (t_ram.loading + t_disk.loading)).abs() < 1e-12);
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct HardwareModel {
     pub pcie_lat: f64,
     pub nvlink_lat: f64,
     pub network_lat: f64,
+    /// Sequential read bandwidth of the host's local NVMe SSD — the tier
+    /// out-of-core feature rows fall through to when they miss the chunk
+    /// buffer (DESIGN.md §Loading).
+    pub disk_bw: f64,
+    pub disk_lat: f64,
     /// Effective GPU FLOP/s for dense f32 GNN layer compute. V100 peak is
     /// 15.7 TFLOP/s; sparse-aggregation-heavy GNN kernels achieve a small
     /// fraction — calibrated so DGL's FB times land in the paper's range.
@@ -63,6 +68,8 @@ impl HardwareModel {
             pcie_lat: 10e-6,
             nvlink_lat: 5e-6,
             network_lat: 40e-6,
+            disk_bw: 2.0e9,
+            disk_lat: 90e-6,
             gpu_flops: 14.0e12,
             gpu_membw: 550.0e9,
             sample_edge_cost: 9.0e-9,
@@ -130,6 +137,13 @@ impl Topology {
     /// Seconds to load `bytes` from host memory into one GPU over PCIe.
     pub fn host_load_time(&self, bytes: u64) -> f64 {
         self.hw.pcie_lat + bytes as f64 / self.hw.pcie_bw
+    }
+
+    /// Seconds to load `bytes` that missed the host's chunk buffer: read
+    /// from the local SSD into host RAM, then cross PCIe like any host
+    /// load (the stages don't overlap at the fidelity the model needs).
+    pub fn disk_load_time(&self, bytes: u64) -> f64 {
+        self.hw.disk_lat + bytes as f64 / self.hw.disk_bw + self.host_load_time(bytes)
     }
 
     /// p3.8xlarge: 4 GPUs, all-to-all NVLink.
@@ -274,6 +288,11 @@ mod tests {
         // Host load of the same bytes sits between NVLink and network.
         let host = t.host_load_time(bytes);
         assert!(nv < host && host < net, "nv={nv} host={host} net={net}");
+        // Disk fall-through is strictly slower than a pure host load (it
+        // includes one) but uses the same-model SSD regardless of scale.
+        let disk = t.disk_load_time(bytes);
+        assert!(disk > host, "disk={disk} host={host}");
+        assert!((disk - (t.hw.disk_lat + bytes as f64 / t.hw.disk_bw + host)).abs() < 1e-15);
     }
 
     #[test]

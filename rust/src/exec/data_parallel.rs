@@ -9,6 +9,7 @@
 use crate::cache::{FeatureCache, FetchSource};
 use crate::costmodel::IterCounters;
 use crate::exec::{add_grad_allreduce, micro_batches, Engine, EngineCtx};
+use crate::graph::FeatureSource;
 use crate::presample::PresampleWeights;
 use crate::rng::{derive_seed, Pcg32};
 use crate::sampling::Sampler;

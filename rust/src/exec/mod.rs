@@ -22,7 +22,7 @@ pub use split_parallel::SplitParallel;
 
 use crate::costmodel::{iter_time, IterCounters, PhaseBreakdown};
 use crate::devices::Topology;
-use crate::graph::Dataset;
+use crate::graph::{Dataset, FeatureSource};
 use crate::model::{GnnKind, ModelConfig};
 use crate::rng::derive_seed;
 use crate::{DeviceId, Vid};

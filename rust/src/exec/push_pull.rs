@@ -14,6 +14,7 @@
 
 use crate::costmodel::IterCounters;
 use crate::exec::{add_grad_allreduce, micro_batches, Engine, EngineCtx};
+use crate::graph::FeatureSource;
 use crate::rng::{derive_seed, Pcg32};
 use crate::sampling::Sampler;
 use crate::{DeviceId, Vid};

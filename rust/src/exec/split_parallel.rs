@@ -11,6 +11,7 @@
 use crate::cache::{FeatureCache, FetchSource};
 use crate::costmodel::IterCounters;
 use crate::exec::{add_grad_allreduce, Engine, EngineCtx};
+use crate::graph::{FeatureSource, HostTier};
 use crate::partition::Partitioning;
 use crate::rng::derive_seed;
 use crate::split::{SplitPlan, SplitSampler};
@@ -160,13 +161,20 @@ impl SplitParallel {
         // same topology-aware classifier the trainer's loading stage uses
         // (under §7.4 replication every host caches the same rows): a copy
         // only reachable without a direct NVLink counts as a host load.
+        // Host rows are further split by the feature source's host tier —
+        // `probe_row` advances the same chunk-buffer state as the
+        // trainer's `fetch_row`, so rows an out-of-core source would have
+        // faulted in from disk land in `disk_load_bytes`.
         for (d, frontier) in plan.input_frontier.iter().enumerate() {
             let dev = (g0 + d) as DeviceId;
             for &v in frontier {
                 match self.cache.fetch_source_replicated(v, dev, &ctx.topo, self.gpus_per_host) {
                     FetchSource::Local => c.local_load_bytes[g0 + d] += row_bytes,
                     FetchSource::Peer(o) => c.peer_load.add(o, dev, row_bytes),
-                    FetchSource::Host => c.host_load_bytes[g0 + d] += row_bytes,
+                    FetchSource::Host => match ctx.ds.features.probe_row(v) {
+                        HostTier::Ram => c.host_load_bytes[g0 + d] += row_bytes,
+                        HostTier::Disk => c.disk_load_bytes[g0 + d] += row_bytes,
+                    },
                 }
             }
         }
@@ -305,6 +313,60 @@ mod tests {
             uncached.total_input_bytes(),
             "cache policy must not change the materialized input volume"
         );
+    }
+
+    #[test]
+    fn disk_backed_accounting_splits_host_into_four_tiers() {
+        // With an out-of-core feature source, cache-miss rows split into
+        // Host (chunk-buffer hit) and Disk (fault) — and the four tiers
+        // still sum to the uncached in-RAM total for the same plan. Each
+        // engine run gets its OWN disk dataset so the chunk-buffer state
+        // always starts cold.
+        let ram = StandIn::Tiny.load().unwrap();
+        let dir = std::env::temp_dir().join(format!("gsplit_sp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.gsg");
+        ram.write_gsg(&path).unwrap();
+        let spec = StandIn::Tiny.spec();
+        let open_disk = || {
+            let mut ds =
+                crate::graph::Dataset::open_ooc(&path, spec.train_frac, spec.seed ^ 0x5717)
+                    .unwrap();
+            // Small buffer (256-row chunks, 4 resident) so an epoch
+            // exercises both buffer hits and disk faults.
+            ds.features = std::sync::Arc::new(
+                crate::graph::DiskFeatureStore::open(&path).unwrap().with_buffer(256, 4),
+            );
+            ds
+        };
+        let targets: Vec<Vid> = (0..256).collect();
+
+        let ram_out = {
+            let (ctx, p, w) = setup(&ram, Topology::p3_8xlarge(1000.0)); // no cache fits
+            SplitParallel::new(&ctx, p, &w.vertex, 128).iteration(&ctx, &targets, 3)
+        };
+        let disk_out = {
+            let ds = open_disk();
+            let (ctx, p, w) = setup(&ds, Topology::p3_8xlarge(1000.0));
+            SplitParallel::new(&ctx, p, &w.vertex, 128).iteration(&ctx, &targets, 3)
+        };
+        assert!(disk_out.disk_load_bytes.iter().sum::<u64>() > 0, "no disk faults counted");
+        assert_eq!(
+            disk_out.total_input_bytes(),
+            ram_out.total_input_bytes(),
+            "the feature source must not change the materialized input volume"
+        );
+        assert_eq!(ram_out.disk_load_bytes.iter().sum::<u64>(), 0, "RAM source has no disk tier");
+
+        // Determinism of the split itself: a fresh disk dataset replays
+        // the identical buffer-state evolution.
+        let disk_again = {
+            let ds = open_disk();
+            let (ctx, p, w) = setup(&ds, Topology::p3_8xlarge(1000.0));
+            SplitParallel::new(&ctx, p, &w.vertex, 128).iteration(&ctx, &targets, 3)
+        };
+        assert_eq!(disk_out.disk_load_bytes, disk_again.disk_load_bytes);
+        assert_eq!(disk_out.host_load_bytes, disk_again.host_load_bytes);
     }
 
     #[test]

@@ -13,12 +13,14 @@
 //! loading-time crossovers — is preserved. Generated graphs are cached on
 //! disk under `target/graphs/` because RMAT at papers-s scale takes seconds.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::graph::{
-    community_rmat, load_graph, save_graph, CsrGraph, FeatureStore, GenParams, LabelStore,
+    community_rmat, load_graph, load_labels, save_dataset, save_graph, CsrGraph, DiskFeatureStore,
+    FeatureSource, FeatureStore, GenParams, LabelStore,
 };
 use crate::rng::Pcg32;
 use crate::Vid;
@@ -157,16 +159,23 @@ impl DatasetSpec {
         let labels: Vec<u32> =
             (0..graph.num_vertices() as Vid).map(|v| graph.degree(v) % 16).collect();
         let labels = LabelStore::with_split(labels, self.train_frac, self.seed ^ 0x5717);
-        Ok(Dataset { spec: self.clone(), graph, features, labels })
+        Ok(Dataset { spec: self.clone(), graph, features: Arc::new(features), labels })
     }
 }
 
 /// A fully materialized dataset.
+///
+/// `features` is a shared [`FeatureSource`] trait object: the in-RAM
+/// [`FeatureStore`] for stand-ins, or a [`DiskFeatureStore`] for
+/// out-of-core datasets opened with [`Dataset::open_ooc`]. Everything
+/// downstream (plan stage, executors, cache build) goes through the trait,
+/// so the two are interchangeable — and, per the trait contract,
+/// bit-identical in what they serve.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub spec: DatasetSpec,
     pub graph: CsrGraph,
-    pub features: FeatureStore,
+    pub features: Arc<dyn FeatureSource>,
     pub labels: LabelStore,
 }
 
@@ -202,9 +211,47 @@ impl Dataset {
                 inter_frac: 0.1,
             },
             graph,
-            features,
+            features: Arc::new(features),
             labels,
         }
+    }
+
+    /// Open a v2 `.gsg` file as an out-of-core dataset: topology and labels
+    /// load into RAM (they are a small fraction of feature bytes), features
+    /// stay on disk behind a [`DiskFeatureStore`]. Files written without a
+    /// labels section get the same degree-derived labels the stand-ins use,
+    /// so a round trip through [`Dataset::write_gsg`] → `open_ooc` (with
+    /// the stand-in's `train_frac` and split seed `spec.seed ^ 0x5717`)
+    /// reproduces the in-RAM dataset exactly.
+    pub fn open_ooc(path: &Path, train_frac: f64, split_seed: u64) -> Result<Dataset> {
+        let graph = load_graph(path)?;
+        let features =
+            DiskFeatureStore::open(path).with_context(|| format!("open features of {path:?}"))?;
+        let labels = match load_labels(path)? {
+            Some(l) => l,
+            None => (0..graph.num_vertices() as Vid).map(|v| graph.degree(v) % 16).collect(),
+        };
+        let labels = LabelStore::with_split(labels, train_frac, split_seed);
+        let spec = DatasetSpec {
+            name: "ooc",
+            paper_name: "(on-disk)",
+            num_vertices: graph.num_vertices(),
+            num_und_edges: graph.num_edges() / 2,
+            feat_dim: features.dim(),
+            scale_divisor: 1.0,
+            train_frac,
+            seed: split_seed,
+            communities: 1,
+            inter_frac: 0.0,
+        };
+        Ok(Dataset { spec, graph, features: Arc::new(features), labels })
+    }
+
+    /// Write this dataset (topology + labels + features) as a v2 `.gsg`
+    /// file — the input `open_ooc` and `gsplit train --graph` consume.
+    /// Features are streamed through the [`FeatureSource`] in chunks.
+    pub fn write_gsg(&self, path: &Path) -> Result<()> {
+        save_dataset(path, &self.graph, Some(&self.labels.labels), &*self.features)
     }
 
     /// Shuffled copy of the training vertices for one epoch.
@@ -246,6 +293,31 @@ mod tests {
         sa.sort_unstable();
         sb.sort_unstable();
         assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn write_gsg_open_ooc_roundtrip_matches_ram() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let dir = std::env::temp_dir().join(format!("gsplit_ds_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.gsg");
+        ds.write_gsg(&path).unwrap();
+        let spec = StandIn::Tiny.spec();
+        let ooc = Dataset::open_ooc(&path, spec.train_frac, spec.seed ^ 0x5717).unwrap();
+        assert_eq!(ooc.graph, ds.graph);
+        assert_eq!(ooc.labels.labels, ds.labels.labels);
+        assert_eq!(ooc.labels.train_set, ds.labels.train_set);
+        assert_eq!(ooc.features.dim(), ds.features.dim());
+        let dim = ds.features.dim();
+        let mut ram = vec![0f32; dim];
+        let mut disk = vec![0f32; dim];
+        for v in [0u32, 1, 4_000, 7_999] {
+            ds.features.copy_row(v, &mut ram);
+            ooc.features.copy_row(v, &mut disk);
+            for (r, d) in ram.iter().zip(&disk) {
+                assert_eq!(r.to_bits(), d.to_bits(), "row {v} differs");
+            }
+        }
     }
 
     #[test]

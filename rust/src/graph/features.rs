@@ -8,6 +8,93 @@
 use crate::rng::{Pcg32, SplitMix64};
 use crate::Vid;
 
+/// Which host-side tier actually served a feature row — the split one
+/// level *below* the device-side Local/Peer classification of
+/// [`FetchSource`](crate::cache::FetchSource) (DESIGN.md §Loading).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostTier {
+    /// Served from host RAM: an in-RAM [`FeatureStore`], or a hit in an
+    /// out-of-core reader's chunk buffer.
+    Ram,
+    /// The row fell through host RAM to disk (a chunk-buffer miss in a
+    /// [`DiskFeatureStore`](crate::graph::DiskFeatureStore)).
+    Disk,
+}
+
+/// Uniform host-side feature access for the plan stage, both executors,
+/// and `CacheStore::build`: implemented by the in-RAM [`FeatureStore`] and
+/// the out-of-core [`DiskFeatureStore`](crate::graph::DiskFeatureStore).
+///
+/// The contract every implementation must honor is the repo-wide one: for
+/// the same vertex, every source returns the **same f32 bits** — where the
+/// bytes live (RAM, chunk buffer, disk) can change the [`HostTier`]
+/// accounting, never what the model computes.
+pub trait FeatureSource: Send + Sync + std::fmt::Debug {
+    /// Feature width (columns per row).
+    fn dim(&self) -> usize;
+
+    /// Number of rows (vertices).
+    fn len(&self) -> usize;
+
+    /// Copy the feature row of `v` into `out` (length `dim`), reporting
+    /// the host tier that served it.
+    fn fetch_row(&self, v: Vid, out: &mut [f32]) -> HostTier;
+
+    /// Classify where a fetch of `v` *would have been* served, advancing
+    /// the same internal buffer state as [`Self::fetch_row`] but without
+    /// copying bytes — the cost-model counting path
+    /// (`SplitParallel::account_plan`) uses this.
+    fn probe_row(&self, v: Vid) -> HostTier;
+
+    /// Drop any internal tier-classification state (e.g. the out-of-core
+    /// chunk buffer). Called after offline bulk reads — cache residency
+    /// construction — so online accounting always starts cold and is
+    /// independent of how the cache was built. No-op for in-RAM stores.
+    fn reset_host_tiers(&self) {}
+
+    /// Copy the feature row of `v` into `out`, ignoring the tier.
+    fn copy_row(&self, v: Vid, out: &mut [f32]) {
+        self.fetch_row(v, out);
+    }
+
+    /// Bytes per feature row.
+    fn row_bytes(&self) -> u64 {
+        (self.dim() * 4) as u64
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather rows for `vertices` into a `[len, dim]` row-major buffer.
+    fn gather(&self, vertices: &[Vid], out: &mut Vec<f32>) {
+        let dim = self.dim();
+        out.resize(vertices.len() * dim, 0.0);
+        for (i, &v) in vertices.iter().enumerate() {
+            self.copy_row(v, &mut out[i * dim..(i + 1) * dim]);
+        }
+    }
+}
+
+impl FeatureSource for FeatureStore {
+    fn dim(&self) -> usize {
+        FeatureStore::dim(self)
+    }
+
+    fn len(&self) -> usize {
+        FeatureStore::len(self)
+    }
+
+    fn fetch_row(&self, v: Vid, out: &mut [f32]) -> HostTier {
+        FeatureStore::copy_row(self, v, out);
+        HostTier::Ram
+    }
+
+    fn probe_row(&self, _v: Vid) -> HostTier {
+        HostTier::Ram
+    }
+}
+
 /// Dense row-major f32 feature matrix `[n, dim]`.
 ///
 /// For large perf-only graphs, use [`FeatureStore::lazy`] which synthesizes
@@ -170,6 +257,31 @@ mod tests {
             a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
         };
         assert!(d(&r0, &r2) < d(&r0, &r1), "same-class rows should be closer");
+    }
+
+    #[test]
+    fn feature_store_is_a_ram_tier_source() {
+        // Through the trait object, an in-RAM store always classifies Ram
+        // and returns the same bits as the inherent accessors.
+        let fs = FeatureStore::lazy(10, 4, 7);
+        let src: &dyn FeatureSource = &fs;
+        assert_eq!(src.dim(), 4);
+        assert_eq!(src.len(), 10);
+        assert_eq!(src.row_bytes(), 16);
+        assert!(!src.is_empty());
+        let mut a = vec![0f32; 4];
+        let mut b = vec![0f32; 4];
+        fs.copy_row(3, &mut a);
+        assert_eq!(src.fetch_row(3, &mut b), HostTier::Ram);
+        assert_eq!(src.probe_row(3), HostTier::Ram);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut g1 = Vec::new();
+        let mut g2 = Vec::new();
+        fs.gather(&[1, 9, 0], &mut g1);
+        src.gather(&[1, 9, 0], &mut g2);
+        assert_eq!(g1, g2);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Binary on-disk graph format (`.gsg` — "gsplit graph").
 //!
-//! Layout (little endian):
+//! Two versions, both little endian:
+//!
+//! **v1** — topology only (what `save_graph` writes; used to cache
+//! generated stand-in graphs across runs):
 //! ```text
 //! magic   u64  = 0x4753504C49545F31 ("GSPLIT_1")
 //! n       u64  number of vertices
@@ -8,8 +11,31 @@
 //! offsets (n+1) × u64
 //! adj     m × u32
 //! ```
-//! Used so benches can reuse generated stand-in graphs across runs instead
-//! of regenerating them (RMAT at papers-s scale takes a couple of seconds).
+//!
+//! **v2** — topology + versioned label/feature sections (what
+//! `save_dataset` writes; the out-of-core training input):
+//! ```text
+//! magic    u64  = 0x4753504C49545F32 ("GSPLIT_2")
+//! n        u64
+//! m        u64
+//! feat_dim u64  feature columns per vertex
+//! flags    u64  bit 0 = labels section present
+//! offsets  (n+1) × u64
+//! adj      m × u32
+//! labels   n × u32          (iff flags bit 0)
+//! features n × feat_dim × f32
+//! ```
+//! Features come **last** so row `v` has the fixed file offset
+//! `feat_off + v × feat_dim × 4` — the property
+//! [`DiskFeatureStore`](crate::graph::DiskFeatureStore) relies on to read
+//! chunks without an index. `save_dataset` streams feature rows through a
+//! bounded chunk buffer, so a 10⁷-vertex graph's features never
+//! materialize in RAM.
+//!
+//! `load_graph` accepts either version (it stops after `adj`) and
+//! validates the CSR invariants on load: total file length against the
+//! header, monotone offsets starting at 0, and every adjacency entry
+//! `< n` — naming the offending index in the error, never panicking.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -17,44 +43,236 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, FeatureSource};
 use crate::Vid;
 
-const MAGIC: u64 = 0x4753_504C_4954_5F31;
+const MAGIC_V1: u64 = 0x4753_504C_4954_5F31;
+const MAGIC_V2: u64 = 0x4753_504C_4954_5F32;
 
+/// Flags bit 0: a `labels` section precedes the feature section.
+const FLAG_LABELS: u64 = 1;
+
+const HEADER_V1_BYTES: u64 = 3 * 8;
+const HEADER_V2_BYTES: u64 = 5 * 8;
+
+/// Parsed `.gsg` header plus the absolute section offsets derived from it.
+/// For v1 files the label/feature sections don't exist (`feat_dim == 0`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GsgLayout {
+    /// Format version (1 or 2).
+    pub version: u32,
+    pub n: usize,
+    pub m: usize,
+    /// Feature columns per vertex (0 for v1 files).
+    pub feat_dim: usize,
+    pub has_labels: bool,
+    /// Byte offset of the labels section (meaningful iff `has_labels`).
+    pub labels_off: u64,
+    /// Byte offset of the feature section (meaningful iff v2).
+    pub feat_off: u64,
+}
+
+impl GsgLayout {
+    /// Read and validate the header of `path`, including that the file
+    /// length matches exactly what the header promises (so truncation is
+    /// a descriptive error here, not an EOF deep inside a section read).
+    pub fn read(path: &Path) -> Result<GsgLayout> {
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut r = BufReader::new(f);
+        if file_len < HEADER_V1_BYTES {
+            bail!(
+                "{path:?}: file is {file_len} bytes, shorter than the {HEADER_V1_BYTES}-byte \
+                 .gsg header"
+            );
+        }
+        let magic = read_u64(&mut r)?;
+        let version = match magic {
+            MAGIC_V1 => 1,
+            MAGIC_V2 => 2,
+            other => bail!("{path:?}: bad magic {other:#x} (not a .gsg graph file)"),
+        };
+        if version == 2 && file_len < HEADER_V2_BYTES {
+            bail!(
+                "{path:?}: file is {file_len} bytes, shorter than the {HEADER_V2_BYTES}-byte \
+                 v2 .gsg header"
+            );
+        }
+        let n = read_u64(&mut r)?;
+        let m = read_u64(&mut r)?;
+        let (feat_dim, flags) =
+            if version == 2 { (read_u64(&mut r)?, read_u64(&mut r)?) } else { (0, 0) };
+        let has_labels = flags & FLAG_LABELS != 0;
+        let header = if version == 2 { HEADER_V2_BYTES } else { HEADER_V1_BYTES };
+
+        // Expected length, overflow-checked: a corrupt header must produce
+        // an error, never a huge allocation or a wrapped size.
+        let sections: Option<u64> = (|| {
+            let offsets = n.checked_add(1)?.checked_mul(8)?;
+            let adj = m.checked_mul(4)?;
+            let labels = if has_labels { n.checked_mul(4)? } else { 0 };
+            let feats = n.checked_mul(feat_dim)?.checked_mul(4)?;
+            header.checked_add(offsets)?.checked_add(adj)?.checked_add(labels)?.checked_add(feats)
+        })();
+        let expected = match sections {
+            Some(e) => e,
+            None => bail!("{path:?}: corrupt header (n={n}, m={m}, feat_dim={feat_dim} overflow)"),
+        };
+        if file_len != expected {
+            bail!(
+                "{path:?}: file is {file_len} bytes but the header (n={n}, m={m}, \
+                 feat_dim={feat_dim}, labels={has_labels}) requires exactly {expected} — \
+                 truncated or corrupt"
+            );
+        }
+        let topo_end = header + (n + 1) * 8 + m * 4;
+        let labels_off = topo_end;
+        let feat_off = topo_end + if has_labels { n * 4 } else { 0 };
+        Ok(GsgLayout {
+            version,
+            n: n as usize,
+            m: m as usize,
+            feat_dim: feat_dim as usize,
+            has_labels,
+            labels_off,
+            feat_off,
+        })
+    }
+}
+
+/// Save topology only (v1) — the stand-in graph cache format.
 pub fn save_graph(g: &CsrGraph, path: &Path) -> Result<()> {
     let f = File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&MAGIC_V1.to_le_bytes())?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    write_topology(&mut w, g)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Rows per write chunk when streaming the feature section. Large enough
+/// to amortize syscalls, small enough that the buffer stays a few MB even
+/// at Orkut's 512-dim width.
+const SAVE_CHUNK_ROWS: usize = 4096;
+
+/// Save topology + optional labels + features (v2, the out-of-core
+/// training input). Feature rows are pulled from `features` and written in
+/// [`SAVE_CHUNK_ROWS`]-row chunks, so a lazy/procedural source streams to
+/// disk without ever materializing the full matrix in RAM.
+pub fn save_dataset(
+    path: &Path,
+    g: &CsrGraph,
+    labels: Option<&[u32]>,
+    features: &dyn FeatureSource,
+) -> Result<()> {
+    let n = g.num_vertices();
+    assert_eq!(features.len(), n, "feature rows must cover all vertices");
+    if let Some(l) = labels {
+        assert_eq!(l.len(), n, "labels must cover all vertices");
+    }
+    let dim = features.dim();
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC_V2.to_le_bytes())?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    w.write_all(&(dim as u64).to_le_bytes())?;
+    let flags: u64 = if labels.is_some() { FLAG_LABELS } else { 0 };
+    w.write_all(&flags.to_le_bytes())?;
+    write_topology(&mut w, g)?;
+    if let Some(l) = labels {
+        for &x in l {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    let mut chunk = vec![0f32; SAVE_CHUNK_ROWS.min(n.max(1)) * dim];
+    for start in (0..n).step_by(SAVE_CHUNK_ROWS.max(1)) {
+        let rows = SAVE_CHUNK_ROWS.min(n - start);
+        for r in 0..rows {
+            features.copy_row((start + r) as Vid, &mut chunk[r * dim..(r + 1) * dim]);
+        }
+        write_f32_slice(&mut w, &chunk[..rows * dim])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn write_topology(w: &mut impl Write, g: &CsrGraph) -> Result<()> {
     for &o in g.offsets() {
         w.write_all(&o.to_le_bytes())?;
     }
     for &v in g.adj() {
         w.write_all(&v.to_le_bytes())?;
     }
-    w.flush()?;
     Ok(())
 }
 
+/// Load the topology of a v1 **or** v2 `.gsg` file, validating the CSR
+/// invariants (see the module docs).
 pub fn load_graph(path: &Path) -> Result<CsrGraph> {
+    let layout = GsgLayout::read(path)?;
     let f = File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
-    let magic = read_u64(&mut r)?;
-    if magic != MAGIC {
-        bail!("{path:?}: bad magic {magic:#x} (not a .gsg graph file)");
-    }
-    let n = read_u64(&mut r)? as usize;
-    let m = read_u64(&mut r)? as usize;
+    let header = if layout.version == 2 { HEADER_V2_BYTES } else { HEADER_V1_BYTES };
+    io_skip(&mut r, header)?;
+    let (n, m) = (layout.n, layout.m);
     let mut offsets = vec![0u64; n + 1];
     read_u64_slice(&mut r, &mut offsets)?;
     let mut adj = vec![0 as Vid; m];
     read_u32_slice(&mut r, &mut adj)?;
-    if offsets.last().copied() != Some(m as u64) {
-        bail!("{path:?}: corrupt offsets (last={:?}, m={m})", offsets.last());
-    }
+    validate_csr(path, n, m, &offsets, &adj)?;
     Ok(CsrGraph::from_raw(offsets, adj))
+}
+
+/// Load the labels section of a v2 file; `Ok(None)` if the file carries no
+/// labels (v1, or v2 written without them).
+pub fn load_labels(path: &Path) -> Result<Option<Vec<u32>>> {
+    let layout = GsgLayout::read(path)?;
+    if !layout.has_labels {
+        return Ok(None);
+    }
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    io_skip(&mut r, layout.labels_off)?;
+    let mut labels = vec![0u32; layout.n];
+    read_u32_slice(&mut r, &mut labels)?;
+    Ok(Some(labels))
+}
+
+/// The load-time CSR validation (the `.gsg` trust boundary): every index
+/// the in-memory [`CsrGraph`] would later use unchecked is range-checked
+/// here, with the offending index named.
+fn validate_csr(path: &Path, n: usize, m: usize, offsets: &[u64], adj: &[Vid]) -> Result<()> {
+    if offsets[0] != 0 {
+        bail!("{path:?}: corrupt offsets (offsets[0] = {}, expected 0)", offsets[0]);
+    }
+    for i in 0..n {
+        if offsets[i] > offsets[i + 1] {
+            bail!(
+                "{path:?}: corrupt offsets (offsets[{i}] = {} > offsets[{}] = {} — not \
+                 monotone)",
+                offsets[i],
+                i + 1,
+                offsets[i + 1]
+            );
+        }
+    }
+    if offsets[n] != m as u64 {
+        bail!("{path:?}: corrupt offsets (last = {}, m = {m})", offsets[n]);
+    }
+    for (i, &v) in adj.iter().enumerate() {
+        if v as usize >= n {
+            bail!("{path:?}: corrupt adjacency (adj[{i}] = {v}, out of range for n = {n})");
+        }
+    }
+    Ok(())
+}
+
+fn io_skip(r: &mut impl Read, bytes: u64) -> Result<()> {
+    std::io::copy(&mut r.take(bytes), &mut std::io::sink())?;
+    Ok(())
 }
 
 fn read_u64(r: &mut impl Read) -> Result<u64> {
@@ -90,40 +308,234 @@ fn read_u32_slice(r: &mut impl Read, out: &mut [u32]) -> Result<()> {
     Ok(())
 }
 
+pub(crate) fn read_f32_slice(r: &mut impl Read, out: &mut [f32]) -> Result<()> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    r.read_exact(bytes)?;
+    if cfg!(target_endian = "big") {
+        for x in out.iter_mut() {
+            *x = f32::from_bits(u32::from_le(x.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+fn write_f32_slice(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    if cfg!(target_endian = "big") {
+        for &x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    } else {
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{rmat, GenParams};
+    use crate::graph::{rmat, FeatureStore, GenParams, GraphBuilder};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("gsplit_io_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}.gsg"))
+    }
 
     #[test]
     fn roundtrip() {
         let g = rmat(&GenParams { num_vertices: 256, num_edges: 1024, seed: 12 });
-        let dir = std::env::temp_dir().join("gsplit_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("g.gsg");
+        let path = tmp("roundtrip");
         save_graph(&g, &path).unwrap();
         let g2 = load_graph(&path).unwrap();
         assert_eq!(g, g2);
     }
 
     #[test]
-    fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("gsplit_io_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.gsg");
-        std::fs::write(&path, b"not a graph file at all....").unwrap();
-        assert!(load_graph(&path).is_err());
+    fn roundtrip_empty_graph() {
+        let g = GraphBuilder::new(0).finish();
+        let path = tmp("empty");
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.num_vertices(), 0);
+        assert_eq!(g2.num_edges(), 0);
     }
 
     #[test]
-    fn rejects_truncated() {
+    fn roundtrip_isolated_vertices() {
+        // Vertices with no edges at all: offsets are flat runs.
+        let mut b = GraphBuilder::new(10);
+        b.add_edge(3, 7);
+        let g = b.finish();
+        let path = tmp("isolated");
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.degree(0), 0);
+        assert_eq!(g2.degree(3), 1);
+    }
+
+    #[test]
+    fn roundtrip_max_degree_vertex() {
+        // One hub adjacent to every other vertex.
+        let n = 64u32;
+        let mut b = GraphBuilder::new(n as usize);
+        for v in 1..n {
+            b.add_edge(0, v);
+            b.add_edge(v, 0);
+        }
+        let g = b.finish();
+        let path = tmp("hub");
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.degree(0) as u32, n - 1);
+    }
+
+    #[test]
+    fn v2_roundtrip_with_labels_and_features() {
+        let g = rmat(&GenParams { num_vertices: 100, num_edges: 400, seed: 5 });
+        let feats = FeatureStore::lazy(100, 8, 99);
+        let labels: Vec<u32> = (0..100).map(|v| v % 7).collect();
+        let path = tmp("v2");
+        save_dataset(&path, &g, Some(&labels), &feats).unwrap();
+        let layout = GsgLayout::read(&path).unwrap();
+        assert_eq!(layout.version, 2);
+        assert_eq!((layout.n, layout.m), (100, g.num_edges()));
+        assert_eq!(layout.feat_dim, 8);
+        assert!(layout.has_labels);
+        assert_eq!(load_graph(&path).unwrap(), g);
+        assert_eq!(load_labels(&path).unwrap().unwrap(), labels);
+    }
+
+    #[test]
+    fn v2_without_labels() {
+        let g = rmat(&GenParams { num_vertices: 32, num_edges: 64, seed: 6 });
+        let feats = FeatureStore::lazy(32, 4, 1);
+        let path = tmp("v2_nolabels");
+        save_dataset(&path, &g, None, &feats).unwrap();
+        assert!(load_labels(&path).unwrap().is_none());
+        assert_eq!(load_graph(&path).unwrap(), g);
+    }
+
+    #[test]
+    fn v1_has_no_labels_section() {
+        let g = rmat(&GenParams { num_vertices: 32, num_edges: 64, seed: 6 });
+        let path = tmp("v1_nolabels");
+        save_graph(&g, &path).unwrap();
+        assert!(load_labels(&path).unwrap().is_none());
+    }
+
+    // ---- corruption matrix: every case is a descriptive error, never a
+    // panic or an OOM-sized allocation ----
+
+    fn expect_err_containing(path: &Path, needle: &str) {
+        let err = match load_graph(path) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("corrupt file {path:?} loaded successfully"),
+        };
+        assert!(err.contains(needle), "error {err:?} should mention {needle:?}");
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad_magic");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        expect_err_containing(&path, "bad magic");
+    }
+
+    #[test]
+    fn rejects_short_header() {
+        let path = tmp("short_header");
+        std::fs::write(&path, &MAGIC_V1.to_le_bytes()[..6]).unwrap();
+        expect_err_containing(&path, "shorter than");
+        // v2 magic + nothing else: long enough for v1's header test but
+        // not v2's.
+        let mut bytes = MAGIC_V2.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&path, bytes).unwrap();
+        expect_err_containing(&path, "shorter than");
+    }
+
+    #[test]
+    fn rejects_truncated_adj() {
         let g = rmat(&GenParams { num_vertices: 64, num_edges: 128, seed: 1 });
-        let dir = std::env::temp_dir().join("gsplit_io_test3");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("trunc.gsg");
+        let path = tmp("trunc");
         save_graph(&g, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load_graph(&path).is_err());
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        expect_err_containing(&path, "truncated or corrupt");
+    }
+
+    #[test]
+    fn rejects_offsets_m_mismatch() {
+        // Claim m+8 edges in the header but keep the original offsets:
+        // with 8 extra adj entries appended the length check passes and
+        // the offsets/m cross-check must catch it.
+        let g = rmat(&GenParams { num_vertices: 64, num_edges: 128, seed: 1 });
+        let path = tmp("m_mismatch");
+        save_graph(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let m = g.num_edges() as u64 + 8;
+        bytes[16..24].copy_from_slice(&m.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, bytes).unwrap();
+        expect_err_containing(&path, "corrupt offsets");
+    }
+
+    #[test]
+    fn rejects_insane_header_counts() {
+        // n = u64::MAX must be a clean error, not a (n+1)*8 allocation.
+        let mut bytes = MAGIC_V1.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        let path = tmp("insane");
+        std::fs::write(&path, bytes).unwrap();
+        expect_err_containing(&path, "overflow");
+    }
+
+    /// Write a v1 file with the exact offsets/adj given — for crafting
+    /// corrupt CSR payloads that pass the length check.
+    fn write_v1_raw(path: &Path, n: u64, m: u64, offsets: &[u64], adj: &[u32]) {
+        let mut bytes = MAGIC_V1.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&n.to_le_bytes());
+        bytes.extend_from_slice(&m.to_le_bytes());
+        for &o in offsets {
+            bytes.extend_from_slice(&o.to_le_bytes());
+        }
+        for &v in adj {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn rejects_non_monotone_offsets_naming_index() {
+        // offsets[1] = 3 > offsets[2] = 1: decreasing run the old
+        // last-offset-only check would have waved through.
+        let path = tmp("nonmono");
+        write_v1_raw(&path, 4, 4, &[0, 3, 1, 3, 4], &[1, 2, 3, 0]);
+        expect_err_containing(&path, "offsets[1] = 3 > offsets[2] = 1");
+        expect_err_containing(&path, "monotone");
+    }
+
+    #[test]
+    fn rejects_nonzero_first_offset() {
+        let path = tmp("first_offset");
+        write_v1_raw(&path, 4, 4, &[1, 1, 2, 3, 4], &[1, 2, 3, 0]);
+        expect_err_containing(&path, "offsets[0] = 1");
+    }
+
+    #[test]
+    fn rejects_out_of_range_adj_naming_index() {
+        // adj[2] = 9 ≥ n = 4 — an index CsrGraph::neighbors would later
+        // use to read out of bounds.
+        let path = tmp("adj_oob");
+        write_v1_raw(&path, 4, 4, &[0, 1, 2, 3, 4], &[1, 2, 9, 0]);
+        expect_err_containing(&path, "adj[2] = 9");
     }
 }

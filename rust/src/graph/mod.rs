@@ -13,9 +13,11 @@ mod datasets;
 mod features;
 mod gen;
 mod io;
+mod oocr;
 
 pub use csr::{CsrGraph, GraphBuilder};
 pub use datasets::{Dataset, DatasetSpec, StandIn};
-pub use features::{FeatureStore, LabelStore};
+pub use features::{FeatureSource, FeatureStore, HostTier, LabelStore};
 pub use gen::{community_rmat, erdos_renyi, rmat, sbm, GenParams};
-pub use io::{load_graph, save_graph};
+pub use io::{load_graph, load_labels, save_dataset, save_graph, GsgLayout};
+pub use oocr::DiskFeatureStore;

@@ -1,0 +1,318 @@
+//! Out-of-core feature reader: the disk-backed [`FeatureSource`].
+//!
+//! [`DiskFeatureStore`] serves feature rows straight from the feature
+//! section of a v2 `.gsg` file through a small LRU buffer of fixed-size
+//! row chunks, so training a graph whose features don't fit in RAM only
+//! ever holds `max_chunks × chunk_rows × dim × 4` bytes of them.
+//!
+//! Why explicit chunk buffering instead of `mmap`: the crate is fully
+//! offline (no libc/`memmap` dependency), and — more importantly — an
+//! explicit buffer makes the Host/Disk tier split *observable and
+//! deterministic*. Every fetch either hits a resident chunk
+//! ([`HostTier::Ram`] — the row was already in host memory) or faults the
+//! chunk in from disk ([`HostTier::Disk`]), and because all feature
+//! fetches happen on the coordinator thread in batch order (the plan
+//! stage gathers, the executors only consume the gathered buffers), the
+//! buffer-state evolution — and therefore the per-tier byte accounting —
+//! is identical for the serial and pipelined executors. DESIGN.md
+//! §Loading describes the resulting four-tier model.
+//!
+//! The bit-identity contract of [`FeatureSource`] holds trivially: rows
+//! are read back verbatim from the file `save_dataset` wrote, so a
+//! disk-backed dataset trains bit-identically to the in-RAM source those
+//! bytes came from.
+
+use std::fs::File;
+use std::io::{Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::features::{FeatureSource, HostTier};
+use crate::graph::io::{read_f32_slice, GsgLayout};
+use crate::Vid;
+
+/// Default rows per chunk: 1024 rows × 32-dim f32 = 128 KiB per chunk.
+pub const DEFAULT_CHUNK_ROWS: usize = 1024;
+/// Default resident chunk count.
+pub const DEFAULT_MAX_CHUNKS: usize = 8;
+
+/// Chunk-buffered reader over the feature section of a v2 `.gsg` file.
+///
+/// All state lives behind one mutex: fetches are serialized, which keeps
+/// the LRU evolution (and the Host/Disk accounting derived from it) a
+/// pure function of the fetch order.
+#[derive(Debug)]
+pub struct DiskFeatureStore {
+    path: PathBuf,
+    n: usize,
+    dim: usize,
+    feat_off: u64,
+    chunk_rows: usize,
+    max_chunks: usize,
+    state: Mutex<ChunkBuffer>,
+}
+
+#[derive(Debug)]
+struct ChunkBuffer {
+    file: File,
+    /// Resident chunks as `(chunk_id, rows)`, LRU order: front = coldest,
+    /// back = most recently used. Linear scan — `max_chunks` is single
+    /// digits, a map would cost more than it saves.
+    chunks: Vec<(usize, Vec<f32>)>,
+    chunk_loads: u64,
+    disk_bytes: u64,
+}
+
+impl DiskFeatureStore {
+    /// Open the feature section of a v2 `.gsg` file with the default
+    /// buffer geometry. Rejects v1 files (they carry no features).
+    pub fn open(path: &Path) -> Result<DiskFeatureStore> {
+        let layout = GsgLayout::read(path)?;
+        if layout.version < 2 || layout.feat_dim == 0 {
+            bail!(
+                "{path:?}: v{} .gsg has no feature section — regenerate with `gsplit gen --out` \
+                 or `Dataset::write_gsg`",
+                layout.version
+            );
+        }
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        Ok(DiskFeatureStore {
+            path: path.to_path_buf(),
+            n: layout.n,
+            dim: layout.feat_dim,
+            feat_off: layout.feat_off,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            max_chunks: DEFAULT_MAX_CHUNKS,
+            state: Mutex::new(ChunkBuffer {
+                file,
+                chunks: Vec::new(),
+                chunk_loads: 0,
+                disk_bytes: 0,
+            }),
+        })
+    }
+
+    /// Replace the buffer geometry (and drop any resident chunks).
+    /// `chunk_rows × max_chunks` bounds resident feature rows.
+    pub fn with_buffer(mut self, chunk_rows: usize, max_chunks: usize) -> DiskFeatureStore {
+        assert!(chunk_rows > 0 && max_chunks > 0, "buffer geometry must be nonzero");
+        self.chunk_rows = chunk_rows;
+        self.max_chunks = max_chunks;
+        self.reset_buffer();
+        self
+    }
+
+    /// Drop all resident chunks and zero the load counters — the next
+    /// fetch of any row is a [`HostTier::Disk`] fault again.
+    pub fn reset_buffer(&self) {
+        let mut s = self.state.lock().expect("DiskFeatureStore mutex poisoned");
+        s.chunks.clear();
+        s.chunk_loads = 0;
+        s.disk_bytes = 0;
+    }
+
+    /// Number of chunk faults (disk reads) since the last reset.
+    pub fn chunk_loads(&self) -> u64 {
+        self.state.lock().expect("DiskFeatureStore mutex poisoned").chunk_loads
+    }
+
+    /// Bytes read from disk since the last reset.
+    pub fn disk_bytes_read(&self) -> u64 {
+        self.state.lock().expect("DiskFeatureStore mutex poisoned").disk_bytes
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Ensure the chunk holding `v` is resident (faulting it in from disk
+    /// if not), run `use_chunk` on it, and report which tier served it.
+    fn with_row_chunk(&self, v: Vid, mut use_chunk: impl FnMut(&[f32])) -> HostTier {
+        let vu = v as usize;
+        assert!(vu < self.n, "vertex {v} out of range for {} feature rows", self.n);
+        let chunk_id = vu / self.chunk_rows;
+        let row_in_chunk = vu % self.chunk_rows;
+        let mut s = self.state.lock().expect("DiskFeatureStore mutex poisoned");
+        let pos = s.chunks.iter().position(|(id, _)| *id == chunk_id);
+        let tier = match pos {
+            Some(i) => {
+                // Hit: move to the back (most recently used).
+                let entry = s.chunks.remove(i);
+                s.chunks.push(entry);
+                HostTier::Ram
+            }
+            None => {
+                // Miss: evict the coldest chunk (reusing its allocation)
+                // and read the chunk from disk.
+                let mut buf = if s.chunks.len() >= self.max_chunks {
+                    s.chunks.remove(0).1
+                } else {
+                    Vec::new()
+                };
+                let rows = self.chunk_rows.min(self.n - chunk_id * self.chunk_rows);
+                buf.resize(rows * self.dim, 0.0);
+                let row0 = (chunk_id as u64) * (self.chunk_rows as u64);
+                let off = self.feat_off + row0 * (self.dim as u64) * 4;
+                s.file
+                    .seek(SeekFrom::Start(off))
+                    .unwrap_or_else(|e| panic!("seek chunk {chunk_id} of {:?}: {e}", self.path));
+                read_f32_slice(&mut s.file, &mut buf)
+                    .unwrap_or_else(|e| panic!("read chunk {chunk_id} of {:?}: {e:#}", self.path));
+                s.chunk_loads += 1;
+                s.disk_bytes += (buf.len() * 4) as u64;
+                s.chunks.push((chunk_id, buf));
+                HostTier::Disk
+            }
+        };
+        let chunk = &s.chunks.last().expect("chunk just ensured resident").1;
+        use_chunk(&chunk[row_in_chunk * self.dim..(row_in_chunk + 1) * self.dim]);
+        tier
+    }
+}
+
+impl FeatureSource for DiskFeatureStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn fetch_row(&self, v: Vid, out: &mut [f32]) -> HostTier {
+        debug_assert_eq!(out.len(), self.dim);
+        self.with_row_chunk(v, |row| out.copy_from_slice(row))
+    }
+
+    fn probe_row(&self, v: Vid) -> HostTier {
+        // Same buffer-state evolution as fetch_row, no copy.
+        self.with_row_chunk(v, |_| {})
+    }
+
+    fn reset_host_tiers(&self) {
+        self.reset_buffer();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, save_dataset, save_graph, FeatureStore, GenParams};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gsplit_oocr_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}.gsg"))
+    }
+
+    fn write_fixture(name: &str, n: usize, dim: usize) -> (PathBuf, FeatureStore) {
+        let g = rmat(&GenParams { num_vertices: n, num_edges: 4 * n, seed: 11 });
+        let feats = FeatureStore::lazy(n, dim, 0xFEA7);
+        let path = tmp(name);
+        save_dataset(&path, &g, None, &feats).unwrap();
+        (path, feats)
+    }
+
+    #[test]
+    fn rejects_v1_files() {
+        let g = rmat(&GenParams { num_vertices: 32, num_edges: 64, seed: 1 });
+        let path = tmp("v1_reject");
+        save_graph(&g, &path).unwrap();
+        let err = DiskFeatureStore::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("no feature section"));
+    }
+
+    #[test]
+    fn rows_bit_identical_to_source() {
+        let (path, feats) = write_fixture("bits", 300, 7);
+        let disk = DiskFeatureStore::open(&path).unwrap().with_buffer(64, 2);
+        assert_eq!(FeatureSource::dim(&disk), 7);
+        assert_eq!(FeatureSource::len(&disk), 300);
+        let mut want = vec![0f32; 7];
+        let mut got = vec![0f32; 7];
+        // Mixed order so the LRU churns.
+        for &v in &[0u32, 299, 150, 1, 64, 63, 299, 0, 200, 100] {
+            feats.copy_row(v, &mut want);
+            disk.fetch_row(v, &mut got);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.to_bits(), g.to_bits(), "row {v} differs");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_classification_tracks_residency() {
+        let (path, _) = write_fixture("tiers", 100, 4);
+        // 10-row chunks, 2 resident: vertices 0..9 are chunk 0, etc.
+        let disk = DiskFeatureStore::open(&path).unwrap().with_buffer(10, 2);
+        let mut row = vec![0f32; 4];
+        assert_eq!(disk.fetch_row(0, &mut row), HostTier::Disk); // fault chunk 0
+        assert_eq!(disk.fetch_row(5, &mut row), HostTier::Ram); // same chunk
+        assert_eq!(disk.fetch_row(15, &mut row), HostTier::Disk); // fault chunk 1
+        assert_eq!(disk.fetch_row(0, &mut row), HostTier::Ram); // chunk 0 still in
+        assert_eq!(disk.fetch_row(25, &mut row), HostTier::Disk); // evicts chunk 1 (LRU)
+        assert_eq!(disk.fetch_row(0, &mut row), HostTier::Ram);
+        assert_eq!(disk.fetch_row(15, &mut row), HostTier::Disk); // chunk 1 was evicted
+        assert_eq!(disk.chunk_loads(), 4);
+        // 4 faults × 10 rows × 4 cols × 4 bytes.
+        assert_eq!(disk.disk_bytes_read(), 4 * 10 * 4 * 4);
+    }
+
+    #[test]
+    fn probe_advances_the_same_state_as_fetch() {
+        let (path, _) = write_fixture("probe", 100, 4);
+        let a = DiskFeatureStore::open(&path).unwrap().with_buffer(10, 2);
+        let b = DiskFeatureStore::open(&path).unwrap().with_buffer(10, 2);
+        let mut row = vec![0f32; 4];
+        for &v in &[0u32, 5, 15, 0, 25, 0, 15, 99, 3] {
+            let ta = a.fetch_row(v, &mut row);
+            let tb = b.probe_row(v);
+            assert_eq!(ta, tb, "fetch and probe disagree at vertex {v}");
+        }
+        assert_eq!(a.chunk_loads(), b.chunk_loads());
+        assert_eq!(a.disk_bytes_read(), b.disk_bytes_read());
+    }
+
+    #[test]
+    fn reset_makes_the_buffer_cold_again() {
+        let (path, _) = write_fixture("reset", 50, 3);
+        let disk = DiskFeatureStore::open(&path).unwrap().with_buffer(10, 8);
+        let mut row = vec![0f32; 3];
+        assert_eq!(disk.fetch_row(7, &mut row), HostTier::Disk);
+        assert_eq!(disk.fetch_row(7, &mut row), HostTier::Ram);
+        disk.reset_host_tiers();
+        assert_eq!(disk.chunk_loads(), 0);
+        assert_eq!(disk.fetch_row(7, &mut row), HostTier::Disk);
+    }
+
+    #[test]
+    fn tail_chunk_is_short() {
+        // n = 25, chunk_rows = 10: chunk 2 holds rows 20..24 only.
+        let (path, feats) = write_fixture("tail", 25, 5);
+        let disk = DiskFeatureStore::open(&path).unwrap().with_buffer(10, 1);
+        let mut want = vec![0f32; 5];
+        let mut got = vec![0f32; 5];
+        assert_eq!(disk.fetch_row(24, &mut got), HostTier::Disk);
+        feats.copy_row(24, &mut want);
+        assert_eq!(want, got);
+        assert_eq!(disk.disk_bytes_read(), 5 * 5 * 4); // 5 rows, not 10
+    }
+
+    #[test]
+    fn gather_through_the_trait_matches_ram() {
+        let (path, feats) = write_fixture("gather", 64, 6);
+        let disk = DiskFeatureStore::open(&path).unwrap().with_buffer(8, 2);
+        let src: &dyn FeatureSource = &disk;
+        let verts = [3u32, 60, 12, 3, 45];
+        let mut from_disk = Vec::new();
+        let mut from_ram = Vec::new();
+        src.gather(&verts, &mut from_disk);
+        feats.gather(&verts, &mut from_ram);
+        assert_eq!(from_disk.len(), from_ram.len());
+        for (d, r) in from_disk.iter().zip(&from_ram) {
+            assert_eq!(d.to_bits(), r.to_bits());
+        }
+    }
+}

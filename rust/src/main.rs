@@ -17,7 +17,7 @@ use gsplit::config::{parse_dataset, parse_model};
 use gsplit::costmodel::PhaseBreakdown;
 use gsplit::devices::Topology;
 use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
-use gsplit::graph::Dataset;
+use gsplit::graph::{Dataset, FeatureSource};
 use gsplit::model::ModelConfig;
 use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
@@ -108,17 +108,35 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         ("parallel-workers", true, "worker threads for the pipelined executor (0 = serial, default 0)"),
         ("cache-policy", true, "feature cache: none|distributed|partitioned (default none)"),
         ("cache-budget", true, "cached feature rows per simulated GPU (default 4096)"),
+        ("graph", true, "train out-of-core from a v2 .gsg (features stay on disk; overrides shape flags)"),
     ];
     let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
-    let (backend, cfg, fanout) = resolve_backend(&a)?;
+    let (backend, mut cfg, fanout) = resolve_backend(&a)?;
     let seed = a.get_u64("seed", 42)?;
-    let ds = Dataset::sbm_learnable(
-        a.get_usize("vertices", 16384)?,
-        cfg.num_classes,
-        cfg.feat_dim,
-        0.6,
-        seed,
-    );
+    let ds = match a.get("graph") {
+        Some(path) => {
+            // Out-of-core path: topology + labels in RAM, features served
+            // from disk through the chunk buffer. Adopt the file's shapes
+            // so the model matches whatever was generated.
+            let ds = Dataset::open_ooc(std::path::Path::new(path), 0.25, seed ^ 0x5717)?;
+            cfg.feat_dim = ds.features.dim();
+            cfg.num_classes = ds.labels.num_classes;
+            println!(
+                "# out-of-core: {path} | {} vertices | {} edges | feat {} on disk",
+                ds.graph.num_vertices(),
+                ds.graph.num_edges(),
+                cfg.feat_dim
+            );
+            ds
+        }
+        None => Dataset::sbm_learnable(
+            a.get_usize("vertices", 16384)?,
+            cfg.num_classes,
+            cfg.feat_dim,
+            0.6,
+            seed,
+        ),
+    };
     let k = a.get_usize("gpus", 4)?;
     let batch = a.get_usize("batch", 256)?;
     let iters = a.get_usize("iters", 200)?;
@@ -198,10 +216,11 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     println!("# final val accuracy {:.4} (random = {:.4})", val.accuracy(), 1.0 / cfg.num_classes as f32);
     let split = LoadStats::sum(trainer.load_stats());
     println!(
-        "# loading: local {} | peer(nvlink) {} | host(pcie) {} | total {}",
+        "# loading: local {} | peer(nvlink) {} | host(pcie) {} | disk {} | total {}",
         gsplit::util::fmt_bytes(split.local_bytes),
         gsplit::util::fmt_bytes(split.peer_bytes),
         gsplit::util::fmt_bytes(split.host_bytes),
+        gsplit::util::fmt_bytes(split.disk_bytes),
         gsplit::util::fmt_bytes(split.total()),
     );
     Ok(())
@@ -318,8 +337,20 @@ fn cmd_partition(argv: impl Iterator<Item = String>) -> Result<()> {
 }
 
 fn cmd_gen(argv: impl Iterator<Item = String>) -> Result<()> {
-    let spec = opts![("dataset", true, "dataset to generate (default all paper stand-ins)")];
+    let spec = opts![
+        ("dataset", true, "dataset to generate (default all paper stand-ins)"),
+        ("out", true, "write a v2 .gsg (topology+labels+features) to this path instead of caching"),
+        ("vertices", true, "with --out and no --dataset: RMAT vertices (default 100000)"),
+        ("edges", true, "with --out and no --dataset: RMAT edges (default 10x vertices)"),
+        ("feat", true, "with --out and no --dataset: feature dim (default 64)"),
+        ("communities", true, "with --out and no --dataset: RMAT communities (default 64)"),
+        ("inter-frac", true, "with --out, no --dataset: cross-community edge fraction (default 0.1)"),
+        ("seed", true, "with --out and no --dataset: generator seed (default 42)"),
+    ];
     let a = Args::parse(argv, spec, "generate and cache stand-in graphs under target/graphs/")?;
+    if let Some(out) = a.get("out") {
+        return gen_gsg(&a, std::path::Path::new(out));
+    }
     let list = match a.get("dataset") {
         Some(d) => vec![parse_dataset(d)?],
         None => gsplit::graph::StandIn::all_paper().to_vec(),
@@ -335,6 +366,60 @@ fn cmd_gen(argv: impl Iterator<Item = String>) -> Result<()> {
             t
         );
     }
+    Ok(())
+}
+
+/// `gsplit gen --out <path>`: build an out-of-core training input. With
+/// `--dataset` the stand-in is materialized and re-written as v2; without
+/// it a community-RMAT graph of the requested size is generated and its
+/// lazy (procedural) features are **streamed** to disk in chunks — a
+/// 10⁷-vertex graph never holds its feature matrix in RAM, here or later
+/// during presample → partition → train.
+fn gen_gsg(a: &Args, out: &std::path::Path) -> Result<()> {
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let (t, res) = gsplit::util::timer::timed(|| -> Result<(gsplit::graph::CsrGraph, usize)> {
+        match a.get("dataset") {
+            Some(d) => {
+                let ds = parse_dataset(d)?.load()?;
+                ds.write_gsg(out)?;
+                Ok((ds.graph, ds.features.dim()))
+            }
+            None => {
+                let n = a.get_usize("vertices", 100_000)?;
+                let edges = a.get_usize("edges", 10 * n)?;
+                let feat = a.get_usize("feat", 64)?;
+                let seed = a.get_u64("seed", 42)?;
+                let graph = gsplit::graph::community_rmat(
+                    &gsplit::graph::GenParams { num_vertices: n, num_edges: edges, seed },
+                    a.get_usize("communities", 64)?,
+                    a.get_f64("inter-frac", 0.1)?,
+                );
+                // Same lazy-feature and degree-label derivation as the
+                // stand-ins: the file is bit-identical to what the in-RAM
+                // reference would serve.
+                let features = gsplit::graph::FeatureStore::lazy(n, feat, seed ^ 0xFEA7);
+                let labels: Vec<u32> =
+                    (0..n as gsplit::Vid).map(|v| graph.degree(v) % 16).collect();
+                gsplit::graph::save_dataset(out, &graph, Some(&labels), &features)?;
+                Ok((graph, feat))
+            }
+        }
+    });
+    let (graph, feat_dim) = res?;
+    let size = std::fs::metadata(out)?.len();
+    println!(
+        "{}: {} vertices, {} edges, feat {} | {} ({:.1}s)",
+        out.display(),
+        graph.num_vertices(),
+        graph.num_edges(),
+        feat_dim,
+        gsplit::util::fmt_bytes(size),
+        t
+    );
     Ok(())
 }
 

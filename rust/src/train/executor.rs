@@ -57,7 +57,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cache::ResidentCache;
-use crate::graph::Dataset;
+use crate::graph::{Dataset, FeatureSource};
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::Backend;
 use crate::split::SplitPlan;

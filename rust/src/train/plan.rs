@@ -18,13 +18,20 @@
 //!   [`LoadingPlan`] so the executor's pre-forward exchange phase can pull
 //!   it from device `o`'s resident cache (serial: direct copy in fixed
 //!   device order; pipelined: over the k×k channel fabric);
-//! * **Host** — copied here from host memory (the PCIe fallback).
+//! * **Host** — copied here from the [`FeatureSource`] (the PCIe
+//!   fallback). The source reports which host-side tier actually served
+//!   the row: host RAM (`host_bytes`) or, for an out-of-core
+//!   `DiskFeatureStore` whose chunk buffer missed, disk (`disk_bytes`) —
+//!   the fourth tier of DESIGN.md §Loading.
 //!
-//! All three sources hold bit-exact copies of the same rows, so the cache
-//! policy can never change the numerics — only the byte accounting.
+//! All sources hold bit-exact copies of the same rows, so neither the
+//! cache policy nor the feature source can change the numerics — only the
+//! byte accounting. The Host/Disk split is itself deterministic because
+//! `prepare_batch` runs single-threaded on the coordinator in batch order
+//! under both executors, so the chunk-buffer state evolves identically.
 
 use crate::cache::{FetchSource, LoadStats, ResidentCache};
-use crate::graph::Dataset;
+use crate::graph::{Dataset, FeatureSource, HostTier};
 use crate::partition::Partitioning;
 use crate::split::{SplitPlan, SplitSampler};
 use crate::{DeviceId, Vid};
@@ -51,7 +58,7 @@ impl PeerFetch {
 }
 
 /// Loading-stage output of the plan stage: the peer-exchange wiring plus
-/// per-device Local/NVLink/PCIe byte accounting.
+/// per-device Local/Peer/Host/Disk byte accounting.
 #[derive(Debug, Clone, Default)]
 pub struct LoadingPlan {
     /// `peer_fetch[server][client]` — rows `client` pulls from `server`'s
@@ -119,9 +126,11 @@ pub(super) fn prepare_batch(
         match cache {
             None => {
                 for (row, &v) in frontier.iter().enumerate() {
-                    ds.features.copy_row(v, &mut buf[row * dim..(row + 1) * dim]);
+                    match ds.features.fetch_row(v, &mut buf[row * dim..(row + 1) * dim]) {
+                        HostTier::Ram => loading.stats[d].host_bytes += row_bytes,
+                        HostTier::Disk => loading.stats[d].disk_bytes += row_bytes,
+                    }
                 }
-                loading.stats[d].host_bytes = frontier.len() as u64 * row_bytes;
             }
             Some(c) => {
                 for (row, &v) in frontier.iter().enumerate() {
@@ -138,8 +147,11 @@ pub(super) fn prepare_batch(
                             loading.stats[d].peer_bytes += row_bytes;
                         }
                         FetchSource::Host => {
-                            ds.features.copy_row(v, &mut buf[row * dim..(row + 1) * dim]);
-                            loading.stats[d].host_bytes += row_bytes;
+                            match ds.features.fetch_row(v, &mut buf[row * dim..(row + 1) * dim])
+                            {
+                                HostTier::Ram => loading.stats[d].host_bytes += row_bytes,
+                                HostTier::Disk => loading.stats[d].disk_bytes += row_bytes,
+                            }
                         }
                     }
                 }

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::graph::Dataset;
+use crate::graph::{Dataset, FeatureSource};
 use crate::train::plan::PreparedBatch;
 use crate::train::{IterStats, Trainer};
 

@@ -1,0 +1,269 @@
+//! Out-of-core bit-identity (DESIGN.md §Loading, disk tier): a dataset
+//! served from a v2 `.gsg` file through the chunk-buffered
+//! [`DiskFeatureStore`] must train **bit-identically** to the in-RAM
+//! reference it was written from — for every cache policy × budget ×
+//! worker count, under both executors. Mirrors `cache_equivalence.rs`,
+//! with two extra contracts on the byte accounting:
+//!
+//!  1. the serial and pipelined executors agree on the full four-tier
+//!     Local/Peer/Host/Disk split (feature fetches happen on the
+//!     coordinator in batch order, so the chunk-buffer evolution is
+//!     executor-independent), and
+//!  2. the four tiers sum to exactly what the uncached in-RAM oracle
+//!     loaded from host memory — out-of-core re-routes bytes, it never
+//!     changes how many input rows an iteration materializes.
+//!
+//! Every disk-backed trainer gets its OWN freshly opened dataset: the
+//! Host/Disk split is a pure function of the fetch order *from a cold
+//! buffer*, so sharing one store across runs would entangle their states.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
+use gsplit::devices::Topology;
+use gsplit::graph::{Dataset, DiskFeatureStore, FeatureSource, StandIn};
+use gsplit::model::{GnnKind, ModelConfig, ParamStore};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+use gsplit::{DeviceId, Vid};
+
+const FANOUT: usize = 5;
+const BATCH: usize = 512;
+const SEED: u64 = 42;
+
+static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// A unique `.gsg` path per call so parallel tests never share a file.
+fn unique_gsg() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gsplit_oocr_eq_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("tiny.gsg")
+}
+
+/// Materialize the in-RAM Tiny stand-in and write it out as a v2 `.gsg`.
+fn write_tiny_gsg() -> (PathBuf, Dataset) {
+    let ram = StandIn::Tiny.load().unwrap();
+    let path = unique_gsg();
+    ram.write_gsg(&path).unwrap();
+    (path, ram)
+}
+
+/// Open a fresh disk-backed view of the written Tiny dataset. The split
+/// seed derivation matches `DatasetSpec::materialize`, so the train/val
+/// sets are identical to the in-RAM reference; the spec is copied over so
+/// engine-side scaling (`scale_divisor`) can't diverge either.
+fn open_disk_tiny(path: &Path, ram: &Dataset, chunk_rows: usize, max_chunks: usize) -> Dataset {
+    let mut ds =
+        Dataset::open_ooc(path, ram.spec.train_frac, ram.spec.seed ^ 0x5717).unwrap();
+    ds.spec = ram.spec.clone();
+    ds.features =
+        Arc::new(DiskFeatureStore::open(path).unwrap().with_buffer(chunk_rows, max_chunks));
+    ds
+}
+
+fn tiny_cfg(num_layers: usize) -> ModelConfig {
+    ModelConfig { kind: GnnKind::GraphSage, feat_dim: 32, hidden: 32, num_classes: 16, num_layers }
+}
+
+fn modulo_part(ds: &Dataset, k: usize) -> Partitioning {
+    Partitioning {
+        assignment: (0..ds.graph.num_vertices() as Vid)
+            .map(|v| (v % k as Vid) as DeviceId)
+            .collect(),
+        k,
+    }
+}
+
+fn degree_ranking(ds: &Dataset) -> Vec<u64> {
+    (0..ds.graph.num_vertices() as Vid).map(|v| ds.graph.degree(v) as u64).collect()
+}
+
+fn assert_params_bit_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        for (t, (ta, tb)) in la.tensors.iter().zip(&lb.tensors).enumerate() {
+            for (i, (x, y)) in ta.iter().zip(tb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: param layer {l} tensor {t} elem {i}: {x} != {y}"
+                );
+            }
+        }
+    }
+}
+
+fn assert_stats_bit_identical(a: &[IterStats], b: &[IterStats], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: iteration counts differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.examples, y.examples, "{what}: iter {i} examples");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: iter {i} loss");
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "{what}: iter {i} correct");
+    }
+}
+
+/// One epoch three ways — uncached in-RAM serial (oracle), disk-backed
+/// serial, disk-backed pipelined — all bit-identical. Each disk trainer
+/// opens its own store and builds its own cache from it (cache rows are
+/// bit-exact copies of the same file bytes, so the caches agree too).
+/// Returns the disk run's four-tier split and the oracle's uncached total.
+fn check_case(
+    topo: &Topology,
+    policy: CachePolicy,
+    budget: u64,
+    workers: usize,
+    chunk_rows: usize,
+    max_chunks: usize,
+    what: &str,
+) -> (LoadStats, u64) {
+    let (path, ram) = write_tiny_gsg();
+    let k = topo.num_gpus();
+    let cfg = tiny_cfg(2);
+    let part = modulo_part(&ram, k);
+    let ranking = degree_ranking(&ram);
+    let backend = NativeBackend::new();
+
+    let mut oracle = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    let a = train_epoch(&mut oracle, &ram, BATCH, SEED).unwrap();
+
+    let ds_s = open_disk_tiny(&path, &ram, chunk_rows, max_chunks);
+    let cache_s =
+        Arc::new(ResidentCache::build(policy, &ranking, budget, &part, topo, &ds_s.features));
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    serial.set_cache(Some(cache_s)).unwrap();
+    let b = train_epoch(&mut serial, &ds_s, BATCH, SEED).unwrap();
+
+    let ds_p = open_disk_tiny(&path, &ram, chunk_rows, max_chunks);
+    let cache_p =
+        Arc::new(ResidentCache::build(policy, &ranking, budget, &part, topo, &ds_p.features));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
+    pipelined.set_cache(Some(cache_p)).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+    let c = train_epoch(&mut pipelined, &ds_p, BATCH, SEED).unwrap();
+
+    assert!(!a.is_empty());
+    assert_stats_bit_identical(&a, &b, &format!("{what}: disk serial vs RAM oracle"));
+    assert_stats_bit_identical(&a, &c, &format!("{what}: disk pipelined vs RAM oracle"));
+    assert_params_bit_identical(&oracle.params, &serial.params, what);
+    assert_params_bit_identical(&oracle.params, &pipelined.params, what);
+
+    // Four-tier accounting: both disk executors saw the identical split,
+    // and Local+Peer+Host+Disk sums to exactly what the oracle loaded.
+    let oracle_split = LoadStats::sum(oracle.load_stats());
+    assert_eq!(
+        oracle_split.local_bytes + oracle_split.peer_bytes + oracle_split.disk_bytes,
+        0,
+        "{what}: oracle is uncached and in-RAM"
+    );
+    let serial_split = LoadStats::sum(serial.load_stats());
+    let pipelined_split = LoadStats::sum(pipelined.load_stats());
+    assert_eq!(serial_split, pipelined_split, "{what}: executors disagree on the byte split");
+    assert_eq!(
+        serial_split.total(),
+        oracle_split.host_bytes,
+        "{what}: Local/Peer/Host/Disk split must sum to the uncached total"
+    );
+    (serial_split, oracle_split.host_bytes)
+}
+
+#[test]
+fn every_row_bit_identical_to_the_ram_source() {
+    // The foundation of everything else in this file: the disk store
+    // returns the exact bytes the lazy in-RAM source generated, for every
+    // row, through plenty of LRU churn (1024 resident rows of 8000).
+    let (path, ram) = write_tiny_gsg();
+    let disk = open_disk_tiny(&path, &ram, 256, 4);
+    let dim = ram.features.dim();
+    assert_eq!(disk.features.dim(), dim);
+    assert_eq!(disk.features.len(), ram.features.len());
+    let mut want = vec![0f32; dim];
+    let mut got = vec![0f32; dim];
+    for v in 0..ram.graph.num_vertices() as Vid {
+        ram.features.copy_row(v, &mut want);
+        disk.features.fetch_row(v, &mut got);
+        for (d, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "row {v} dim {d}: {w} != {g}");
+        }
+    }
+}
+
+#[test]
+fn disk_epochs_bit_identical_across_policies_budgets_workers() {
+    let topo = Topology::p3_8xlarge(1.0);
+    for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+        for budget in [64u64, 1024] {
+            for workers in [1usize, 2, 4] {
+                let what = format!("ooc/{}/budget{budget}/workers{workers}", policy.name());
+                let (split, total) = check_case(&topo, policy, budget, workers, 256, 4, &what);
+                // The buffer (1024 resident rows of 8000) can never hold
+                // the cache misses of an epoch: some fetches MUST fault.
+                assert!(split.disk_bytes > 0, "{what}: no disk faults counted");
+                match policy {
+                    CachePolicy::None => {
+                        assert_eq!(split.local_bytes + split.peer_bytes, 0, "{what}");
+                        assert_eq!(split.host_bytes + split.disk_bytes, total, "{what}");
+                    }
+                    CachePolicy::Distributed => {
+                        assert!(split.local_bytes > 0, "{what}: no local hits");
+                        assert!(split.peer_bytes > 0, "{what}: no peer fetches");
+                    }
+                    CachePolicy::Partitioned => {
+                        assert!(split.local_bytes > 0, "{what}: no local hits");
+                        assert_eq!(
+                            split.peer_bytes, 0,
+                            "{what}: owner-consistent cache never fetches from peers"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_buffer_stress_stays_bit_identical() {
+    // Pathological geometry — 8-row chunks, 2 resident — maximizes LRU
+    // churn and the Disk share of the split; numerics must not notice.
+    let topo = Topology::p3_8xlarge(1.0);
+    let (split, _) =
+        check_case(&topo, CachePolicy::Distributed, 256, 3, 8, 2, "ooc/stress/chunk8x2");
+    assert!(split.disk_bytes > 0, "stress must fault");
+}
+
+#[test]
+fn warm_buffer_splits_host_into_ram_and_disk() {
+    // 1024-row chunks × 8 resident covers all 8000 rows: after the
+    // post-cache-build cold start, the FIRST touch of each chunk faults
+    // (Disk) and every later touch hits host memory (Ram) — so both host
+    // tiers must be nonzero, and they still sum to the uncached total.
+    let topo = Topology::p3_8xlarge(1.0);
+    let (split, total) =
+        check_case(&topo, CachePolicy::None, 64, 1, 1024, 8, "ooc/warm/chunk1024x8");
+    assert!(split.host_bytes > 0, "warm buffer: re-touched rows must count as Ram");
+    assert!(split.disk_bytes > 0, "warm buffer: first touches must count as Disk");
+    assert_eq!(split.host_bytes + split.disk_bytes, total);
+}
+
+#[test]
+fn truncated_cube_mesh_exercises_all_four_tiers() {
+    // k = 6 cube-mesh truncation (see cache_equivalence.rs): Distributed
+    // caching exercises Local, Peer, AND the linkless-copy → Host
+    // fallback; with the disk source the Host leg further splits into
+    // Ram + Disk — all four tiers nonzero in one bit-identical run.
+    let topo = Topology::for_gpus(6, 1.0);
+    let (split, _) =
+        check_case(&topo, CachePolicy::Distributed, 256, 3, 128, 4, "ooc/cube6/distributed");
+    assert!(
+        split.local_bytes > 0
+            && split.peer_bytes > 0
+            && split.host_bytes > 0
+            && split.disk_bytes > 0,
+        "expected all four tiers nonzero, got {split:?}"
+    );
+}

@@ -82,7 +82,7 @@ fn split_parallel_is_equivalent_to_single_device_when_sampling_is_exhaustive() {
     let ds = Dataset {
         spec: StandIn::Tiny.spec(),
         graph,
-        features,
+        features: std::sync::Arc::new(features),
         labels: gsplit::graph::LabelStore::with_split(labels, 0.5, 3),
     };
 
