@@ -14,6 +14,9 @@
 //!     `.gsg` file: cache-miss host rows further split into Host (chunk
 //!     buffer) and Disk (fault), the four tiers sum to the same in-RAM
 //!     uncached total, and the distributed policy shows all four nonzero.
+//! (+) span-trace consistency: a real serial trainer epoch recorded by the
+//!     `obs` tracer must yield nonzero S / L / FB span-group totals that
+//!     stay inside the measured wall-clock (DESIGN.md §Observability).
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -103,7 +106,73 @@ fn main() {
 
     let uncached_total = loading_split_section(&mut suite);
     loading_split_section_ooc(&mut suite, uncached_total);
+    trace_consistency_section(&mut suite);
     suite.finish();
+}
+
+/// Trace one real serial trainer epoch and check the span-derived S/L/FB
+/// phase totals against the measured wall-clock: every group is exercised
+/// (nonzero), and — serial spans being disjoint on one thread — their sum
+/// never exceeds the wall time.
+fn trace_consistency_section(suite: &mut BenchSuite) {
+    use gsplit::obs::{flush_thread, set_enabled, tracer, PhaseGroup};
+    println!("\nSpan-trace consistency — serial trainer epoch, S/L/FB from recorded spans\n");
+    let k = 4usize;
+    let n_vertices = if quick() { 2048 } else { 4096 };
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: 32,
+        hidden: 32,
+        num_classes: 8,
+        num_layers: 2,
+    };
+    let ds = Dataset::sbm_learnable(n_vertices, cfg.num_classes, cfg.feat_dim, 0.6, SEED);
+    let part = Partitioning {
+        assignment: (0..n_vertices as Vid).map(|v| (v % k as Vid) as u16).collect(),
+        k,
+    };
+    let backend = NativeBackend::new();
+    let mut trainer = Trainer::new(&backend, &cfg, 5, part, 0.2, SEED).expect("trainer");
+    trainer.set_trace(true);
+    tracer().reset();
+    let (wall, _) = gsplit::util::timer::timed(|| {
+        train_epoch(&mut trainer, &ds, 256, 0).expect("traced epoch")
+    });
+    flush_thread();
+    set_enabled(false);
+
+    let (mut sampling, mut loading, mut fb) = (0f64, 0f64, 0f64);
+    let mut n_spans = 0usize;
+    for track in tracer().snapshot() {
+        for span in &track.spans {
+            n_spans += 1;
+            match span.phase.group() {
+                PhaseGroup::Sampling => sampling += span.secs(),
+                PhaseGroup::Loading => loading += span.secs(),
+                PhaseGroup::Fb => fb += span.secs(),
+                PhaseGroup::Offline => {}
+            }
+        }
+    }
+    let total = sampling + loading + fb;
+    println!(
+        "wall {wall:.3}s | spans {n_spans} | S {sampling:.3}s | L {loading:.3}s | FB {fb:.3}s \
+         | covered {:.0}%",
+        100.0 * total / wall.max(1e-9)
+    );
+    assert!(n_spans > 0, "traced epoch recorded no spans");
+    assert!(sampling > 0.0, "no sampling-phase span time recorded");
+    assert!(loading > 0.0, "no loading-phase span time recorded");
+    assert!(fb > 0.0, "no FB-phase span time recorded");
+    assert!(
+        total <= wall * 1.10,
+        "serial spans are disjoint, so S+L+FB ({total:.3}s) cannot exceed the wall ({wall:.3}s)"
+    );
+    suite.metric("trace/span_total_s", total);
+    suite.metric("trace/sampling_frac", sampling / wall.max(1e-9));
+    suite.metric("trace/loading_frac", loading / wall.max(1e-9));
+    suite.metric("trace/fb_frac", fb / wall.max(1e-9));
+    tracer().reset();
 }
 
 /// Run the real-compute trainer's cache-aware loading stage under every

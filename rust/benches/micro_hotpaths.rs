@@ -3,8 +3,10 @@
 //! throughput, partitioner wall time, feature gather bandwidth, per-kernel
 //! GFLOP/s for the blocked/simd compute kernels (DESIGN.md §Perf "Rust
 //! kernel blocking"), the end-to-end epoch wall-clock under each
-//! `GSPLIT_KERNELS` variant, and the serial-vs-pipelined real-compute
-//! epoch wall-clock (DESIGN.md §Executor).
+//! `GSPLIT_KERNELS` variant, the serial-vs-pipelined real-compute
+//! epoch wall-clock (DESIGN.md §Executor), and the span tracer's
+//! disabled-guard cost plus traced-epoch overhead and bit-identity
+//! (DESIGN.md §Observability).
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -313,5 +315,54 @@ fn main() {
         }
         suite.metric(&format!("kernels/epoch_s/{}", kv.name()), t);
     }
+
+    // --- observability: disabled-guard cost + traced-epoch overhead ---
+    // The disabled span guard must be unmeasurable (one relaxed atomic
+    // load), and a fully traced epoch must stay bit-identical to the
+    // untraced serial reference and in the same wall-clock ballpark
+    // (DESIGN.md §Observability).
+    section("span tracing: disabled-guard cost + traced epoch (serial, k=4)");
+    assert!(!gsplit::obs::enabled(), "tracing must be off before the disabled-guard bench");
+    let s = bench.run("obs/disabled_span_1k", Some(1000.0), || {
+        let mut acc = 0u64;
+        for i in 0..1000u64 {
+            let _s = gsplit::span!(gsplit::obs::Phase::Sample);
+            acc = acc.wrapping_add(i);
+        }
+        acc
+    });
+    assert!(
+        s.mean_s / 1000.0 < 1e-6,
+        "disabled span guard must cost well under 1us, measured {:.1} ns",
+        s.mean_s / 1000.0 * 1e9
+    );
+    suite.record(&s);
+
+    let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
+    tr.set_trace(true);
+    gsplit::obs::tracer().reset();
+    let (t_traced, traced_stats) =
+        timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("traced epoch"));
+    tr.set_trace(false);
+    gsplit::obs::flush_thread();
+    let spans: usize = gsplit::obs::tracer().snapshot().iter().map(|t| t.spans.len()).sum();
+    assert!(spans > 0, "traced epoch must record spans");
+    assert!(
+        serial_stats.iter().zip(&traced_stats).all(|(a, b)| a.loss.to_bits() == b.loss.to_bits()),
+        "tracing changed the training output — it must not touch a single bit"
+    );
+    // Generous bound: span recording is a clock read + Vec push, so even a
+    // noisy shared runner stays far below 3x.
+    assert!(
+        t_traced < t_serial * 3.0 + 0.05,
+        "traced epoch unreasonably slow: {t_traced:.3}s vs {t_serial:.3}s untraced"
+    );
+    println!(
+        "epoch untraced {t_serial:>8.3} s | traced {t_traced:>8.3} s ({spans} spans, \
+         bit-identical)"
+    );
+    suite.metric("obs/epoch_traced_s", t_traced);
+    suite.metric("obs/traced_over_untraced", t_traced / t_serial.max(1e-9));
+    gsplit::obs::tracer().reset();
     suite.finish();
 }

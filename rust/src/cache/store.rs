@@ -18,7 +18,9 @@ use anyhow::{bail, Result};
 
 use crate::devices::Topology;
 use crate::graph::FeatureSource;
+use crate::obs::{metrics, Phase};
 use crate::partition::Partitioning;
+use crate::span;
 use crate::{DeviceId, Vid};
 
 use super::{FeatureCache, FetchSource};
@@ -119,6 +121,30 @@ impl LoadStats {
         }
         acc
     }
+
+    /// Publish this accounting into the metrics registry (`crate::obs`):
+    /// one `load_bytes` counter per tier, plus the cache hit/miss byte
+    /// split (hit = served resident, Local or Peer; miss = fell through to
+    /// Host or Disk). `scope` distinguishes producers (e.g. `train` for
+    /// the real-compute trainer, an engine name for the counting engines).
+    pub fn record_metrics(&self, scope: &str) {
+        let reg = metrics::registry();
+        let tiers = [
+            ("local", self.local_bytes),
+            ("peer", self.peer_bytes),
+            ("host", self.host_bytes),
+            ("disk", self.disk_bytes),
+        ];
+        for (tier, bytes) in tiers {
+            if bytes > 0 {
+                reg.counter("load_bytes", &[("scope", scope), ("tier", tier)]).add(bytes);
+            }
+        }
+        reg.counter("cache_hit_bytes", &[("scope", scope)])
+            .add(self.local_bytes + self.peer_bytes);
+        reg.counter("cache_miss_bytes", &[("scope", scope)])
+            .add(self.host_bytes + self.disk_bytes);
+    }
 }
 
 /// Resident feature rows per simulated device: the actual f32 data of
@@ -141,6 +167,7 @@ impl CacheStore {
     /// accounting starts cold and does not depend on which rows the cache
     /// build happened to pull through an out-of-core chunk buffer.
     pub fn build(placement: &FeatureCache, features: &dyn FeatureSource) -> CacheStore {
+        let _s = span!(Phase::CacheBuild);
         let k = placement.k();
         let dim = features.dim();
         let mut vids: Vec<Vec<Vid>> = vec![Vec::new(); k];
@@ -156,7 +183,17 @@ impl CacheStore {
             }
         }
         features.reset_host_tiers();
-        CacheStore { dim, vids, data }
+        let store = CacheStore { dim, vids, data };
+        // Resident footprint per device, snapshot-able alongside the byte
+        // tiers the loading stage publishes.
+        let reg = metrics::registry();
+        for d in 0..k {
+            let dev = d.to_string();
+            let labels = [("device", dev.as_str())];
+            reg.gauge("cache_resident_rows", &labels).set(store.rows_on(d as DeviceId) as f64);
+            reg.gauge("cache_resident_bytes", &labels).set(store.bytes_on(d as DeviceId) as f64);
+        }
+        store
     }
 
     /// The resident row of `v` on device `d`, if cached there.

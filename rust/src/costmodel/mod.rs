@@ -148,6 +148,29 @@ impl IterCounters {
     pub fn total_input_bytes(&self) -> u64 {
         self.local_load_bytes.iter().sum::<u64>() + self.total_load_bytes()
     }
+
+    /// Publish these counters into the global metrics registry, labeled by
+    /// engine name, so counting runs are snapshot-able next to traces
+    /// (DESIGN.md §Observability). Called once per epoch by
+    /// `exec::run_epoch` — overhead is a handful of map lookups.
+    pub fn record_metrics(&self, engine: &str) {
+        let reg = crate::obs::metrics::registry();
+        let eng = [("engine", engine)];
+        reg.counter("sampled_edges", &eng).add(self.sampled_edges.iter().sum());
+        reg.counter("sample_comm_bytes", &eng).add(self.sample_comm.total_remote());
+        reg.counter("train_comm_bytes", &eng).add(self.train_comm.total_remote());
+        reg.counter("fwd_flops", &eng).add(self.fwd_flops.iter().sum());
+        reg.counter("agg_bytes", &eng).add(self.agg_bytes.iter().sum());
+        let tiers: [(&str, u64); 4] = [
+            ("local", self.local_load_bytes.iter().sum()),
+            ("peer", self.peer_load.total_remote()),
+            ("host", self.host_load_bytes.iter().sum()),
+            ("disk", self.disk_load_bytes.iter().sum()),
+        ];
+        for (tier, bytes) in tiers {
+            reg.counter("load_bytes", &[("engine", engine), ("tier", tier)]).add(bytes);
+        }
+    }
 }
 
 /// Backward ≈ 2× forward compute (standard for dense layers), so FB = 3×
@@ -323,6 +346,23 @@ mod tests {
         both.disk_load_bytes[0] = 100 << 20;
         let t_both = iter_time(&both, &t);
         assert!((t_both.loading - (t_ram.loading + t_disk.loading)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_metrics_publishes_all_four_tiers() {
+        let mut c = IterCounters::new(2);
+        c.sampled_edges = vec![3, 4];
+        c.local_load_bytes = vec![100, 0];
+        c.host_load_bytes = vec![10, 20];
+        c.disk_load_bytes = vec![0, 7];
+        c.peer_load.add(0, 1, 5);
+        c.record_metrics("obs_test_engine");
+        let snap = crate::obs::metrics::registry().snapshot();
+        assert_eq!(snap.counter("sampled_edges{engine=obs_test_engine}"), 7);
+        assert_eq!(snap.counter("load_bytes{engine=obs_test_engine,tier=local}"), 100);
+        assert_eq!(snap.counter("load_bytes{engine=obs_test_engine,tier=peer}"), 5);
+        assert_eq!(snap.counter("load_bytes{engine=obs_test_engine,tier=host}"), 30);
+        assert_eq!(snap.counter("load_bytes{engine=obs_test_engine,tier=disk}"), 7);
     }
 
     #[test]

@@ -172,6 +172,7 @@ pub fn run_epoch(
         time.add(iter_time(&c, &ctx.topo));
         total.merge(&c);
     }
+    total.record_metrics(engine.name());
     (total, time)
 }
 

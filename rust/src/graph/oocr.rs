@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::graph::features::{FeatureSource, HostTier};
 use crate::graph::io::{read_f32_slice, GsgLayout};
+use crate::obs::Phase;
 use crate::Vid;
 
 /// Default rows per chunk: 1024 rows × 32-dim f32 = 128 KiB per chunk.
@@ -145,7 +146,10 @@ impl DiskFeatureStore {
             }
             None => {
                 // Miss: evict the coldest chunk (reusing its allocation)
-                // and read the chunk from disk.
+                // and read the chunk from disk. Faults are rare relative to
+                // row fetches, so the tracing + metrics lookups live here,
+                // off the hit path.
+                let _s = crate::span!(Phase::DiskFetch);
                 let mut buf = if s.chunks.len() >= self.max_chunks {
                     s.chunks.remove(0).1
                 } else {
@@ -162,6 +166,9 @@ impl DiskFeatureStore {
                     .unwrap_or_else(|e| panic!("read chunk {chunk_id} of {:?}: {e:#}", self.path));
                 s.chunk_loads += 1;
                 s.disk_bytes += (buf.len() * 4) as u64;
+                let reg = crate::obs::metrics::registry();
+                reg.counter("disk_chunk_loads", &[]).inc();
+                reg.counter("disk_bytes_read", &[]).add((buf.len() * 4) as u64);
                 s.chunks.push((chunk_id, buf));
                 HostTier::Disk
             }

@@ -32,6 +32,7 @@ pub mod devices;
 pub mod exec;
 pub mod graph;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod presample;
 pub mod rng;

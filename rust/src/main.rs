@@ -109,8 +109,18 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         ("cache-policy", true, "feature cache: none|distributed|partitioned (default none)"),
         ("cache-budget", true, "cached feature rows per simulated GPU (default 4096)"),
         ("graph", true, "train out-of-core from a v2 .gsg (features stay on disk; overrides shape flags)"),
+        ("trace", true, "write a Chrome trace-event JSON of the run to this path (see README \"Tracing a run\")"),
     ];
     let a = Args::parse(argv, spec, "end-to-end split-parallel training on a learnable SBM graph")?;
+    // `--trace <path>` wins over the `GSPLIT_TRACE` env var; either enables
+    // the span recorder for the whole run.
+    let trace_path: Option<String> = a
+        .get("trace")
+        .map(String::from)
+        .or_else(|| gsplit::obs::tracer().env_path().map(String::from));
+    if trace_path.is_some() {
+        gsplit::obs::set_enabled(true);
+    }
     let (backend, mut cfg, fanout) = resolve_backend(&a)?;
     let seed = a.get_u64("seed", 42)?;
     let ds = match a.get("graph") {
@@ -223,6 +233,13 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         gsplit::util::fmt_bytes(split.disk_bytes),
         gsplit::util::fmt_bytes(split.total()),
     );
+    if let Some(path) = trace_path {
+        let summary = gsplit::obs::chrome::export(std::path::Path::new(&path))?;
+        println!(
+            "# trace: {path} | {} events | {} worker track(s) | {} device track(s) | {} dropped",
+            summary.events, summary.threads, summary.devices, summary.dropped
+        );
+    }
     Ok(())
 }
 

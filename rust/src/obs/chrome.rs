@@ -1,0 +1,196 @@
+//! Chrome trace-event export of the recorded spans (DESIGN.md
+//! §Observability).
+//!
+//! The output loads directly in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`: a JSON object whose `traceEvents` array holds one
+//! complete (`"ph": "X"`) event per recorded [`Span`], grouped into
+//!
+//! * **pid 1 — "trainer threads"**: one track per recording thread
+//!   (coordinator, `worker-0..n`) carrying the spans with no device
+//!   attribution (sampling, exchanges, reductions), and
+//! * **pid 2 — "devices"**: one track per simulated device carrying the
+//!   per-device spans (compute, loss) regardless of which worker thread
+//!   ran them — each device is owned by exactly one thread per run, so
+//!   the track stays properly nested.
+//!
+//! The `cat` field is the stable [`Phase`] name; `ts`/`dur` are
+//! microseconds since the tracer epoch. Events are globally sorted by
+//! `ts` (ties: longer event first), which `tools/check_trace_json.rs`
+//! verifies along with per-track nesting. The metrics registry snapshot
+//! rides along under the top-level `"metrics"` key, and per-track drop
+//! counts under `"otherData"` — both ignored by trace viewers.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::JsonValue;
+
+use super::metrics::registry;
+use super::{flush_thread, tracer, Span};
+
+/// Trace-event pid of the per-thread tracks.
+pub const PID_THREADS: u64 = 1;
+/// Trace-event pid of the per-device tracks.
+pub const PID_DEVICES: u64 = 2;
+
+/// What an export wrote, for logging.
+#[derive(Debug, Clone, Copy)]
+pub struct ExportSummary {
+    /// Thread tracks with at least one span.
+    pub threads: usize,
+    /// Distinct devices with at least one span.
+    pub devices: usize,
+    /// Complete (`"ph": "X"`) events written.
+    pub events: usize,
+    /// Spans lost to the per-thread ring cap.
+    pub dropped: u64,
+}
+
+fn metadata(name: &str, pid: u64, tid: u64, value: &str) -> JsonValue {
+    JsonValue::obj(vec![
+        ("name", JsonValue::str(name)),
+        ("ph", JsonValue::str("M")),
+        ("pid", JsonValue::num(pid as f64)),
+        ("tid", JsonValue::num(tid as f64)),
+        ("args", JsonValue::obj(vec![("name", JsonValue::str(value))])),
+    ])
+}
+
+fn complete_event(span: &Span, pid: u64, tid: u64) -> JsonValue {
+    let mut args: Vec<(&str, JsonValue)> = Vec::new();
+    if span.device >= 0 {
+        args.push(("device", JsonValue::num(span.device as f64)));
+    }
+    if span.batch >= 0 {
+        args.push(("batch", JsonValue::num(span.batch as f64)));
+    }
+    if span.layer >= 0 {
+        args.push(("layer", JsonValue::num(span.layer as f64)));
+    }
+    JsonValue::obj(vec![
+        ("name", JsonValue::str(span.name)),
+        ("cat", JsonValue::str(span.phase.name())),
+        ("ph", JsonValue::str("X")),
+        ("ts", JsonValue::num(span.t0_ns as f64 / 1000.0)),
+        ("dur", JsonValue::num(span.t1_ns.saturating_sub(span.t0_ns) as f64 / 1000.0)),
+        ("pid", JsonValue::num(pid as f64)),
+        ("tid", JsonValue::num(tid as f64)),
+        ("args", JsonValue::obj(args)),
+    ])
+}
+
+/// Build the trace JSON from everything recorded so far (plus the current
+/// metrics snapshot). Flushes the calling thread first.
+pub fn trace_json() -> (JsonValue, ExportSummary) {
+    flush_thread();
+    let snap = tracer().snapshot();
+
+    let mut events: Vec<JsonValue> = Vec::new();
+    let mut devices: BTreeSet<u64> = BTreeSet::new();
+    // (t0, t1, pid, tid, span) — sorted so `ts` is globally monotone and,
+    // at equal starts, enclosing spans precede their children.
+    let mut timed: Vec<(u64, u64, u64, u64, Span)> = Vec::new();
+    let mut threads = 0usize;
+    let mut dropped = 0u64;
+
+    for (i, track) in snap.iter().enumerate() {
+        dropped += track.dropped;
+        if track.spans.is_empty() {
+            continue;
+        }
+        let tid = i as u64;
+        threads += 1;
+        events.push(metadata("thread_name", PID_THREADS, tid, &track.label));
+        for span in &track.spans {
+            if span.device >= 0 {
+                let dev = span.device as u64;
+                devices.insert(dev);
+                timed.push((span.t0_ns, span.t1_ns, PID_DEVICES, dev, *span));
+            } else {
+                timed.push((span.t0_ns, span.t1_ns, PID_THREADS, tid, *span));
+            }
+        }
+    }
+    events.push(metadata("process_name", PID_THREADS, 0, "trainer threads"));
+    events.push(metadata("process_name", PID_DEVICES, 0, "devices"));
+    for &dev in &devices {
+        let label = format!("device-{dev}");
+        events.push(metadata("thread_name", PID_DEVICES, dev, &label));
+    }
+
+    timed.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let n_events = timed.len();
+    for (_, _, pid, tid, span) in &timed {
+        events.push(complete_event(span, *pid, *tid));
+    }
+
+    let summary = ExportSummary { threads, devices: devices.len(), events: n_events, dropped };
+    let json = JsonValue::obj(vec![
+        ("traceEvents", JsonValue::Arr(events)),
+        ("displayTimeUnit", JsonValue::str("ms")),
+        ("metrics", registry().snapshot().to_json()),
+        ("otherData", JsonValue::obj(vec![("dropped_spans", JsonValue::num(dropped as f64))])),
+    ]);
+    (json, summary)
+}
+
+/// Export everything recorded so far as Chrome trace-event JSON at `path`.
+pub fn export(path: &Path) -> Result<ExportSummary> {
+    let (json, summary) = trace_json();
+    std::fs::write(path, json.to_string()).with_context(|| format!("write trace {path:?}"))?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{set_enabled, set_thread_label, Phase};
+    use super::*;
+
+    #[test]
+    fn exported_trace_is_valid_and_sorted() {
+        let _gate = super::super::test_gate();
+        let was = super::super::enabled();
+        set_enabled(true);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_label("chrome-test");
+                let _outer = crate::span!(Phase::SampleAhead, batch = 0);
+                let _dev = crate::span!(Phase::ComputeFwd, device = 1, batch = 0, layer = 2);
+            });
+        });
+        set_enabled(was);
+        let (json, summary) = trace_json();
+        assert!(summary.threads >= 1);
+        assert!(summary.devices >= 1);
+        assert!(summary.events >= 2);
+
+        let reparsed = JsonValue::parse(&json.to_string()).unwrap();
+        let events = reparsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut saw_device_track = false;
+        for ev in events {
+            match ev.get("ph").unwrap().as_str().unwrap() {
+                "M" => {
+                    if ev.get("pid").unwrap().as_u64() == Some(PID_DEVICES)
+                        && ev.get("name").unwrap().as_str() == Some("thread_name")
+                    {
+                        saw_device_track = true;
+                    }
+                }
+                "X" => {
+                    let ts = ev.get("ts").unwrap().as_f64().unwrap();
+                    assert!(ts >= last_ts, "X events must be ts-sorted");
+                    last_ts = ts;
+                    assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                    let cat = ev.get("cat").unwrap().as_str().unwrap();
+                    assert!(Phase::parse(cat).is_some(), "unknown phase {cat}");
+                }
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        assert!(saw_device_track, "device span must create a device track");
+        assert!(reparsed.get("metrics").unwrap().get("counters").unwrap().as_obj().is_some());
+    }
+}

@@ -1,0 +1,220 @@
+//! Typed metrics registry: named [`Counter`]s and [`Gauge`]s with static
+//! label sets, interned in a process-global [`Registry`] (DESIGN.md
+//! §Observability).
+//!
+//! The loading stage, the resident cache, the out-of-core reader, and the
+//! counting engines publish here, so the byte tiers and hit/miss rates the
+//! repo previously exposed only as struct fields (`LoadStats`,
+//! `IterCounters`) are also available as one snapshot-able blob — exported
+//! next to the Chrome trace by [`chrome`](super::chrome).
+//!
+//! Handles are `Arc`s: look one up once (`registry().counter(...)`), keep
+//! it, and update it with a single relaxed atomic add on the hot path.
+//! Keys are `name{label=value,...}` with labels sorted by key, so the
+//! snapshot ordering is deterministic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::JsonValue;
+
+/// Monotonically increasing u64 metric.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 metric (stored as bits in an atomic).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Build the canonical `name{k=v,...}` key (labels sorted by key).
+fn key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort_by_key(|(k, _)| *k);
+    let mut out = String::with_capacity(name.len() + 16 * sorted.len());
+    out.push_str(name);
+    out.push('{');
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push('=');
+        out.push_str(v);
+    }
+    out.push('}');
+    out
+}
+
+/// Process-global metric interner. Obtain it via [`registry`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The global [`Registry`].
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::default)
+}
+
+impl Registry {
+    /// Intern (or fetch) the counter `name{labels}`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("metrics registry poisoned");
+        Arc::clone(map.entry(key(name, labels)).or_default())
+    }
+
+    /// Intern (or fetch) the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("metrics registry poisoned");
+        Arc::clone(map.entry(key(name, labels)).or_default())
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect();
+        MetricsSnapshot { counters, gauges }
+    }
+
+    /// Zero every registered metric (handles stay valid) — test/bench
+    /// isolation.
+    pub fn reset(&self) {
+        for c in self.counters.lock().expect("metrics registry poisoned").values() {
+            c.0.store(0, Ordering::Relaxed);
+        }
+        for g in self.gauges.lock().expect("metrics registry poisoned").values() {
+            g.set(0.0);
+        }
+    }
+}
+
+/// Point-in-time values of every registered metric, keyed
+/// `name{label=value,...}`.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value by full key, 0 when absent.
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Gauge value by full key, 0.0 when absent.
+    pub fn gauge(&self, key: &str) -> f64 {
+        self.gauges.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// The exported metrics blob (`{"counters": {...}, "gauges": {...}}`).
+    pub fn to_json(&self) -> JsonValue {
+        let counters = JsonValue::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), JsonValue::num(*v as f64))).collect(),
+        );
+        let gauges = JsonValue::Obj(
+            self.gauges.iter().map(|(k, v)| (k.clone(), JsonValue::num(*v))).collect(),
+        );
+        JsonValue::obj(vec![("counters", counters), ("gauges", gauges)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_is_label_order_invariant_and_sorted() {
+        assert_eq!(key("m", &[]), "m");
+        let fwd = key("m", &[("tier", "local"), ("scope", "train")]);
+        let rev = key("m", &[("scope", "train"), ("tier", "local")]);
+        assert_eq!(fwd, rev);
+        assert_eq!(key("m", &[("b", "2"), ("a", "1")]), "m{a=1,b=2}");
+    }
+
+    #[test]
+    fn counters_intern_and_accumulate() {
+        let reg = registry();
+        let a = reg.counter("obs_test_counter", &[("case", "intern")]);
+        let b = reg.counter("obs_test_counter", &[("case", "intern")]);
+        let before = a.get();
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), before + 4, "same key must intern to one counter");
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("obs_test_counter{case=intern}"), a.get());
+    }
+
+    #[test]
+    fn gauges_hold_floats() {
+        let reg = registry();
+        let g = reg.gauge("obs_test_gauge", &[]);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        assert_eq!(reg.snapshot().gauge("obs_test_gauge"), 2.5);
+        assert_eq!(reg.snapshot().gauge("missing"), 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let reg = registry();
+        reg.counter("obs_test_json", &[("k", "v")]).add(7);
+        let j = reg.snapshot().to_json();
+        let c = j.get("counters").unwrap();
+        assert!(c.as_obj().unwrap().contains_key("obs_test_json{k=v}"));
+        assert!(j.get("gauges").unwrap().as_obj().is_some());
+        // Round-trips through the writer/parser.
+        let reparsed = JsonValue::parse(&j.to_string()).unwrap();
+        let n = c.as_obj().unwrap().len();
+        assert_eq!(reparsed.get("counters").unwrap().as_obj().unwrap().len(), n);
+    }
+}

@@ -1,0 +1,597 @@
+//! Observability: span tracing + the metrics registry (DESIGN.md
+//! §Observability).
+//!
+//! The split-parallel pipeline can *account bytes* (IterCounters,
+//! LoadStats) but byte counts cannot show **when** each device was
+//! sampling, exchanging, or computing — pipeline bubbles, exchange stalls,
+//! and disk-fetch tails are invisible. This module adds the time axis:
+//!
+//! * a process-global [`Tracer`] recording [`Span`]s into per-thread
+//!   buffers. Tracing is a no-op unless enabled (`GSPLIT_TRACE=<path>`,
+//!   [`set_enabled`], or `Trainer::set_trace`); the disabled hot path is
+//!   one relaxed atomic load;
+//! * a typed [`metrics`] registry (`Counter` / `Gauge` with static label
+//!   sets) that the loading tiers, the cache, and the engines publish
+//!   into, so byte accounting is snapshot-able without hand-copying
+//!   struct fields;
+//! * Chrome trace-event export ([`chrome`]) — one track per worker thread
+//!   plus one per simulated device — validated by
+//!   `tools/check_trace_json.rs`.
+//!
+//! # Determinism
+//!
+//! Recording a span only reads the monotonic clock and appends to a
+//! thread-local buffer; it never touches an RNG, a float, or any shared
+//! training state. Tracing on/off therefore cannot change a single output
+//! bit — `executor_equivalence.rs` and `oocr_equivalence.rs` prove it.
+//!
+//! # Hot-path cost and memory bounds
+//!
+//! Each thread appends finished spans to its own `Vec` behind a
+//! `RefCell` — no lock, no atomic RMW — and flushes it into a shared,
+//! registry-owned buffer when the thread exits (worker threads are
+//! scoped, so their spans always outlive them) or when the owning thread
+//! calls [`flush_thread`]. Buffers are bounded at [`span_cap`] spans per
+//! thread (`GSPLIT_TRACE_CAP` overrides); past the cap new spans are
+//! dropped and counted, so a runaway trace costs memory proportional to
+//! thread count, never to run length.
+
+pub mod chrome;
+pub mod metrics;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread span capacity (~3 MiB of spans per thread).
+pub const DEFAULT_SPAN_CAP: usize = 1 << 16;
+
+/// Pipeline phase of a span — the **stable contract** between the
+/// instrumentation, the Chrome exporter, `check_trace_json`, and the
+/// fig3-style S/L/FB grouping. Renaming a phase is a breaking change to
+/// every consumer of `GSPLIT_TRACE` output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Cooperative sampling (plan stage, the paper's S phase).
+    Sample,
+    /// Input-feature gather + tier classification (plan stage, L phase).
+    Load,
+    /// The pipelined coordinator preparing batch *t+1* while the workers
+    /// train batch *t* (wraps a `Sample` + `Load` pair).
+    SampleAhead,
+    /// Pre-forward peer exchange of cache-resident rows.
+    LoadExchange,
+    /// Per-layer forward all-to-all, serial executor (single materialize
+    /// loop — no send/recv split exists there).
+    ShuffleFwd,
+    /// Forward all-to-all, send half: packing owned rows into chunks.
+    ShuffleFwdSend,
+    /// Forward all-to-all, recv half: pumping the channel fabric.
+    ShuffleFwdRecv,
+    /// Per-layer reverse all-to-all, serial executor.
+    ShuffleBwd,
+    /// Reverse all-to-all, send half: per-device VJP gradient packing.
+    ShuffleBwdSend,
+    /// Reverse all-to-all, recv half: pump + fixed-order scatter-add.
+    ShuffleBwdRecv,
+    /// Per-device layer forward kernel.
+    ComputeFwd,
+    /// Per-device layer backward kernel (VJP).
+    ComputeBwd,
+    /// Per-device softmax-CE loss head.
+    Loss,
+    /// Coordinator's fixed-order gradient all-reduce + SGD step.
+    GradReduce,
+    /// `DiskFeatureStore` chunk fault (the disk tail of the L phase).
+    DiskFetch,
+    /// Offline `CacheStore::build` bulk read.
+    CacheBuild,
+}
+
+/// Paper-style grouping of [`Phase`]s into the Figure-3 S/L/FB breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseGroup {
+    /// Sampling (S).
+    Sampling,
+    /// Loading (L).
+    Loading,
+    /// Forward/backward compute + exchange (FB).
+    Fb,
+    /// Offline/one-time work outside the steady-state iteration.
+    Offline,
+}
+
+impl Phase {
+    /// Every phase, for exhaustive iteration in validators and benches.
+    pub const ALL: [Phase; 16] = [
+        Phase::Sample,
+        Phase::Load,
+        Phase::SampleAhead,
+        Phase::LoadExchange,
+        Phase::ShuffleFwd,
+        Phase::ShuffleFwdSend,
+        Phase::ShuffleFwdRecv,
+        Phase::ShuffleBwd,
+        Phase::ShuffleBwdSend,
+        Phase::ShuffleBwdRecv,
+        Phase::ComputeFwd,
+        Phase::ComputeBwd,
+        Phase::Loss,
+        Phase::GradReduce,
+        Phase::DiskFetch,
+        Phase::CacheBuild,
+    ];
+
+    /// Stable wire name (the Chrome event `cat` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sample => "sample",
+            Phase::Load => "load",
+            Phase::SampleAhead => "sample_ahead",
+            Phase::LoadExchange => "load_exchange",
+            Phase::ShuffleFwd => "shuffle_fwd",
+            Phase::ShuffleFwdSend => "shuffle_fwd_send",
+            Phase::ShuffleFwdRecv => "shuffle_fwd_recv",
+            Phase::ShuffleBwd => "shuffle_bwd",
+            Phase::ShuffleBwdSend => "shuffle_bwd_send",
+            Phase::ShuffleBwdRecv => "shuffle_bwd_recv",
+            Phase::ComputeFwd => "compute_fwd",
+            Phase::ComputeBwd => "compute_bwd",
+            Phase::Loss => "loss",
+            Phase::GradReduce => "grad_reduce",
+            Phase::DiskFetch => "disk_fetch",
+            Phase::CacheBuild => "cache_build",
+        }
+    }
+
+    /// Inverse of [`Phase::name`].
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Where this phase lands in the paper's S/L/FB breakdown.
+    pub fn group(self) -> PhaseGroup {
+        match self {
+            Phase::Sample | Phase::SampleAhead => PhaseGroup::Sampling,
+            Phase::Load | Phase::LoadExchange | Phase::DiskFetch => PhaseGroup::Loading,
+            Phase::CacheBuild => PhaseGroup::Offline,
+            _ => PhaseGroup::Fb,
+        }
+    }
+}
+
+/// One finished timed interval. `device`, `batch`, and `layer` are `-1`
+/// when not applicable; `t0`/`t1` are nanoseconds since the tracer epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    /// Display name (defaults to the phase name).
+    pub name: &'static str,
+    pub phase: Phase,
+    pub device: i32,
+    pub batch: i64,
+    pub layer: i32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+}
+
+impl Span {
+    /// Duration in seconds.
+    pub fn secs(&self) -> f64 {
+        (self.t1_ns.saturating_sub(self.t0_ns)) as f64 * 1e-9
+    }
+}
+
+/// Registry-owned side of one thread's span buffer: the flush target that
+/// outlives the recording thread.
+#[derive(Debug)]
+pub struct Track {
+    label: Mutex<String>,
+    buf: Mutex<TrackBuf>,
+}
+
+#[derive(Debug, Default)]
+struct TrackBuf {
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl Track {
+    fn new(label: String) -> Track {
+        Track { label: Mutex::new(label), buf: Mutex::new(TrackBuf::default()) }
+    }
+}
+
+/// A snapshot of one track for export: label, spans, drop count.
+#[derive(Debug, Clone)]
+pub struct TrackSnapshot {
+    pub label: String,
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+}
+
+/// The process-global span recorder. Obtain it via [`tracer`].
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap: usize,
+    /// Output path from `GSPLIT_TRACE`, if the env var enabled tracing.
+    env_path: Option<String>,
+    tracks: Mutex<Vec<Arc<Track>>>,
+}
+
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+
+/// The global [`Tracer`]. First call reads `GSPLIT_TRACE` (enables tracing
+/// and remembers the export path) and `GSPLIT_TRACE_CAP`.
+pub fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(|| {
+        let env_path = std::env::var("GSPLIT_TRACE").ok().filter(|s| !s.is_empty());
+        let cap = std::env::var("GSPLIT_TRACE_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&c| c > 0)
+            .unwrap_or(DEFAULT_SPAN_CAP);
+        Tracer {
+            enabled: AtomicBool::new(env_path.is_some()),
+            epoch: Instant::now(),
+            cap,
+            env_path,
+            tracks: Mutex::new(Vec::new()),
+        }
+    })
+}
+
+impl Tracer {
+    /// Whether spans are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off (off discards nothing already recorded).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The export path `GSPLIT_TRACE` asked for, if any.
+    pub fn env_path(&self) -> Option<&str> {
+        self.env_path.as_deref()
+    }
+
+    /// Per-thread span capacity.
+    pub fn span_cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Nanoseconds since the tracer epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn register(&self, label: String) -> Arc<Track> {
+        let track = Arc::new(Track::new(label));
+        self.tracks.lock().expect("tracer registry poisoned").push(Arc::clone(&track));
+        track
+    }
+
+    /// Snapshot every track (flushed spans only — call [`flush_thread`] on
+    /// a live thread first; exited threads flush automatically).
+    pub fn snapshot(&self) -> Vec<TrackSnapshot> {
+        let tracks = self.tracks.lock().expect("tracer registry poisoned");
+        tracks
+            .iter()
+            .map(|t| {
+                let label = t.label.lock().expect("track label poisoned").clone();
+                let buf = t.buf.lock().expect("track buffer poisoned");
+                TrackSnapshot { label, spans: buf.spans.clone(), dropped: buf.dropped }
+            })
+            .collect()
+    }
+
+    /// Drop every recorded span (labels and registration survive), so
+    /// benches and tests can isolate runs. Flush the calling thread first.
+    pub fn reset(&self) {
+        flush_thread();
+        let tracks = self.tracks.lock().expect("tracer registry poisoned");
+        for t in tracks.iter() {
+            let mut buf = t.buf.lock().expect("track buffer poisoned");
+            buf.spans.clear();
+            buf.dropped = 0;
+        }
+    }
+}
+
+/// Whether the global tracer is recording (one relaxed atomic load).
+#[inline]
+pub fn enabled() -> bool {
+    tracer().enabled()
+}
+
+/// Enable or disable the global tracer (`Trainer::set_trace` forwards
+/// here).
+pub fn set_enabled(on: bool) {
+    tracer().set_enabled(on);
+}
+
+// Thread-local recording side: a plain Vec push behind a RefCell — no
+// lock on the hot path. The shared Arc<Track> exists only so the spans
+// survive thread exit (flushed by ThreadBuf::drop).
+struct ThreadBuf {
+    spans: Vec<Span>,
+    dropped: u64,
+    shared: Arc<Track>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if self.spans.is_empty() && self.dropped == 0 {
+            return;
+        }
+        let mut buf = self.shared.buf.lock().expect("track buffer poisoned");
+        buf.spans.append(&mut self.spans);
+        buf.dropped += self.dropped;
+        self.dropped = 0;
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static THREAD_BUF: RefCell<Option<ThreadBuf>> = const { RefCell::new(None) };
+}
+
+fn with_thread_buf(f: impl FnOnce(&mut ThreadBuf)) {
+    THREAD_BUF.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let buf = slot.get_or_insert_with(|| {
+            let label = std::thread::current()
+                .name()
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| format!("thread-{:?}", std::thread::current().id()));
+            ThreadBuf { spans: Vec::new(), dropped: 0, shared: tracer().register(label) }
+        });
+        f(buf);
+    });
+}
+
+/// Name the current thread's track in the exported trace (idempotent;
+/// last label wins). Worker threads call this once at startup. A no-op
+/// while tracing is disabled, so untraced runs never grow the registry.
+pub fn set_thread_label(label: &str) {
+    if !enabled() {
+        return;
+    }
+    with_thread_buf(|buf| {
+        *buf.shared.label.lock().expect("track label poisoned") = label.to_string();
+    });
+}
+
+/// Push the current thread's unflushed spans into the shared registry so
+/// [`Tracer::snapshot`] can see them. Threads that exit flush implicitly.
+pub fn flush_thread() {
+    with_thread_buf(ThreadBuf::flush);
+}
+
+fn record(span: Span) {
+    let cap = tracer().span_cap();
+    with_thread_buf(|buf| {
+        if buf.spans.len() < cap {
+            buf.spans.push(span);
+        } else {
+            buf.dropped += 1;
+        }
+    });
+}
+
+/// RAII span: records a [`Span`] from construction to drop. Inert (and
+/// nearly free) when tracing is disabled at construction time.
+#[must_use = "a TraceGuard records its span when dropped; bind it with `let _g = ...`"]
+pub struct TraceGuard {
+    /// `None` when tracing was disabled at construction.
+    t0_ns: Option<u64>,
+    name: &'static str,
+    phase: Phase,
+    device: i32,
+    batch: i64,
+    layer: i32,
+}
+
+impl TraceGuard {
+    /// Override the display name (defaults to the phase name).
+    pub fn named(mut self, name: &'static str) -> TraceGuard {
+        self.name = name;
+        self
+    }
+
+    /// Attach a device id.
+    pub fn device(mut self, d: usize) -> TraceGuard {
+        self.device = d as i32;
+        self
+    }
+
+    /// Attach a batch index.
+    pub fn batch(mut self, b: u64) -> TraceGuard {
+        self.batch = b as i64;
+        self
+    }
+
+    /// Attach a sampled-layer index.
+    pub fn layer(mut self, l: usize) -> TraceGuard {
+        self.layer = l as i32;
+        self
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0_ns {
+            record(Span {
+                name: self.name,
+                phase: self.phase,
+                device: self.device,
+                batch: self.batch,
+                layer: self.layer,
+                t0_ns: t0,
+                t1_ns: tracer().now_ns(),
+            });
+        }
+    }
+}
+
+/// Start a span of `phase` on the current thread. Prefer the [`span!`]
+/// macro, which also sets the context fields.
+#[inline]
+pub fn span(phase: Phase) -> TraceGuard {
+    let t = tracer();
+    TraceGuard {
+        t0_ns: if t.enabled() { Some(t.now_ns()) } else { None },
+        name: phase.name(),
+        phase,
+        device: -1,
+        batch: -1,
+        layer: -1,
+    }
+}
+
+/// Open an RAII trace span: `span!(Phase::ComputeFwd, device = d, batch =
+/// b, layer = l)`. Context fields are optional and order-free; bind the
+/// result (`let _g = span!(...)`) so the span closes at scope exit.
+#[macro_export]
+macro_rules! span {
+    ($phase:expr $(, $field:ident = $value:expr)* $(,)?) => {
+        $crate::obs::span($phase)$(.$field($value))*
+    };
+}
+
+/// Serializes unit tests that toggle the process-global tracer, so a
+/// concurrently running test cannot observe (or clobber) another test's
+/// enabled state.
+#[cfg(test)]
+pub(crate) fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_gate()
+    }
+
+    #[test]
+    fn phase_names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for p in Phase::ALL {
+            assert!(seen.insert(p.name()), "duplicate phase name {}", p.name());
+            assert_eq!(Phase::parse(p.name()), Some(p));
+        }
+        assert_eq!(Phase::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn phase_groups_cover_s_l_fb() {
+        assert_eq!(Phase::Sample.group(), PhaseGroup::Sampling);
+        assert_eq!(Phase::SampleAhead.group(), PhaseGroup::Sampling);
+        assert_eq!(Phase::Load.group(), PhaseGroup::Loading);
+        assert_eq!(Phase::DiskFetch.group(), PhaseGroup::Loading);
+        assert_eq!(Phase::ComputeFwd.group(), PhaseGroup::Fb);
+        assert_eq!(Phase::GradReduce.group(), PhaseGroup::Fb);
+        assert_eq!(Phase::CacheBuild.group(), PhaseGroup::Offline);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = lock();
+        let was = enabled();
+        set_enabled(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_label("obs-disabled-test");
+                let _s = span!(Phase::Sample, batch = 3);
+            });
+        });
+        set_enabled(was);
+        // Neither the label nor the span may have registered anything.
+        let snap = tracer().snapshot();
+        assert!(
+            snap.iter().all(|t| t.label != "obs-disabled-test"),
+            "disabled tracer must not register tracks or record spans"
+        );
+    }
+
+    #[test]
+    fn enabled_tracer_records_nested_spans_in_order() {
+        let _g = lock();
+        let was = enabled();
+        set_enabled(true);
+        tracer().reset();
+        set_thread_label("obs-test");
+        {
+            let _outer = span!(Phase::SampleAhead, batch = 7);
+            let _inner = span!(Phase::Sample, batch = 7);
+        }
+        flush_thread();
+        set_enabled(was);
+        let snap = tracer().snapshot();
+        let track = snap
+            .iter()
+            .find(|t| t.label == "obs-test" && !t.spans.is_empty())
+            .expect("test thread track");
+        let sample = track.spans.iter().find(|s| s.phase == Phase::Sample).unwrap();
+        let ahead = track.spans.iter().find(|s| s.phase == Phase::SampleAhead).unwrap();
+        assert_eq!(sample.batch, 7);
+        assert!(ahead.t0_ns <= sample.t0_ns, "parent starts first");
+        assert!(sample.t1_ns <= ahead.t1_ns, "child ends first");
+        assert!(sample.secs() >= 0.0);
+    }
+
+    #[test]
+    fn span_cap_bounds_memory_and_counts_drops() {
+        let _g = lock();
+        let was = enabled();
+        set_enabled(true);
+        tracer().reset();
+        let cap = tracer().span_cap();
+        // Fill this thread's buffer past the cap on a fresh track.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_label("obs-cap-test");
+                for _ in 0..cap + 10 {
+                    let _s = span!(Phase::DiskFetch);
+                }
+            });
+        });
+        set_enabled(was);
+        let snap = tracer().snapshot();
+        let track = snap.iter().find(|t| t.label == "obs-cap-test").expect("cap test track");
+        assert_eq!(track.spans.len(), cap);
+        assert_eq!(track.dropped, 10);
+    }
+
+    #[test]
+    fn guard_context_builders_set_fields() {
+        let _g = lock();
+        let was = enabled();
+        set_enabled(true);
+        tracer().reset();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_label("obs-ctx-test");
+                let _s = span!(Phase::ComputeFwd, device = 2, batch = 5, layer = 1)
+                    .named("custom");
+            });
+        });
+        set_enabled(was);
+        let snap = tracer().snapshot();
+        let track = snap.iter().find(|t| t.label == "obs-ctx-test").expect("ctx test track");
+        let s = &track.spans[0];
+        assert_eq!((s.device, s.batch, s.layer, s.name), (2, 5, 1, "custom"));
+        assert!(s.t1_ns >= s.t0_ns);
+    }
+}

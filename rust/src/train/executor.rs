@@ -59,7 +59,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::cache::ResidentCache;
 use crate::graph::{Dataset, FeatureSource};
 use crate::model::{ModelConfig, ParamStore};
+use crate::obs::Phase;
 use crate::runtime::Backend;
+use crate::span;
 use crate::split::SplitPlan;
 use crate::{DeviceId, Vid};
 
@@ -185,6 +187,7 @@ pub(super) fn run_batches(
     if specs.is_empty() {
         return Ok(Vec::new());
     }
+    crate::obs::set_thread_label("coordinator");
     let k = trainer.part.k;
     let n_workers = cfg.workers.clamp(1, k);
     let channel_cap = cfg.channel_cap.max(1);
@@ -231,6 +234,7 @@ pub(super) fn run_batches(
             let model_cfg = model_cfg.clone();
             let cache = cache.clone();
             scope.spawn(move || {
+                crate::obs::set_thread_label(&format!("worker-{w}"));
                 let guard = AbortOnDrop(Arc::clone(&abort));
                 let worker = Worker {
                     backend,
@@ -269,6 +273,7 @@ pub(super) fn run_batches(
             }
             // Plan stage for batch t+1 overlaps the workers training batch t.
             if let Some(next) = specs.get(t + 1) {
+                let _s = span!(Phase::SampleAhead, batch = trainer.batches_prepared);
                 next_prep = Some(Arc::new(trainer.prepare(ds, &next.targets, next.plan_seed)));
             }
             // Collect every device's result, then reduce in device order.
@@ -295,7 +300,10 @@ pub(super) fn run_batches(
                     Err(RecvTimeoutError::Disconnected) => bail!("executor workers disconnected"),
                 }
             }
-            stats.push(reduce_batch(trainer, &model_cfg, &prep.plan, &by_dev, backward, lr));
+            {
+                let _s = span!(Phase::GradReduce, batch = prep.batch_idx);
+                stats.push(reduce_batch(trainer, &model_cfg, &prep.plan, &by_dev, backward, lr));
+            }
         }
         for jtx in &job_txs {
             let _ = jtx.send(Job::Stop);
@@ -541,6 +549,10 @@ impl<'e> Worker<'e> {
         let kernel_k = self.kernel_k;
         let owned = self.owned.clone();
         let n_own = owned.len();
+        // Global batch counter for trace labels (the `batch_idx` parameter
+        // is this epoch's coordinator index; spans use the trainer-global
+        // one so serial and pipelined traces label batches identically).
+        let bidx = prep.batch_idx;
 
         // Owned rows at the current bottom-up boundary, starting from the
         // input features the plan stage gathered.
@@ -558,6 +570,7 @@ impl<'e> Worker<'e> {
         // derive from the shared LoadingPlan; destination rows are
         // distinct, so arrival order is irrelevant.
         if let Some(cache) = &self.cache {
+            let _s = span!(Phase::LoadExchange, batch = bidx);
             let dim = self.ds.features.dim();
             let load = &prep.loading;
             let mut outgoing: Vec<OutQueue> = Vec::new();
@@ -602,13 +615,17 @@ impl<'e> Worker<'e> {
 
             // Exchange: pack owned rows for every destination device...
             let mut outgoing: Vec<OutQueue> = Vec::new();
-            for (li, &d) in owned.iter().enumerate() {
-                for to in 0..k {
-                    let idx = &layer.shuffle.send[d][to];
-                    if idx.is_empty() {
-                        continue;
+            {
+                let _s = span!(Phase::ShuffleFwdSend, batch = bidx, layer = i);
+                for (li, &d) in owned.iter().enumerate() {
+                    for to in 0..k {
+                        let idx = &layer.shuffle.send[d][to];
+                        if idx.is_empty() {
+                            continue;
+                        }
+                        outgoing
+                            .push(OutQueue { li, to, q: self.pack_rows(&hidden[li], idx, din) });
                     }
-                    outgoing.push(OutQueue { li, to, q: self.pack_rows(&hidden[li], idx, din) });
                 }
             }
             // ...and scatter arriving rows into the mixed frontiers (the
@@ -622,16 +639,19 @@ impl<'e> Worker<'e> {
                 }
             }
             let mixed_i = &mut mixed[i];
-            self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
-                let rl = &layer.shuffle.recv[owned[li]][from];
-                let nrows = chunk.rows.len() / din;
-                let start = chunk.start as usize;
-                for j in 0..nrows {
-                    let pos = rl[start + j] as usize;
-                    mixed_i[li][pos * din..(pos + 1) * din]
-                        .copy_from_slice(&chunk.rows[j * din..(j + 1) * din]);
-                }
-            })?;
+            {
+                let _s = span!(Phase::ShuffleFwdRecv, batch = bidx, layer = i);
+                self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                    let rl = &layer.shuffle.recv[owned[li]][from];
+                    let nrows = chunk.rows.len() / din;
+                    let start = chunk.start as usize;
+                    for j in 0..nrows {
+                        let pos = rl[start + j] as usize;
+                        mixed_i[li][pos * din..(pos + 1) * din]
+                            .copy_from_slice(&chunk.rows[j * din..(j + 1) * din]);
+                    }
+                })?;
+            }
 
             // Compute this layer's owned hidden rows.
             for (li, &d) in owned.iter().enumerate() {
@@ -640,6 +660,7 @@ impl<'e> Worker<'e> {
                     hidden[li] = Vec::new();
                     continue;
                 }
+                let _s = span!(Phase::ComputeFwd, device = d, batch = bidx, layer = i);
                 hidden[li] = self.backend.layer_fwd(
                     cfg.kind,
                     din,
@@ -669,6 +690,7 @@ impl<'e> Worker<'e> {
             if b_d == 0 {
                 continue;
             }
+            let _s = span!(Phase::Loss, device = d, batch = bidx);
             let labels: Vec<i32> =
                 dl.dst.iter().map(|&v| self.ds.labels.labels[v as usize] as i32).collect();
             let (out, g_logits) = self.backend.loss(&hidden[li], &labels, b_d, c)?;
@@ -703,19 +725,23 @@ impl<'e> Worker<'e> {
                     if !active {
                         continue;
                     }
-                    let grads = self.backend.layer_bwd(
-                        cfg.kind,
-                        din,
-                        dout,
-                        relu,
-                        &mixed[i][li],
-                        dl.mixed_src.len(),
-                        &dl.neigh,
-                        dl.num_dst(),
-                        kernel_k,
-                        &g_out[li],
-                        &params.layers[l],
-                    )?;
+                    let grads = {
+                        let _s = span!(Phase::ComputeBwd, device = d, batch = bidx, layer = i);
+                        self.backend.layer_bwd(
+                            cfg.kind,
+                            din,
+                            dout,
+                            relu,
+                            &mixed[i][li],
+                            dl.mixed_src.len(),
+                            &dl.neigh,
+                            dl.num_dst(),
+                            kernel_k,
+                            &g_out[li],
+                            &params.layers[l],
+                        )?
+                    };
+                    let _s = span!(Phase::ShuffleBwdSend, device = d, batch = bidx, layer = i);
                     for to in 0..k {
                         let idx = &layer.shuffle.recv[d][to];
                         if idx.is_empty() {
@@ -743,6 +769,7 @@ impl<'e> Worker<'e> {
                         }
                     }
                 }
+                let _s = span!(Phase::ShuffleBwdRecv, batch = bidx, layer = i);
                 self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
                     stage[li][from].push(chunk);
                 })?;

@@ -45,9 +45,11 @@ use anyhow::{ensure, Result};
 use crate::cache::{LoadStats, ResidentCache};
 use crate::graph::Dataset;
 use crate::model::{ModelConfig, ParamStore};
+use crate::obs::Phase;
 use crate::partition::Partitioning;
 use crate::rng::derive_seed;
 use crate::runtime::Backend;
+use crate::span;
 use crate::split::SplitSampler;
 use crate::Vid;
 
@@ -121,6 +123,9 @@ pub struct Trainer<'a> {
     /// Per-device Local/NVLink/PCIe byte accounting, accumulated across
     /// every plan stage this trainer ran.
     load_stats: Vec<LoadStats>,
+    /// Running count of plan stages, used to label trace spans with a
+    /// batch index (`crate::obs`).
+    batches_prepared: u64,
 }
 
 impl<'a> Trainer<'a> {
@@ -152,6 +157,7 @@ impl<'a> Trainer<'a> {
             mode: ExecMode::Serial,
             cache: None,
             load_stats,
+            batches_prepared: 0,
         })
     }
 
@@ -201,6 +207,8 @@ impl<'a> Trainer<'a> {
     /// accumulate its byte accounting — the single entry point both
     /// executors share.
     fn prepare(&mut self, ds: &Dataset, targets: &[Vid], plan_seed: u64) -> PreparedBatch {
+        let batch_idx = self.batches_prepared;
+        self.batches_prepared += 1;
         let prep = plan::prepare_batch(
             &mut self.sampler,
             ds,
@@ -209,11 +217,21 @@ impl<'a> Trainer<'a> {
             &self.part,
             self.cache.as_deref(),
             plan_seed,
+            batch_idx,
         );
         for (acc, s) in self.load_stats.iter_mut().zip(&prep.loading.stats) {
             acc.merge(s);
         }
+        LoadStats::sum(prep.loading.stats.iter()).record_metrics("train");
         prep
+    }
+
+    /// Enable or disable span tracing for this run. Forwards to the
+    /// process-global tracer (`crate::obs`) — equivalent to setting
+    /// `GSPLIT_TRACE` — and never affects numerics: traced and untraced
+    /// runs are bit-identical (see `executor_equivalence.rs`).
+    pub fn set_trace(&mut self, enabled: bool) {
+        crate::obs::set_enabled(enabled);
     }
 
     /// Select the executor. [`ExecMode::Pipelined`] spawns its worker
@@ -246,8 +264,12 @@ impl<'a> Trainer<'a> {
         match mode {
             ExecMode::Serial => {
                 let prep = self.prepare(ds, targets, plan_seed);
+                let batch_idx = prep.batch_idx;
                 let (stats, grads) = self.forward_backward(ds, prep, true)?;
-                self.params.sgd_step(&grads.expect("grads requested"), self.lr);
+                {
+                    let _s = span!(Phase::GradReduce, batch = batch_idx);
+                    self.params.sgd_step(&grads.expect("grads requested"), self.lr);
+                }
                 Ok(stats)
             }
             ExecMode::Pipelined(cfg) => {

@@ -32,7 +32,9 @@
 
 use crate::cache::{FetchSource, LoadStats, ResidentCache};
 use crate::graph::{Dataset, FeatureSource, HostTier};
+use crate::obs::Phase;
 use crate::partition::Partitioning;
+use crate::span;
 use crate::split::{SplitPlan, SplitSampler};
 use crate::{DeviceId, Vid};
 
@@ -94,6 +96,9 @@ pub struct PreparedBatch {
     /// `feats[d]` — row-major `[input_frontier[d].len(), feat_dim]`.
     pub feats: Vec<Vec<f32>>,
     pub loading: LoadingPlan,
+    /// Trainer-wide running batch index, used to label trace spans
+    /// (`crate::obs`) — never consulted by the numerics.
+    pub batch_idx: u64,
 }
 
 /// Run the plan stage for one mini-batch: sample + split cooperatively,
@@ -111,8 +116,13 @@ pub(super) fn prepare_batch(
     part: &Partitioning,
     cache: Option<&ResidentCache>,
     plan_seed: u64,
+    batch_idx: u64,
 ) -> PreparedBatch {
-    let plan = sampler.sample(&ds.graph, targets, fanouts, part, plan_seed);
+    let plan = {
+        let _s = span!(Phase::Sample, batch = batch_idx);
+        sampler.sample(&ds.graph, targets, fanouts, part, plan_seed)
+    };
+    let _load_span = span!(Phase::Load, batch = batch_idx);
     let k = plan.k;
     let dim = ds.features.dim();
     let row_bytes = ds.features.row_bytes();
@@ -159,5 +169,5 @@ pub(super) fn prepare_batch(
         }
         feats.push(buf);
     }
-    PreparedBatch { plan, feats, loading }
+    PreparedBatch { plan, feats, loading, batch_idx }
 }

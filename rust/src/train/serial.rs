@@ -11,6 +11,8 @@
 use anyhow::Result;
 
 use crate::graph::{Dataset, FeatureSource};
+use crate::obs::Phase;
+use crate::span;
 use crate::train::plan::PreparedBatch;
 use crate::train::{IterStats, Trainer};
 
@@ -25,7 +27,7 @@ impl<'a> Trainer<'a> {
         backward: bool,
     ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
         let cfg = self.params.cfg.clone();
-        let PreparedBatch { plan, mut feats, loading } = prep;
+        let PreparedBatch { plan, mut feats, loading, batch_idx } = prep;
         let k = plan.k;
         let num_layers = plan.layers.len();
         let kernel_k = self.fanouts[0];
@@ -37,6 +39,7 @@ impl<'a> Trainer<'a> {
         // rows are distinct, so this is a pure scatter of bit-exact host
         // copies; order only matters for auditability.
         if let Some(cache) = &self.cache {
+            let _s = span!(Phase::LoadExchange, batch = batch_idx);
             let dim = ds.features.dim();
             for server in 0..k {
                 for client in 0..k {
@@ -67,19 +70,23 @@ impl<'a> Trainer<'a> {
             let layer = &plan.layers[i];
             // Shuffle: materialize each device's mixed frontier from owned
             // rows of the boundary below (all-to-all of Algorithm 2 line 5).
-            for d in 0..k {
-                let dl = &layer.per_dev[d];
-                let mut buf = vec![0f32; dl.mixed_src.len() * din];
-                for from in 0..k {
-                    let send = &layer.shuffle.send[from][d];
-                    let recv = &layer.shuffle.recv[d][from];
-                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
-                        let src = &hidden[from][s_idx as usize * din..(s_idx as usize + 1) * din];
-                        buf[r_idx as usize * din..(r_idx as usize + 1) * din]
-                            .copy_from_slice(src);
+            {
+                let _s = span!(Phase::ShuffleFwd, batch = batch_idx, layer = i);
+                for d in 0..k {
+                    let dl = &layer.per_dev[d];
+                    let mut buf = vec![0f32; dl.mixed_src.len() * din];
+                    for from in 0..k {
+                        let send = &layer.shuffle.send[from][d];
+                        let recv = &layer.shuffle.recv[d][from];
+                        for (&s_idx, &r_idx) in send.iter().zip(recv) {
+                            let src =
+                                &hidden[from][s_idx as usize * din..(s_idx as usize + 1) * din];
+                            buf[r_idx as usize * din..(r_idx as usize + 1) * din]
+                                .copy_from_slice(src);
+                        }
                     }
+                    mixed[i][d] = buf;
                 }
-                mixed[i][d] = buf;
             }
             // Compute this layer's owned hidden rows per device.
             let mut next_hidden: Vec<Vec<f32>> = Vec::with_capacity(k);
@@ -89,6 +96,7 @@ impl<'a> Trainer<'a> {
                     next_hidden.push(Vec::new());
                     continue;
                 }
+                let _s = span!(Phase::ComputeFwd, device = d, batch = batch_idx, layer = i);
                 let h = self.backend.layer_fwd(
                     cfg.kind,
                     din,
@@ -118,6 +126,7 @@ impl<'a> Trainer<'a> {
             if b_d == 0 {
                 continue;
             }
+            let _s = span!(Phase::Loss, device = d, batch = batch_idx);
             let labels: Vec<i32> =
                 dl.dst.iter().map(|&v| ds.labels.labels[v as usize] as i32).collect();
             let (out, g_logits) = self.backend.loss(&hidden[d], &labels, b_d, c)?;
@@ -161,19 +170,22 @@ impl<'a> Trainer<'a> {
                     continue;
                 }
                 debug_assert!(plan.bwd_active(i, d));
-                let grads = self.backend.layer_bwd(
-                    cfg.kind,
-                    din,
-                    dout,
-                    relu,
-                    &mixed[i][d],
-                    dl.mixed_src.len(),
-                    &dl.neigh,
-                    dl.num_dst(),
-                    kernel_k,
-                    &g_out[d],
-                    &self.params.layers[l],
-                )?;
+                let grads = {
+                    let _s = span!(Phase::ComputeBwd, device = d, batch = batch_idx, layer = i);
+                    self.backend.layer_bwd(
+                        cfg.kind,
+                        din,
+                        dout,
+                        relu,
+                        &mixed[i][d],
+                        dl.mixed_src.len(),
+                        &dl.neigh,
+                        dl.num_dst(),
+                        kernel_k,
+                        &g_out[d],
+                        &self.params.layers[l],
+                    )?
+                };
                 for (acc, g) in g_params[l].iter_mut().zip(&grads.g_params) {
                     for (a, b) in acc.iter_mut().zip(g) {
                         *a += b;
@@ -181,6 +193,7 @@ impl<'a> Trainer<'a> {
                 }
                 // Reverse shuffle: scatter-add mixed-row gradients back to
                 // the owners (gradients flow along the same shuffle index).
+                let _s = span!(Phase::ShuffleBwd, device = d, batch = batch_idx, layer = i);
                 for from in 0..k {
                     let send = &layer.shuffle.send[from][d];
                     let recv = &layer.shuffle.recv[d][from];

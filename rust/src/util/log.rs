@@ -1,5 +1,7 @@
-//! Tiny leveled logger (stderr). `GSPLIT_LOG=debug|info|warn|error` selects
-//! verbosity; defaults to `info`.
+//! Tiny leveled logger (stderr). `GSPLIT_LOG=debug|info|warn|error|off`
+//! selects verbosity; defaults to `info`. An unrecognized value falls back
+//! to `info` with a one-time warning naming the bad value (it used to fall
+//! back silently).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -13,18 +15,51 @@ pub enum Level {
     Error = 3,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(1);
+/// Threshold above every message level: `GSPLIT_LOG=off` silences all
+/// output.
+const OFF: u8 = Level::Error as u8 + 1;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static INIT: OnceLock<()> = OnceLock::new();
+
+/// Parse one `GSPLIT_LOG` value into a threshold for `LEVEL`.
+fn parse_env_level(s: &str) -> Option<u8> {
+    match s {
+        "debug" => Some(Level::Debug as u8),
+        "info" => Some(Level::Info as u8),
+        "warn" => Some(Level::Warn as u8),
+        "error" => Some(Level::Error as u8),
+        "off" => Some(OFF),
+        _ => None,
+    }
+}
+
+/// Resolve the raw env lookup to a threshold, plus the invalid value to
+/// warn about (once), if any. Pure so the init policy is unit-testable —
+/// the `OnceLock` wrapper below only runs it a single time.
+fn resolve(env: Option<&str>) -> (u8, Option<&str>) {
+    match env {
+        None => (Level::Info as u8, None),
+        Some(s) => match parse_env_level(s) {
+            Some(t) => (t, None),
+            None => (Level::Info as u8, Some(s)),
+        },
+    }
+}
 
 fn ensure_init() {
     INIT.get_or_init(|| {
-        let lvl = match std::env::var("GSPLIT_LOG").as_deref() {
-            Ok("debug") => Level::Debug,
-            Ok("warn") => Level::Warn,
-            Ok("error") => Level::Error,
-            _ => Level::Info,
-        };
-        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        let var = std::env::var("GSPLIT_LOG").ok();
+        let (threshold, bad) = resolve(var.as_deref());
+        if let Some(bad) = bad {
+            // Direct eprintln: routing through log() here would re-enter
+            // the OnceLock initializer.
+            eprintln!(
+                "[gsplit WARN ] invalid GSPLIT_LOG value `{bad}` \
+                 (expected debug|info|warn|error|off); using info"
+            );
+        }
+        LEVEL.store(threshold, Ordering::Relaxed);
     });
 }
 
@@ -60,4 +95,56 @@ macro_rules! warn_ {
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_documented_value() {
+        assert_eq!(parse_env_level("debug"), Some(Level::Debug as u8));
+        assert_eq!(parse_env_level("info"), Some(Level::Info as u8));
+        assert_eq!(parse_env_level("warn"), Some(Level::Warn as u8));
+        assert_eq!(parse_env_level("error"), Some(Level::Error as u8));
+        assert_eq!(parse_env_level("off"), Some(OFF));
+    }
+
+    #[test]
+    fn rejects_unknown_and_miscased_values() {
+        for bad in ["INFO", "Debug", "trace", "verbose", "", " info"] {
+            assert_eq!(parse_env_level(bad), None, "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn off_silences_every_level() {
+        for lvl in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert!((lvl as u8) < OFF, "{lvl:?} must be below the off threshold");
+        }
+    }
+
+    #[test]
+    fn resolve_unset_defaults_to_info_without_warning() {
+        assert_eq!(resolve(None), (Level::Info as u8, None));
+    }
+
+    #[test]
+    fn resolve_valid_value_sets_threshold_without_warning() {
+        assert_eq!(resolve(Some("error")), (Level::Error as u8, None));
+        assert_eq!(resolve(Some("off")), (OFF, None));
+    }
+
+    #[test]
+    fn resolve_invalid_value_falls_back_to_info_and_names_it() {
+        // Regression: an invalid value used to fall back silently.
+        assert_eq!(resolve(Some("loud")), (Level::Info as u8, Some("loud")));
+    }
+
+    #[test]
+    fn level_ordering_matches_severity() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
 }

@@ -27,14 +27,29 @@ impl Stopwatch {
     }
 
     pub fn stop(&mut self) {
+        debug_assert!(self.started.is_some(), "stopwatch stopped but never started");
         if let Some(t0) = self.started.take() {
             self.total += t0.elapsed().as_secs_f64();
         }
     }
 
-    /// Accumulated seconds (not counting a currently-running interval).
+    /// Whether an interval is currently open (started but not stopped).
+    pub fn running(&self) -> bool {
+        self.started.is_some()
+    }
+
+    /// Accumulated seconds of **closed** intervals only. A currently
+    /// running interval is excluded — use [`Stopwatch::elapsed_total`] to
+    /// include it.
     pub fn secs(&self) -> f64 {
         self.total
+    }
+
+    /// Accumulated seconds including the currently running interval, if
+    /// any. Unlike [`Stopwatch::secs`], reading this mid-interval never
+    /// under-reports.
+    pub fn elapsed_total(&self) -> f64 {
+        self.total + self.started.map_or(0.0, |t0| t0.elapsed().as_secs_f64())
     }
 
     pub fn reset(&mut self) {
@@ -75,5 +90,43 @@ mod tests {
         let (secs, v) = timed(|| 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn running_reflects_open_interval() {
+        let mut sw = Stopwatch::new();
+        assert!(!sw.running());
+        sw.start();
+        assert!(sw.running());
+        sw.stop();
+        assert!(!sw.running());
+        sw.start();
+        sw.reset();
+        assert!(!sw.running(), "reset closes the open interval");
+    }
+
+    #[test]
+    fn elapsed_total_includes_the_live_interval() {
+        // Regression: secs() silently excluded a currently-running
+        // interval, so mid-phase reads under-reported.
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        let closed = sw.secs();
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(sw.secs(), closed, "secs() still reports closed intervals only");
+        let live = sw.elapsed_total();
+        assert!(live >= closed + 0.004, "live interval missing: {live} vs {closed}");
+        sw.stop();
+        assert!(sw.secs() >= live, "stop() folds the live interval into secs()");
+        assert_eq!(sw.secs(), sw.elapsed_total(), "equal while not running");
+    }
+
+    #[test]
+    #[should_panic(expected = "stopwatch stopped but never started")]
+    #[cfg(debug_assertions)]
+    fn stop_without_start_is_a_debug_panic() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
     }
 }

@@ -137,6 +137,40 @@ fn pipelined_evaluate_matches_serial() {
 }
 
 #[test]
+fn tracing_changes_no_output_bit() {
+    // DESIGN.md §Observability: the span recorder only reads clocks, so
+    // enabling it must not move a single output bit under either
+    // executor. One traced test per binary — the tracer is
+    // process-global and toggling it from parallel tests would race.
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let part = modulo_part(&ds, K);
+    let backend = NativeBackend::new();
+
+    let mut untraced = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 11).unwrap();
+    let a = train_epoch(&mut untraced, &ds, 512, 11).unwrap();
+
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 11).unwrap();
+    serial.set_trace(true);
+    let b = train_epoch(&mut serial, &ds, 512, 11).unwrap();
+
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 11).unwrap();
+    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+    let c = train_epoch(&mut pipelined, &ds, 512, 11).unwrap();
+    pipelined.set_trace(false);
+
+    gsplit::obs::flush_thread();
+    let spans: usize = gsplit::obs::tracer().snapshot().iter().map(|t| t.spans.len()).sum();
+    assert!(spans > 0, "traced runs must have recorded spans");
+    gsplit::obs::tracer().reset();
+
+    assert_stats_bit_identical(&a, &b, "traced serial vs untraced serial");
+    assert_stats_bit_identical(&a, &c, "traced pipelined vs untraced serial");
+    assert_params_bit_identical(&untraced.params, &serial.params, "traced serial params");
+    assert_params_bit_identical(&untraced.params, &pipelined.params, "traced pipelined params");
+}
+
+#[test]
 fn single_iteration_and_single_device_paths() {
     // k = 1 (self-channel only) and a one-off pipelined train_iteration.
     let ds = StandIn::Tiny.load().unwrap();

@@ -173,6 +173,42 @@ fn check_case(
 }
 
 #[test]
+fn tracing_changes_no_output_bit_out_of_core() {
+    // DESIGN.md §Observability: tracing only reads clocks — a disk-backed
+    // epoch must stay bit-identical with the recorder on, and the chunk
+    // faults must show up as `DiskFetch` spans. One traced test per
+    // binary: the tracer is process-global and toggling it from parallel
+    // tests would race.
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let (path, ram) = write_tiny_gsg();
+    let part = modulo_part(&ram, 4);
+
+    let ds_a = open_disk_tiny(&path, &ram, 256, 4);
+    let mut untraced = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    let a = train_epoch(&mut untraced, &ds_a, BATCH, SEED).unwrap();
+
+    let ds_b = open_disk_tiny(&path, &ram, 256, 4);
+    let mut traced = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
+    traced.set_trace(true);
+    let b = train_epoch(&mut traced, &ds_b, BATCH, SEED).unwrap();
+    traced.set_trace(false);
+
+    gsplit::obs::flush_thread();
+    let snap = gsplit::obs::tracer().snapshot();
+    let fetches: usize = snap
+        .iter()
+        .flat_map(|t| t.spans.iter())
+        .filter(|s| s.phase == gsplit::obs::Phase::DiskFetch)
+        .count();
+    assert!(fetches > 0, "out-of-core run must record DiskFetch spans");
+    gsplit::obs::tracer().reset();
+
+    assert_stats_bit_identical(&a, &b, "traced disk serial vs untraced");
+    assert_params_bit_identical(&untraced.params, &traced.params, "traced disk params");
+}
+
+#[test]
 fn every_row_bit_identical_to_the_ram_source() {
     // The foundation of everything else in this file: the disk store
     // returns the exact bytes the lazy in-RAM source generated, for every

@@ -1,0 +1,234 @@
+//! Validate Chrome trace-event JSON exported by `gsplit::obs::chrome`
+//! (`gsplit train --trace`, `GSPLIT_TRACE`). CI's `trace-smoke` job runs
+//! this over the traces of a serial, a pipelined, and an out-of-core run
+//! and fails the build on any violation of the export contract:
+//!
+//! * the file parses and `traceEvents` is a non-empty array of `"M"`
+//!   (metadata) and `"X"` (complete) events with well-formed fields;
+//! * every `X` event's `cat` is a known [`Phase`] wire name and its track
+//!   (`pid`) is one of the two the exporter writes;
+//! * `X` events are globally `ts`-sorted, and within each `(pid, tid)`
+//!   track spans nest properly (a span never half-overlaps an enclosing
+//!   one) — the invariant Perfetto's flame layout relies on;
+//! * the phases named by `--expect` (default: the serial core set) each
+//!   appear at least once, and the trace carries at least
+//!   `--min-worker-tracks` / `--min-device-tracks` distinct tracks;
+//! * the `metrics` snapshot blob rides along with a `counters` object.
+//!
+//! Usage:
+//!   cargo run --release --bin check_trace_json -- trace.json
+//!   cargo run --release --bin check_trace_json -- \
+//!       --expect sample,load,compute_fwd,loss,shuffle_fwd_send \
+//!       --min-worker-tracks 2 --min-device-tracks 4 trace.json
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use gsplit::obs::chrome::{PID_DEVICES, PID_THREADS};
+use gsplit::obs::Phase;
+use gsplit::util::JsonValue;
+
+/// Slack for float timestamp comparisons: 1 ns in the µs-denominated
+/// `ts`/`dur` fields (the exporter divides exact integer nanoseconds by
+/// 1000, so errors are pure f64 rounding, far below this).
+const EPS_US: f64 = 1e-3;
+
+fn main() -> Result<()> {
+    let mut expect: Vec<Phase> = vec![Phase::Sample, Phase::Load, Phase::ComputeFwd, Phase::Loss];
+    let mut min_worker_tracks = 1usize;
+    let mut min_device_tracks = 1usize;
+    let mut files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--expect" => {
+                let list = args.next().ok_or_else(|| anyhow!("--expect needs a phase list"))?;
+                expect = list
+                    .split(',')
+                    .map(|s| {
+                        Phase::parse(s.trim())
+                            .ok_or_else(|| anyhow!("--expect: unknown phase `{s}`"))
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            "--min-worker-tracks" => {
+                min_worker_tracks = parse_count(args.next(), "--min-worker-tracks")?
+            }
+            "--min-device-tracks" => {
+                min_device_tracks = parse_count(args.next(), "--min-device-tracks")?
+            }
+            _ => files.push(a),
+        }
+    }
+    ensure!(
+        !files.is_empty(),
+        "usage: check_trace_json [--expect <phases>] [--min-worker-tracks N] \
+         [--min-device-tracks N] <trace.json>..."
+    );
+    for f in &files {
+        let report = check_file(f, &expect, min_worker_tracks, min_device_tracks)
+            .with_context(|| format!("{f}: invalid trace"))?;
+        println!(
+            "{f}: OK ({} events, {} worker track(s), {} device track(s))",
+            report.events, report.worker_tracks, report.device_tracks
+        );
+    }
+    println!("{} trace file(s): all valid", files.len());
+    Ok(())
+}
+
+fn parse_count(arg: Option<String>, flag: &str) -> Result<usize> {
+    arg.ok_or_else(|| anyhow!("{flag} needs a count"))?
+        .parse::<usize>()
+        .map_err(|e| anyhow!("{flag}: {e}"))
+}
+
+struct Report {
+    events: usize,
+    worker_tracks: usize,
+    device_tracks: usize,
+}
+
+fn num_field(v: &JsonValue, key: &str) -> Result<f64> {
+    let x = v.get(key)?.as_f64().ok_or_else(|| anyhow!("`{key}` must be a number"))?;
+    ensure!(x.is_finite(), "`{key}` must be finite, got {x}");
+    Ok(x)
+}
+
+fn check_file(
+    path: &str,
+    expect: &[Phase],
+    min_worker_tracks: usize,
+    min_device_tracks: usize,
+) -> Result<Report> {
+    let text = std::fs::read_to_string(path).context("cannot read file")?;
+    let v = JsonValue::parse(&text).context("not valid JSON")?;
+    let events =
+        v.get("traceEvents")?.as_arr().ok_or_else(|| anyhow!("`traceEvents` must be an array"))?;
+    ensure!(!events.is_empty(), "`traceEvents` must be non-empty");
+
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut seen_phases: BTreeSet<&'static str> = BTreeSet::new();
+    let mut worker_tids: BTreeSet<u64> = BTreeSet::new();
+    let mut device_tids: BTreeSet<u64> = BTreeSet::new();
+    // Per-(pid, tid) stack of open-span end times, for the nesting check.
+    // File order is the exporter's global (t0 asc, t1 desc) order, so an
+    // enclosing span always precedes its children.
+    let mut stacks: std::collections::BTreeMap<(u64, u64), Vec<f64>> = Default::default();
+    let mut n_complete = 0usize;
+
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str().ok_or_else(|| anyhow!("`ph` must be a string")))
+            .with_context(|| format!("event #{i}"))?;
+        match ph {
+            "M" => check_metadata(ev).with_context(|| format!("event #{i} (metadata)"))?,
+            "X" => {
+                check_complete(
+                    ev,
+                    &mut last_ts,
+                    &mut seen_phases,
+                    &mut worker_tids,
+                    &mut device_tids,
+                    &mut stacks,
+                )
+                .with_context(|| format!("event #{i} (complete)"))?;
+                n_complete += 1;
+            }
+            other => bail!("event #{i}: unexpected ph {other:?} (exporter only writes M and X)"),
+        }
+    }
+    ensure!(n_complete > 0, "trace has metadata but no complete (`X`) events");
+    for p in expect {
+        ensure!(
+            seen_phases.contains(p.name()),
+            "expected phase `{}` never appears (saw: {:?})",
+            p.name(),
+            seen_phases
+        );
+    }
+    ensure!(
+        worker_tids.len() >= min_worker_tracks,
+        "only {} worker track(s), expected >= {min_worker_tracks}",
+        worker_tids.len()
+    );
+    ensure!(
+        device_tids.len() >= min_device_tracks,
+        "only {} device track(s), expected >= {min_device_tracks}",
+        device_tids.len()
+    );
+    let metrics = v.get("metrics").context("`metrics` snapshot missing")?;
+    ensure!(
+        metrics.get("counters").map(|c| c.as_obj().is_some()).unwrap_or(false),
+        "`metrics.counters` must be an object"
+    );
+    Ok(Report {
+        events: n_complete,
+        worker_tracks: worker_tids.len(),
+        device_tracks: device_tids.len(),
+    })
+}
+
+fn check_metadata(ev: &JsonValue) -> Result<()> {
+    let name = ev.get("name")?.as_str().ok_or_else(|| anyhow!("`name` must be a string"))?;
+    ensure!(
+        name == "process_name" || name == "thread_name",
+        "unexpected metadata record `{name}`"
+    );
+    num_field(ev, "pid")?;
+    num_field(ev, "tid")?;
+    let label = ev.get("args")?.get("name")?.as_str().unwrap_or("");
+    ensure!(!label.is_empty(), "metadata `args.name` must be a non-empty string");
+    Ok(())
+}
+
+fn check_complete(
+    ev: &JsonValue,
+    last_ts: &mut f64,
+    seen_phases: &mut BTreeSet<&'static str>,
+    worker_tids: &mut BTreeSet<u64>,
+    device_tids: &mut BTreeSet<u64>,
+    stacks: &mut std::collections::BTreeMap<(u64, u64), Vec<f64>>,
+) -> Result<()> {
+    let name = ev.get("name")?.as_str().ok_or_else(|| anyhow!("`name` must be a string"))?;
+    ensure!(!name.is_empty(), "`name` must be non-empty");
+    let cat = ev.get("cat")?.as_str().ok_or_else(|| anyhow!("`cat` must be a string"))?;
+    let phase = Phase::parse(cat).ok_or_else(|| anyhow!("unknown phase `{cat}`"))?;
+    seen_phases.insert(phase.name());
+    let ts = num_field(ev, "ts")?;
+    let dur = num_field(ev, "dur")?;
+    ensure!(ts >= 0.0 && dur >= 0.0, "`ts`/`dur` must be >= 0 (ts={ts}, dur={dur})");
+    ensure!(
+        ts >= *last_ts,
+        "X events must be globally ts-sorted ({ts} after {last_ts})"
+    );
+    *last_ts = ts;
+    let pid = num_field(ev, "pid")? as u64;
+    let tid = num_field(ev, "tid")? as u64;
+    match pid {
+        PID_THREADS => {
+            worker_tids.insert(tid);
+        }
+        PID_DEVICES => {
+            device_tids.insert(tid);
+        }
+        other => bail!("unexpected pid {other} (exporter writes pid 1 and 2 only)"),
+    }
+    // Nesting: drop spans that ended before this one starts; whatever is
+    // still open must fully contain it.
+    let stack = stacks.entry((pid, tid)).or_default();
+    while stack.last().is_some_and(|&end| end <= ts + EPS_US) {
+        stack.pop();
+    }
+    let end = ts + dur;
+    if let Some(&open_end) = stack.last() {
+        ensure!(
+            end <= open_end + EPS_US,
+            "span `{name}` [{ts}, {end}] half-overlaps an open span ending at {open_end} \
+             on track ({pid}, {tid})"
+        );
+    }
+    stack.push(end);
+    Ok(())
+}
