@@ -150,7 +150,7 @@ fn trace_consistency_section(suite: &mut BenchSuite) {
                 PhaseGroup::Sampling => sampling += span.secs(),
                 PhaseGroup::Loading => loading += span.secs(),
                 PhaseGroup::Fb => fb += span.secs(),
-                PhaseGroup::Offline => {}
+                PhaseGroup::Offline | PhaseGroup::Serving => {}
             }
         }
     }

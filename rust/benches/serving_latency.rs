@@ -1,0 +1,136 @@
+//! **Serving latency** — online-inference tail latency and throughput of
+//! `gsplit serve`'s micro-batching service, swept over cache policy ×
+//! budget × pipeline worker count under a seeded Zipf request stream
+//! (closed loop, so measured latency is queueing + micro-batch wait +
+//! split-parallel forward, not arrival-rate fiction).
+//!
+//! Emits `BENCH_serving.json`: nearest-rank p50/p95/p99 seconds and
+//! served requests/s per configuration. Unlike the paper-figure benches
+//! these are real wall-clock numbers (the forward actually runs), so the
+//! committed baseline tolerance is generous; the stream itself is
+//! seed-deterministic (`serving::traffic::request_stream`).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use std::sync::Arc;
+
+use bench_common::{partition_cached, presample_cached, smoke, SEED};
+use gsplit::bench_harness::BenchSuite;
+use gsplit::cache::{CachePolicy, ResidentCache};
+use gsplit::devices::Topology;
+use gsplit::graph::StandIn;
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::Strategy;
+use gsplit::rng::derive_seed;
+use gsplit::runtime::NativeBackend;
+use gsplit::serving::{self, traffic, ServeConfig};
+use gsplit::train::{ExecMode, PipelineConfig, Trainer};
+use gsplit::util::Table;
+
+const K: usize = 4;
+const FANOUT: usize = 5;
+const LAYERS: usize = 2;
+
+fn main() {
+    let mut suite = BenchSuite::new("serving");
+    // Real wall-clock serving on the Tiny stand-in in both modes — the
+    // bench measures the service machinery, not graph scale.
+    let ds = StandIn::Tiny.load().unwrap();
+    let requests = if smoke() { 200 } else { 2000 };
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: ds.features.dim(),
+        hidden: 64,
+        num_classes: ds.labels.num_classes,
+        num_layers: LAYERS,
+    };
+    let backend = NativeBackend::new();
+    let w = presample_cached(&ds, 3, FANOUT, LAYERS);
+    let part = partition_cached(&ds, &w, Strategy::GSplit, K);
+    let topo = Topology::for_gpus(K, 1.0);
+    let traffic_cfg = traffic::TrafficConfig {
+        requests,
+        concurrency: 8,
+        skew: 1.0,
+        seed: SEED,
+        vertices: ds.graph.num_vertices(),
+    };
+    let serve_seed = derive_seed(SEED, &[0x1F5E]);
+
+    println!(
+        "Serving latency — {requests} Zipf(s=1.0) requests, {} closed-loop clients,\n\
+         max-batch 32, max-wait 500us, queue 256, on tiny ({} vertices, k={K}).\n",
+        traffic_cfg.concurrency,
+        ds.graph.num_vertices(),
+    );
+    let mut table =
+        Table::new(&["Policy", "Budget", "Workers", "p50(ms)", "p95(ms)", "p99(ms)", "req/s"])
+            .left(0);
+
+    for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+        for budget in [64u64, 1024] {
+            // An absent cache has no budget axis — sweep it once.
+            if policy == CachePolicy::None && budget != 64 {
+                continue;
+            }
+            for workers in [0usize, 2] {
+                let mut trainer =
+                    Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+                if policy != CachePolicy::None {
+                    let cache = Arc::new(ResidentCache::build(
+                        policy,
+                        &w.vertex,
+                        budget,
+                        trainer.partitioning(),
+                        &topo,
+                        &ds.features,
+                    ));
+                    trainer.set_cache(Some(cache)).unwrap();
+                }
+                if workers > 0 {
+                    trainer.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(
+                        workers,
+                    )));
+                }
+                let serve_cfg = ServeConfig {
+                    max_batch: 32,
+                    max_wait: std::time::Duration::from_micros(500),
+                    queue_cap: 256,
+                    seed: serve_seed,
+                };
+                let (res, report) = serving::run(&mut trainer, &ds, serve_cfg, |client| {
+                    traffic::run_closed_loop(client, &traffic_cfg)
+                })
+                .unwrap();
+                res.unwrap();
+                assert_eq!(report.served, requests as u64);
+
+                let (p50, p95, p99) =
+                    (report.percentile(50.0), report.percentile(95.0), report.percentile(99.0));
+                let budget_label = if policy == CachePolicy::None { 0 } else { budget };
+                let key = format!("{}/b{budget_label}/w{workers}", policy.name());
+                suite.metric(&format!("{key}/p50_s"), p50);
+                suite.metric(&format!("{key}/p95_s"), p95);
+                suite.metric(&format!("{key}/p99_s"), p99);
+                suite.metric(&format!("{key}/rps"), report.rps());
+                table.row(vec![
+                    policy.name().to_string(),
+                    budget_label.to_string(),
+                    workers.to_string(),
+                    format!("{:.3}", p50 * 1e3),
+                    format!("{:.3}", p95 * 1e3),
+                    format!("{:.3}", p99 * 1e3),
+                    format!("{:.0}", report.rps()),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\nExpectation: caching lowers the loading share of each micro-batch\n\
+         (partitioned > distributed > none at equal budget), and pipeline\n\
+         workers raise throughput at a small per-request latency cost."
+    );
+    suite.finish();
+}

@@ -38,6 +38,7 @@ pub mod presample;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod serving;
 pub mod split;
 pub mod testing;
 pub mod train;

@@ -3,14 +3,18 @@
 //! Subcommands:
 //!   train      end-to-end split-parallel training (native backend by
 //!              default; `--backend pjrt` with the `pjrt` feature)
+//!   serve      online inference service: train briefly, then answer
+//!              Zipf-distributed per-vertex requests in micro-batches
 //!   epoch      run one counted epoch of any engine and print S/L/FB
 //!   partition  run the offline splitting pipeline (presample + partition)
 //!   gen        generate and cache a stand-in dataset graph
 //!   info       print dataset/topology/manifest information
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
+use gsplit::bench_harness::BenchSuite;
 use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
 use gsplit::cli::Args;
 use gsplit::config::{parse_dataset, parse_model};
@@ -22,7 +26,9 @@ use gsplit::model::ModelConfig;
 use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
+use gsplit::rng::derive_seed;
 use gsplit::runtime::{Backend, NativeBackend};
+use gsplit::serving::{self, traffic};
 use gsplit::train::{train_epoch, ExecMode, Trainer};
 use gsplit::util::{fmt_secs, Table};
 
@@ -31,6 +37,7 @@ fn main() -> Result<()> {
     let sub = argv.next().unwrap_or_else(|| "help".to_string());
     match sub.as_str() {
         "train" => cmd_train(argv),
+        "serve" => cmd_serve(argv),
         "epoch" => cmd_epoch(argv),
         "partition" => cmd_partition(argv),
         "gen" => cmd_gen(argv),
@@ -44,6 +51,7 @@ fn main() -> Result<()> {
                 "gsplit — split-parallel GNN training (GSplit reproduction)\n\n\
                  Subcommands:\n  \
                  train      end-to-end split-parallel training (real compute)\n  \
+                 serve      online inference: Zipf traffic through the micro-batching service\n  \
                  epoch      counted epoch of one engine; prints the S/L/FB breakdown\n  \
                  partition  offline pipeline: presample + partition, prints quality\n  \
                  gen        generate and cache a stand-in dataset graph\n  \
@@ -233,6 +241,218 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
         gsplit::util::fmt_bytes(split.disk_bytes),
         gsplit::util::fmt_bytes(split.total()),
     );
+    if let Some(path) = trace_path {
+        let summary = gsplit::obs::chrome::export(std::path::Path::new(&path))?;
+        println!(
+            "# trace: {path} | {} events | {} worker track(s) | {} device track(s) | {} dropped",
+            summary.events, summary.threads, summary.devices, summary.dropped
+        );
+    }
+    Ok(())
+}
+
+/// `gsplit serve`: warm the model up with a short training run, then
+/// stand up the online inference service and drive a seeded Zipf request
+/// stream through it from closed-loop clients. Prints latency percentiles
+/// and throughput; `--bench-json` writes them as `BENCH_serving.json` in
+/// the repo bench contract.
+fn cmd_serve(argv: impl Iterator<Item = String>) -> Result<()> {
+    let spec = opts![
+        ("requests", true, "inference requests to serve (default 1000)"),
+        ("concurrency", true, "closed-loop client threads (default 4)"),
+        ("skew", true, "Zipf popularity exponent of the request stream (default 1.0)"),
+        ("max-batch", true, "micro-batch flush size (default 32)"),
+        ("max-wait-us", true, "micro-batch flush age in microseconds; 0 = per-request batches (default 2000)"),
+        ("queue-cap", true, "admission queue bound; submits beyond it are rejected (default 1024)"),
+        ("train-iters", true, "warm-up training iterations before serving (default 20)"),
+        ("batch", true, "warm-up mini-batch size (default 256)"),
+        ("gpus", true, "simulated GPUs (default 4)"),
+        ("lr", true, "warm-up learning rate (default 0.2)"),
+        ("vertices", true, "SBM graph size (default 16384)"),
+        ("seed", true, "random seed (default 42)"),
+        ("model", true, "sage|gat (default sage)"),
+        ("feat", true, "input feature dim, native backend (default 32)"),
+        ("hidden", true, "hidden dim, native backend (default 64)"),
+        ("classes", true, "SBM communities = classes, native backend (default 8)"),
+        ("layers", true, "GNN layers, native backend (default 3)"),
+        ("fanout", true, "neighbor fanout, native backend (default 5)"),
+        ("backend", true, "native|pjrt (default native)"),
+        ("artifacts", true, "artifacts dir for --backend pjrt (default artifacts)"),
+        ("parallel-workers", true, "worker threads for the pipelined executor (0 = serial, default 0)"),
+        ("cache-policy", true, "feature cache: none|distributed|partitioned (default none)"),
+        ("cache-budget", true, "cached feature rows per simulated GPU (default 4096)"),
+        ("graph", true, "serve out-of-core from a v2 .gsg (features stay on disk; overrides shape flags)"),
+        ("bench-json", false, "write BENCH_serving.json (to GSPLIT_BENCH_JSON_DIR, default cwd)"),
+        ("trace", true, "write a Chrome trace-event JSON of the run to this path"),
+    ];
+    let a = Args::parse(argv, spec, "online split-parallel inference with micro-batching + Zipf traffic")?;
+    let trace_path: Option<String> = a
+        .get("trace")
+        .map(String::from)
+        .or_else(|| gsplit::obs::tracer().env_path().map(String::from));
+    if trace_path.is_some() {
+        gsplit::obs::set_enabled(true);
+    }
+    let (backend, mut cfg, fanout) = resolve_backend(&a)?;
+    let seed = a.get_u64("seed", 42)?;
+    let ds = match a.get("graph") {
+        Some(path) => {
+            let ds = Dataset::open_ooc(std::path::Path::new(path), 0.25, seed ^ 0x5717)?;
+            cfg.feat_dim = ds.features.dim();
+            cfg.num_classes = ds.labels.num_classes;
+            println!(
+                "# out-of-core: {path} | {} vertices | {} edges | feat {} on disk",
+                ds.graph.num_vertices(),
+                ds.graph.num_edges(),
+                cfg.feat_dim
+            );
+            ds
+        }
+        None => Dataset::sbm_learnable(
+            a.get_usize("vertices", 16384)?,
+            cfg.num_classes,
+            cfg.feat_dim,
+            0.6,
+            seed,
+        ),
+    };
+    let k = a.get_usize("gpus", 4)?;
+    let batch = a.get_usize("batch", 256)?;
+
+    // Offline stage, same as `train`: presample + weighted min-cut
+    // partition. Serving reuses the hotness orders for its caches.
+    let pw = presample(
+        &ds.graph,
+        &ds.labels.train_set,
+        &PresampleConfig {
+            epochs: 3,
+            batch_size: batch,
+            fanouts: vec![fanout; cfg.num_layers],
+            seed,
+        },
+    );
+    let mask = train_mask(&ds);
+    let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
+    let workers = a.get_usize("parallel-workers", 0)?;
+    let mut trainer =
+        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?
+            .with_parallel_workers(workers);
+
+    let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    if policy != CachePolicy::None {
+        if !(1..=8).contains(&k) {
+            bail!("--cache-policy needs a modeled topology: --gpus must be between 1 and 8");
+        }
+        let budget = a.get_u64("cache-budget", 4096)?;
+        let topo = Topology::for_gpus(k, 1.0);
+        let cache = Arc::new(ResidentCache::build(
+            policy,
+            &pw.vertex,
+            budget,
+            trainer.partitioning(),
+            &topo,
+            &ds.features,
+        ));
+        println!(
+            "# cache {} | budget {budget} rows/GPU | coverage {:.1}%",
+            policy.name(),
+            cache.placement().coverage() * 100.0,
+        );
+        trainer.set_cache(Some(cache))?;
+    }
+
+    let exec = match trainer.exec_mode() {
+        ExecMode::Serial => "serial".to_string(),
+        ExecMode::Pipelined(p) => format!("pipelined({} workers)", p.workers),
+    };
+    println!(
+        "# backend {} | {}-layer {} {}->{}->{} | k={k} | exec {exec}",
+        backend.name(),
+        cfg.num_layers,
+        cfg.kind.name(),
+        cfg.feat_dim,
+        cfg.hidden,
+        cfg.num_classes
+    );
+
+    // Warm-up: a short training run so served logits come from a real
+    // model, not random init. Serving itself never updates parameters.
+    let train_iters = a.get_usize("train-iters", 20)?;
+    let mut done = 0usize;
+    let mut epoch = 0u64;
+    while done < train_iters {
+        for s in train_epoch(&mut trainer, &ds, batch, epoch)? {
+            done += 1;
+            if done >= train_iters {
+                println!("# warm-up: {done} iters | loss {:.4} | acc {:.4}", s.loss, s.accuracy());
+                break;
+            }
+        }
+        epoch += 1;
+    }
+
+    let serve_cfg = serving::ServeConfig {
+        max_batch: a.get_usize("max-batch", 32)?,
+        max_wait: Duration::from_micros(a.get_u64("max-wait-us", 2000)?),
+        queue_cap: a.get_usize("queue-cap", 1024)?,
+        // Decorrelated from the training seed so eval-time neighborhoods
+        // are not the warm-up's; fixed per run for reproducible logits.
+        seed: derive_seed(seed, &[0x1F5E]),
+    };
+    let traffic_cfg = traffic::TrafficConfig {
+        requests: a.get_usize("requests", 1000)?,
+        concurrency: a.get_usize("concurrency", 4)?,
+        skew: a.get_f64("skew", 1.0)?,
+        seed,
+        vertices: ds.graph.num_vertices(),
+    };
+    println!(
+        "# serving {} requests | zipf s={} | {} clients | max-batch {} | max-wait {}us | queue {}",
+        traffic_cfg.requests,
+        traffic_cfg.skew,
+        traffic_cfg.concurrency,
+        serve_cfg.max_batch,
+        serve_cfg.max_wait.as_micros(),
+        serve_cfg.queue_cap,
+    );
+    let (traffic_res, report) = serving::run(&mut trainer, &ds, serve_cfg, |client| {
+        traffic::run_closed_loop(client, &traffic_cfg)
+    })?;
+    let traffic_report = traffic_res?;
+
+    let (p50, p95, p99) =
+        (report.percentile(50.0), report.percentile(95.0), report.percentile(99.0));
+    println!(
+        "# served {} | batches {} | mean batch {:.1} | rejected(retried) {}",
+        report.served,
+        report.batches,
+        report.served as f64 / (report.batches.max(1)) as f64,
+        traffic_report.rejected,
+    );
+    println!(
+        "# latency p50 {:.3}ms | p95 {:.3}ms | p99 {:.3}ms | throughput {:.0} req/s",
+        p50 * 1e3,
+        p95 * 1e3,
+        p99 * 1e3,
+        report.rps(),
+    );
+    let split = LoadStats::sum(trainer.load_stats());
+    println!(
+        "# loading: local {} | peer(nvlink) {} | host(pcie) {} | disk {} | total {}",
+        gsplit::util::fmt_bytes(split.local_bytes),
+        gsplit::util::fmt_bytes(split.peer_bytes),
+        gsplit::util::fmt_bytes(split.host_bytes),
+        gsplit::util::fmt_bytes(split.disk_bytes),
+        gsplit::util::fmt_bytes(split.total()),
+    );
+    if a.flag("bench-json") {
+        let mut suite = BenchSuite::new("serving");
+        suite.metric("serve/p50_s", p50);
+        suite.metric("serve/p95_s", p95);
+        suite.metric("serve/p99_s", p99);
+        suite.metric("serve/rps", report.rps());
+        suite.finish();
+    }
     if let Some(path) = trace_path {
         let summary = gsplit::obs::chrome::export(std::path::Path::new(&path))?;
         println!(

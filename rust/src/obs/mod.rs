@@ -87,6 +87,12 @@ pub enum Phase {
     DiskFetch,
     /// Offline `CacheStore::build` bulk read.
     CacheBuild,
+    /// One served micro-batch end to end: admission-queue drain through
+    /// response fan-out (`crate::serving`).
+    ServeBatch,
+    /// The split-parallel forward-only inference inside a served
+    /// micro-batch (`Trainer::infer`: plan + exchange + compute).
+    ServeInfer,
 }
 
 /// Paper-style grouping of [`Phase`]s into the Figure-3 S/L/FB breakdown.
@@ -100,11 +106,14 @@ pub enum PhaseGroup {
     Fb,
     /// Offline/one-time work outside the steady-state iteration.
     Offline,
+    /// Online inference service work (`gsplit serve`), outside the
+    /// training-iteration S/L/FB breakdown.
+    Serving,
 }
 
 impl Phase {
     /// Every phase, for exhaustive iteration in validators and benches.
-    pub const ALL: [Phase; 16] = [
+    pub const ALL: [Phase; 18] = [
         Phase::Sample,
         Phase::Load,
         Phase::SampleAhead,
@@ -121,6 +130,8 @@ impl Phase {
         Phase::GradReduce,
         Phase::DiskFetch,
         Phase::CacheBuild,
+        Phase::ServeBatch,
+        Phase::ServeInfer,
     ];
 
     /// Stable wire name (the Chrome event `cat` field).
@@ -142,6 +153,8 @@ impl Phase {
             Phase::GradReduce => "grad_reduce",
             Phase::DiskFetch => "disk_fetch",
             Phase::CacheBuild => "cache_build",
+            Phase::ServeBatch => "serve_batch",
+            Phase::ServeInfer => "serve_infer",
         }
     }
 
@@ -156,6 +169,7 @@ impl Phase {
             Phase::Sample | Phase::SampleAhead => PhaseGroup::Sampling,
             Phase::Load | Phase::LoadExchange | Phase::DiskFetch => PhaseGroup::Loading,
             Phase::CacheBuild => PhaseGroup::Offline,
+            Phase::ServeBatch | Phase::ServeInfer => PhaseGroup::Serving,
             _ => PhaseGroup::Fb,
         }
     }
@@ -503,6 +517,8 @@ mod tests {
         assert_eq!(Phase::ComputeFwd.group(), PhaseGroup::Fb);
         assert_eq!(Phase::GradReduce.group(), PhaseGroup::Fb);
         assert_eq!(Phase::CacheBuild.group(), PhaseGroup::Offline);
+        assert_eq!(Phase::ServeBatch.group(), PhaseGroup::Serving);
+        assert_eq!(Phase::ServeInfer.group(), PhaseGroup::Serving);
     }
 
     #[test]

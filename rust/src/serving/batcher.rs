@@ -1,0 +1,129 @@
+//! Dynamic micro-batching state machine (DESIGN.md §Serving).
+//!
+//! A [`MicroBatcher`] coalesces admitted requests into micro-batches,
+//! flushing whichever comes first: the batch fills to `max_batch`, or
+//! `max_wait` elapses since the batch's **first** request arrived (so a
+//! lone request is never held longer than `max_wait`). It is a pure state
+//! machine — the caller supplies every timestamp and drives the clock —
+//! which is what makes the flush rules unit-testable without threads or
+//! sleeps.
+
+use std::time::{Duration, Instant};
+
+/// Coalesces items into micro-batches; flush on size or age, whichever
+/// comes first. `max_wait == 0` degrades to one batch per item.
+#[derive(Debug)]
+pub struct MicroBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    buf: Vec<T>,
+    /// Flush-by time of the pending batch; `Some` iff `buf` is non-empty.
+    deadline: Option<Instant>,
+}
+
+impl<T> MicroBatcher<T> {
+    /// `max_batch` is clamped to at least 1.
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        MicroBatcher { max_batch: max_batch.max(1), max_wait, buf: Vec::new(), deadline: None }
+    }
+
+    /// Add one item at time `now`. Returns the completed batch when this
+    /// push fills it to `max_batch` (or immediately under zero `max_wait`).
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.buf.is_empty() {
+            self.deadline = Some(now + self.max_wait);
+        }
+        self.buf.push(item);
+        if self.buf.len() >= self.max_batch || self.max_wait.is_zero() {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Whether the pending batch's `max_wait` deadline has passed.
+    pub fn due(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
+    }
+
+    /// Flush-by time of the pending batch, if one is pending — the longest
+    /// the serve loop may block waiting for more requests.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Take the pending batch (deadline or shutdown drain); `None` when
+    /// nothing is pending.
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        self.deadline = None;
+        Some(std::mem::take(&mut self.buf))
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = MicroBatcher::new(3, Duration::from_secs(60));
+        let t = Instant::now();
+        assert_eq!(b.push(1, t), None);
+        assert_eq!(b.push(2, t), None);
+        assert_eq!(b.push(3, t), Some(vec![1, 2, 3]));
+        assert!(b.is_empty());
+        assert_eq!(b.deadline(), None);
+        // The next batch starts fresh.
+        assert_eq!(b.push(4, t), None);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn zero_wait_degrades_to_per_item_batches() {
+        let mut b = MicroBatcher::new(8, Duration::ZERO);
+        let t = Instant::now();
+        assert_eq!(b.push(7, t), Some(vec![7]));
+        assert_eq!(b.push(9, t), Some(vec![9]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_is_anchored_to_the_first_item() {
+        let wait = Duration::from_millis(10);
+        let mut b = MicroBatcher::new(100, wait);
+        let t0 = Instant::now();
+        assert_eq!(b.push('a', t0), None);
+        // A later push must not extend the deadline.
+        assert_eq!(b.push('b', t0 + Duration::from_millis(5)), None);
+        assert!(!b.due(t0));
+        assert!(!b.due(t0 + Duration::from_millis(9)));
+        assert!(b.due(t0 + wait));
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        assert_eq!(b.flush(), Some(vec!['a', 'b']));
+        assert!(!b.due(t0 + Duration::from_secs(1)), "empty batcher is never due");
+    }
+
+    #[test]
+    fn flush_on_empty_is_none() {
+        let mut b: MicroBatcher<u32> = MicroBatcher::new(4, Duration::from_millis(1));
+        assert_eq!(b.flush(), None);
+        assert_eq!(b.deadline(), None);
+    }
+
+    #[test]
+    fn max_batch_zero_clamps_to_one() {
+        let mut b = MicroBatcher::new(0, Duration::from_secs(60));
+        assert_eq!(b.push(1, Instant::now()), Some(vec![1]));
+    }
+}

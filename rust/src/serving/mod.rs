@@ -1,0 +1,425 @@
+//! Online split-parallel inference service (`gsplit serve`, DESIGN.md
+//! §Serving).
+//!
+//! The trainer answers *batches*; a production system answers *queries*.
+//! This module turns a trained [`Trainer`] into a long-running service:
+//!
+//! * **admission** — requests enter through a bounded queue
+//!   ([`ServeClient::submit`]). At capacity the submit **rejects with a
+//!   descriptive [`AdmitError`]** instead of blocking, so a traffic spike
+//!   degrades into explicit backpressure, never into an unbounded queue or
+//!   a stuck client;
+//! * **dynamic micro-batching** — the serve loop coalesces admitted
+//!   requests with a [`MicroBatcher`]: flush when the batch reaches
+//!   `max_batch` or when the oldest request has waited `max_wait`,
+//!   whichever comes first (`max_wait == 0` degrades to per-request
+//!   batches);
+//! * **split-parallel inference** — each micro-batch runs through
+//!   [`Trainer::infer`]: cooperative stateless sampling, the cache-aware
+//!   loading stage (same `CachePolicy`/`FeatureSource` paths as training,
+//!   RAM or out-of-core), and the forward pass on the serial or pipelined
+//!   executor. No backward, no parameter update, no labels;
+//! * **shutdown drain** — dropping the [`ServeClient`] closes the queue;
+//!   the loop finishes every in-flight request before exiting, so
+//!   submitted work is never silently dropped.
+//!
+//! Served logits are **bit-identical** to an offline
+//! [`Trainer::infer`] call on the same vertices: per-vertex stateless
+//! sampling makes each neighborhood independent of micro-batch
+//! composition, and the executors are bit-identical to each other by the
+//! §Executor contract. `tests/serving_equivalence.rs` pins this across
+//! batch boundaries × cache policies × worker counts × RAM/disk backing.
+
+mod batcher;
+pub mod traffic;
+
+pub use batcher::MicroBatcher;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Dataset;
+use crate::obs::{metrics, Phase};
+use crate::span;
+use crate::train::Trainer;
+use crate::Vid;
+
+/// Serving knobs: admission-queue bound, micro-batch flush rules, and the
+/// sampling seed served responses are pinned to.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Flush a micro-batch at this many requests.
+    pub max_batch: usize,
+    /// Flush a micro-batch when its oldest request has waited this long
+    /// (zero ⇒ one batch per request).
+    pub max_wait: Duration,
+    /// Bounded admission-queue capacity; submits beyond it are rejected
+    /// with [`AdmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Sampling seed: every micro-batch samples with per-vertex streams
+    /// derived from this one seed, which is what makes served logits
+    /// independent of micro-batch grouping (DESIGN.md §Serving).
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(2000),
+            queue_cap: 1024,
+            seed: 0,
+        }
+    }
+}
+
+/// Why a request was not admitted. Admission never blocks: the caller
+/// always gets either a [`PendingResponse`] or one of these, immediately.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded admission queue is at capacity — backpressure; retry
+    /// later or shed the request.
+    QueueFull { cap: usize },
+    /// The serve loop has exited; no further requests can be answered.
+    ShuttingDown,
+    /// The requested vertex is not in the served graph.
+    UnknownVertex { vid: Vid, num_vertices: usize },
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::QueueFull { cap } => {
+                write!(f, "admission queue full ({cap} requests in flight); retry later")
+            }
+            AdmitError::ShuttingDown => write!(f, "serving loop is shutting down"),
+            AdmitError::UnknownVertex { vid, num_vertices } => {
+                write!(f, "vertex {vid} not in served graph ({num_vertices} vertices)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// One answered request: the requested vertex's top-layer logits and its
+/// admission-to-response latency.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub vid: Vid,
+    /// `num_classes` logits, bit-identical to an offline
+    /// [`Trainer::infer`] on the same seed.
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Handle to one admitted request; [`PendingResponse::wait`] blocks until
+/// the serve loop answers (or drops) it.
+#[derive(Debug)]
+pub struct PendingResponse {
+    rx: Receiver<std::result::Result<Response, String>>,
+}
+
+impl PendingResponse {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow!("inference failed: {e}")),
+            Err(_) => Err(anyhow!("serving loop dropped the request before answering")),
+        }
+    }
+}
+
+/// One request in flight between admission and the serve loop.
+struct Envelope {
+    vid: Vid,
+    tx: mpsc::Sender<std::result::Result<Response, String>>,
+    admitted: Instant,
+}
+
+/// Client side of the admission queue. Clonable across threads is not
+/// needed — share it by reference (submission is `&self`); dropping the
+/// last reference closes the queue and lets the serve loop drain + exit.
+#[derive(Debug)]
+pub struct ServeClient {
+    tx: SyncSender<Envelope>,
+    queue_cap: usize,
+    num_vertices: usize,
+}
+
+impl ServeClient {
+    /// Admit one per-vertex inference request. Never blocks: at capacity
+    /// this returns [`AdmitError::QueueFull`] immediately.
+    pub fn submit(&self, vid: Vid) -> std::result::Result<PendingResponse, AdmitError> {
+        if (vid as usize) >= self.num_vertices {
+            return Err(AdmitError::UnknownVertex { vid, num_vertices: self.num_vertices });
+        }
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope { vid, tx, admitted: Instant::now() };
+        match self.tx.try_send(env) {
+            Ok(()) => Ok(PendingResponse { rx }),
+            Err(TrySendError::Full(_)) => Err(AdmitError::QueueFull { cap: self.queue_cap }),
+            Err(TrySendError::Disconnected(_)) => Err(AdmitError::ShuttingDown),
+        }
+    }
+
+    /// Number of vertices in the served graph.
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+}
+
+/// Aggregate serving statistics for one [`run`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Requests answered (duplicates within a micro-batch each count).
+    pub served: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Admission-to-response latency of every served request, seconds.
+    pub latencies_s: Vec<f64>,
+    /// Wall time of the serve loop, admission open through drain.
+    pub wall: Duration,
+}
+
+impl ServeReport {
+    /// Nearest-rank latency percentile (`p` in 0..=100); 0 when nothing
+    /// was served.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let idx = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    /// Served requests per second of loop wall time.
+    pub fn rps(&self) -> f64 {
+        self.served as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run the serving loop around a client closure: the loop serves on a
+/// scoped thread while `f` drives traffic through the [`ServeClient`] on
+/// the calling thread. When `f` returns (or unwinds) the client drops,
+/// the queue closes, the loop drains every in-flight request, and the
+/// [`ServeReport`] comes back with `f`'s result.
+///
+/// The trainer must already hold trained parameters; serving never
+/// updates them and never touches `ds.labels`.
+pub fn run<R>(
+    trainer: &mut Trainer<'_>,
+    ds: &Dataset,
+    cfg: ServeConfig,
+    f: impl FnOnce(&ServeClient) -> R,
+) -> Result<(R, ServeReport)> {
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_cap.max(1));
+    let num_vertices = ds.graph.num_vertices();
+    let queue_cap = cfg.queue_cap.max(1);
+    thread::scope(|scope| {
+        let handle = scope.spawn(move || serve_loop(trainer, ds, &cfg, rx));
+        // The client lives inside this scope so an unwinding `f` still
+        // drops it, closing the queue — the loop always drains and exits,
+        // and the scope can always join.
+        let client = ServeClient { tx, queue_cap, num_vertices };
+        let out = f(&client);
+        drop(client);
+        let report = handle.join().map_err(|_| anyhow!("serve loop panicked"))??;
+        Ok((out, report))
+    })
+}
+
+/// The serve loop: gather one micro-batch (flush on deadline, fill, or
+/// shutdown drain), run it, fan responses out, repeat until the queue is
+/// closed and empty.
+fn serve_loop(
+    trainer: &mut Trainer<'_>,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+    rx: Receiver<Envelope>,
+) -> Result<ServeReport> {
+    crate::obs::set_thread_label("serve-loop");
+    let requests_ctr = metrics::registry().counter("serve_requests", &[]);
+    let batches_ctr = metrics::registry().counter("serve_batches", &[]);
+    let mut batcher: MicroBatcher<Envelope> = MicroBatcher::new(cfg.max_batch, cfg.max_wait);
+    let mut report = ServeReport::default();
+    let t0 = Instant::now();
+    let mut done = false;
+    while !done || !batcher.is_empty() {
+        // --- Gather one micro-batch ---
+        let batch: Vec<Envelope> = loop {
+            if done {
+                // Queue closed: drain whatever is pending as a final batch.
+                match batcher.flush() {
+                    Some(b) => break b,
+                    None => break Vec::new(),
+                }
+            }
+            let now = Instant::now();
+            if batcher.due(now) {
+                break batcher.flush().expect("due batcher has a pending batch");
+            }
+            // Block until the pending batch's deadline (or an idle poll
+            // tick when nothing is pending) for the next request.
+            let wait = match batcher.deadline() {
+                Some(deadline) => deadline.saturating_duration_since(now),
+                None => Duration::from_millis(50),
+            };
+            match rx.recv_timeout(wait) {
+                Ok(env) => {
+                    requests_ctr.inc();
+                    if let Some(b) = batcher.push(env, Instant::now()) {
+                        break b;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {} // re-check due()
+                Err(RecvTimeoutError::Disconnected) => done = true,
+            }
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        serve_one_batch(trainer, ds, cfg, batch, &mut report)?;
+        batches_ctr.inc();
+    }
+    report.wall = t0.elapsed();
+    Ok(report)
+}
+
+/// Execute one micro-batch: dedupe vertices (first-seen order), run the
+/// split-parallel forward, fan each requester its row. An inference error
+/// is fanned to every requester in the batch, then propagated.
+fn serve_one_batch(
+    trainer: &mut Trainer<'_>,
+    ds: &Dataset,
+    cfg: &ServeConfig,
+    batch: Vec<Envelope>,
+    report: &mut ServeReport,
+) -> Result<()> {
+    let _s = span!(Phase::ServeBatch);
+    let mut uniq: Vec<Vid> = Vec::with_capacity(batch.len());
+    let mut row_of: HashMap<Vid, usize> = HashMap::with_capacity(batch.len());
+    for env in &batch {
+        if !row_of.contains_key(&env.vid) {
+            row_of.insert(env.vid, uniq.len());
+            uniq.push(env.vid);
+        }
+    }
+    // The seed is the same for every micro-batch: per-vertex stateless
+    // streams make repeat requests for a vertex bit-identical no matter
+    // which batch they land in.
+    match trainer.infer(ds, &uniq, cfg.seed) {
+        Ok(flat) => {
+            let c = trainer.params.cfg.num_classes;
+            let now = Instant::now();
+            report.batches += 1;
+            for env in batch {
+                let i = row_of[&env.vid];
+                let latency = now.saturating_duration_since(env.admitted);
+                report.served += 1;
+                report.latencies_s.push(latency.as_secs_f64());
+                let resp = Response {
+                    vid: env.vid,
+                    logits: flat[i * c..(i + 1) * c].to_vec(),
+                    latency,
+                };
+                // A requester that gave up is not an error for the batch.
+                let _ = env.tx.send(Ok(resp));
+            }
+            Ok(())
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for env in batch {
+                let _ = env.tx.send(Err(msg.clone()));
+            }
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_client(cap: usize, num_vertices: usize) -> (ServeClient, Receiver<Envelope>) {
+        let (tx, rx) = mpsc::sync_channel(cap);
+        (ServeClient { tx, queue_cap: cap, num_vertices }, rx)
+    }
+
+    #[test]
+    fn queue_at_capacity_rejects_without_blocking() {
+        let (client, _rx) = test_client(2, 100);
+        assert!(client.submit(1).is_ok());
+        assert!(client.submit(2).is_ok());
+        let t0 = Instant::now();
+        let err = client.submit(3).expect_err("third submit must be rejected");
+        assert_eq!(err, AdmitError::QueueFull { cap: 2 });
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "rejection must be immediate, not a blocked send"
+        );
+    }
+
+    #[test]
+    fn out_of_range_vertex_is_rejected_before_admission() {
+        let (client, rx) = test_client(8, 10);
+        let err = client.submit(10).expect_err("vid == num_vertices is out of range");
+        assert_eq!(err, AdmitError::UnknownVertex { vid: 10, num_vertices: 10 });
+        assert!(client.submit(9).is_ok());
+        // The bad request never entered the queue.
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn closed_loop_reports_shutting_down() {
+        let (client, rx) = test_client(8, 10);
+        drop(rx);
+        assert_eq!(client.submit(0).expect_err("loop is gone"), AdmitError::ShuttingDown);
+    }
+
+    #[test]
+    fn admit_errors_are_descriptive() {
+        assert_eq!(
+            AdmitError::QueueFull { cap: 4 }.to_string(),
+            "admission queue full (4 requests in flight); retry later"
+        );
+        assert_eq!(AdmitError::ShuttingDown.to_string(), "serving loop is shutting down");
+        assert_eq!(
+            AdmitError::UnknownVertex { vid: 7, num_vertices: 5 }.to_string(),
+            "vertex 7 not in served graph (5 vertices)"
+        );
+    }
+
+    #[test]
+    fn dropped_loop_fails_pending_waits_instead_of_hanging() {
+        let (client, rx) = test_client(8, 10);
+        let pending = client.submit(3).expect("admitted");
+        drop(rx); // the loop dies with the envelope unanswered
+        let err = pending.wait().expect_err("wait must fail, not hang");
+        assert!(err.to_string().contains("dropped the request"));
+    }
+
+    #[test]
+    fn report_percentiles_and_rps() {
+        let report = ServeReport {
+            served: 4,
+            batches: 2,
+            latencies_s: vec![0.004, 0.001, 0.003, 0.002],
+            wall: Duration::from_secs(2),
+        };
+        assert_eq!(report.percentile(0.0), 0.001);
+        assert_eq!(report.percentile(100.0), 0.004);
+        assert_eq!(report.percentile(50.0), 0.003); // nearest-rank on 4 samples
+        assert!((report.rps() - 2.0).abs() < 1e-9);
+        assert_eq!(ServeReport::default().percentile(99.0), 0.0);
+    }
+}

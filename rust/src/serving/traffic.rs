@@ -1,0 +1,221 @@
+//! Seeded closed-loop traffic generation for `gsplit serve` (DESIGN.md
+//! §Serving).
+//!
+//! Real per-vertex inference traffic is heavily skewed — a small hot set
+//! of vertices (popular users, trending items) absorbs most requests,
+//! which is exactly the skew GSplit's hotness-aware caching exploits. The
+//! generator models it with a **Zipf** popularity law: rank-`r` vertex
+//! drawn with probability ∝ 1/(r+1)^s, ranks mapped to vertex ids by a
+//! seeded permutation so the hot set is not just the lowest ids.
+//!
+//! Everything is seed-deterministic: [`request_stream`] is a pure function
+//! of its [`TrafficConfig`], so `BENCH_serving.json` numbers are
+//! reproducible run to run (pinned by the unit tests below). The
+//! closed-loop driver ([`run_closed_loop`]) shares one stream across its
+//! workers: each in-flight request waits for its response before the
+//! worker takes the next one, and [`AdmitError::QueueFull`] rejections
+//! are counted and retried — backpressure slows the offered load instead
+//! of crashing it.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::metrics;
+use crate::rng::{derive_seed, Pcg32};
+use crate::serving::{AdmitError, ServeClient};
+use crate::Vid;
+
+/// Traffic shape: how many requests, from how many concurrent clients,
+/// over which vertex population, at what popularity skew.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficConfig {
+    /// Total requests across all workers.
+    pub requests: usize,
+    /// Concurrent closed-loop clients (each waits for its response before
+    /// sending the next request).
+    pub concurrency: usize,
+    /// Zipf exponent `s`: 0 is uniform; ~1 is web-like; higher
+    /// concentrates traffic further onto the hot set.
+    pub skew: f64,
+    pub seed: u64,
+    /// Vertex population size (requests target `0..vertices`).
+    pub vertices: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig { requests: 1000, concurrency: 4, skew: 1.0, seed: 0, vertices: 1 }
+    }
+}
+
+/// Zipf-distributed vertex sampler: rank `r` (0-based) has weight
+/// `1/(r+1)^s`, and a seeded permutation maps ranks to vertex ids.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// Cumulative rank weights; `cum[r]` = sum of weights of ranks `0..=r`.
+    cum: Vec<f64>,
+    /// `perm[rank]` = vertex id.
+    perm: Vec<Vid>,
+}
+
+impl ZipfSampler {
+    pub fn new(vertices: usize, skew: f64, seed: u64) -> Self {
+        assert!(vertices > 0, "Zipf sampler needs a non-empty vertex population");
+        let mut cum = Vec::with_capacity(vertices);
+        let mut total = 0f64;
+        for r in 0..vertices {
+            total += 1.0 / ((r + 1) as f64).powf(skew);
+            cum.push(total);
+        }
+        let mut perm: Vec<Vid> = (0..vertices as Vid).collect();
+        Pcg32::new(derive_seed(seed, &[0x51F7])).shuffle(&mut perm);
+        ZipfSampler { cum, perm }
+    }
+
+    /// Draw one vertex.
+    pub fn sample(&self, rng: &mut Pcg32) -> Vid {
+        let total = *self.cum.last().expect("non-empty");
+        let x = rng.next_f64() * total;
+        // First rank whose cumulative weight reaches x (min guards the
+        // x == total edge from floating-point rounding).
+        let rank = self.cum.partition_point(|&c| c < x).min(self.perm.len() - 1);
+        self.perm[rank]
+    }
+}
+
+/// The full request stream a [`TrafficConfig`] generates — a pure
+/// function of the config, which is the determinism contract the bench
+/// relies on (same seed ⇒ identical vertex ids in identical order).
+pub fn request_stream(cfg: &TrafficConfig) -> Vec<Vid> {
+    let sampler = ZipfSampler::new(cfg.vertices, cfg.skew, cfg.seed);
+    let mut rng = Pcg32::new(derive_seed(cfg.seed, &[0x7AFF]));
+    (0..cfg.requests).map(|_| sampler.sample(&mut rng)).collect()
+}
+
+/// Outcome of one closed-loop run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrafficReport {
+    /// Requests submitted and answered.
+    pub sent: u64,
+    /// `QueueFull` rejections observed (each was retried until admitted).
+    pub rejected: u64,
+}
+
+/// Drive a pre-generated request stream through the client from
+/// `cfg.concurrency` closed-loop workers. Workers claim stream positions
+/// atomically, so together they submit each request exactly once;
+/// `QueueFull` backpressure is counted, published as the
+/// `serve_rejects{reason=queue_full}` counter, and retried after a short
+/// pause.
+pub fn run_closed_loop(client: &ServeClient, cfg: &TrafficConfig) -> Result<TrafficReport> {
+    let stream = request_stream(cfg);
+    let rejects_ctr = metrics::registry().counter("serve_rejects", &[("reason", "queue_full")]);
+    let next = AtomicUsize::new(0);
+    let rejected = AtomicU64::new(0);
+    let workers = cfg.concurrency.max(1);
+    thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let stream = &stream;
+            let next = &next;
+            let rejected = &rejected;
+            let rejects_ctr = &rejects_ctr;
+            handles.push(scope.spawn(move || -> Result<()> {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&vid) = stream.get(i) else { return Ok(()) };
+                    let pending = loop {
+                        match client.submit(vid) {
+                            Ok(p) => break p,
+                            Err(AdmitError::QueueFull { .. }) => {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                                rejects_ctr.inc();
+                                thread::sleep(Duration::from_micros(100));
+                            }
+                            Err(e) => return Err(anyhow!("admission failed: {e}")),
+                        }
+                    };
+                    pending.wait()?;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("traffic worker panicked"))??;
+        }
+        Ok(())
+    })?;
+    Ok(TrafficReport {
+        sent: stream.len() as u64,
+        rejected: rejected.load(Ordering::Relaxed),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let cfg = TrafficConfig { requests: 500, vertices: 200, skew: 1.2, seed: 9, ..Default::default() };
+        assert_eq!(request_stream(&cfg), request_stream(&cfg));
+        let other = TrafficConfig { seed: 10, ..cfg };
+        assert_ne!(request_stream(&cfg), request_stream(&other), "seed must matter");
+        let flatter = TrafficConfig { skew: 0.3, ..cfg };
+        assert_ne!(request_stream(&cfg), request_stream(&flatter), "skew must matter");
+    }
+
+    #[test]
+    fn stream_stays_in_range() {
+        let cfg = TrafficConfig { requests: 2000, vertices: 37, skew: 1.5, seed: 3, ..Default::default() };
+        for v in request_stream(&cfg) {
+            assert!((v as usize) < cfg.vertices);
+        }
+    }
+
+    /// Higher skew ⇒ a larger share of requests on the hottest 1% of
+    /// vertices — the property that makes hotness caching pay off.
+    #[test]
+    fn higher_skew_concentrates_traffic() {
+        let top_share = |skew: f64| -> f64 {
+            let cfg = TrafficConfig {
+                requests: 20_000,
+                vertices: 1000,
+                skew,
+                seed: 5,
+                ..Default::default()
+            };
+            let stream = request_stream(&cfg);
+            let mut counts = vec![0u64; cfg.vertices];
+            for v in &stream {
+                counts[*v as usize] += 1;
+            }
+            counts.sort_unstable_by(|a, b| b.cmp(a));
+            let top = cfg.vertices / 100; // hottest 1%
+            counts[..top].iter().sum::<u64>() as f64 / stream.len() as f64
+        };
+        let flat = top_share(0.5);
+        let steep = top_share(1.5);
+        assert!(
+            steep > flat + 0.1,
+            "skew 1.5 must concentrate traffic well beyond skew 0.5 (got {steep:.3} vs {flat:.3})"
+        );
+        assert!(steep > 0.3, "skew 1.5 should put >30% of traffic on the top 1% (got {steep:.3})");
+    }
+
+    #[test]
+    fn zipf_permutation_decouples_rank_from_id() {
+        let a = ZipfSampler::new(256, 1.5, 11);
+        let b = ZipfSampler::new(256, 1.5, 11);
+        assert_eq!(a.perm, b.perm, "rank→vertex map is seed-deterministic");
+        let c = ZipfSampler::new(256, 1.5, 12);
+        assert_ne!(a.perm, c.perm, "different seeds permute the hot set differently");
+        let identity: Vec<Vid> = (0..256).collect();
+        assert_ne!(a.perm, identity, "the hot set must not simply be the lowest vertex ids");
+        let mut sorted = a.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, identity, "rank→vertex map is a permutation");
+    }
+}

@@ -181,6 +181,31 @@ impl SplitPlan {
     }
 }
 
+/// RNG discipline of one cooperative sampling pass.
+///
+/// Training uses one advancing stream per device: cheap, and deterministic
+/// for a fixed (seed, batch) pair — but a vertex's sampled neighborhood
+/// then depends on every vertex sampled before it on the same device, i.e.
+/// on the batch composition. Serving needs the opposite property: the
+/// neighborhood of `v` must be a pure function of `(seed, layer, v)` so
+/// that micro-batch boundaries cannot move a single output bit
+/// (DESIGN.md §Serving). [`SplitSampler::sample_stateless`] selects the
+/// per-vertex mode; the training path is untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RngMode {
+    /// One advancing [`Pcg32`] stream per device (training).
+    PerDevice,
+    /// A fresh stream `derive_seed(seed, [layer, v])` per frontier vertex
+    /// (serving): batch-composition independent by construction.
+    PerVertex,
+}
+
+/// Per-layer view of the RNG mode handed to [`sample_dev_layer`].
+enum LayerRng<'r> {
+    Shared(&'r mut Pcg32),
+    PerVertex { seed: u64, layer: u64 },
+}
+
 /// Split-parallel cooperative sampler (Algorithm 1). Owns reusable scratch.
 pub struct SplitSampler {
     vmaps: Vec<VertexMap>,
@@ -209,6 +234,36 @@ impl SplitSampler {
         part: &Partitioning,
         seed: u64,
     ) -> SplitPlan {
+        self.sample_impl(g, targets, fanouts, part, seed, RngMode::PerDevice)
+    }
+
+    /// [`SplitSampler::sample`] with **per-vertex RNG streams**: every
+    /// frontier vertex at every layer samples from a fresh
+    /// `Pcg32::new(derive_seed(seed, &[layer, v]))` stream, so its sampled
+    /// neighborhood is a pure function of `(seed, layer, v)` — independent
+    /// of which other vertices share the batch. This is the serving-path
+    /// sampler: it makes the served forward pass bit-identical across any
+    /// micro-batch grouping of the same request set (DESIGN.md §Serving).
+    pub fn sample_stateless(
+        &mut self,
+        g: &CsrGraph,
+        targets: &[Vid],
+        fanouts: &[usize],
+        part: &Partitioning,
+        seed: u64,
+    ) -> SplitPlan {
+        self.sample_impl(g, targets, fanouts, part, seed, RngMode::PerVertex)
+    }
+
+    fn sample_impl(
+        &mut self,
+        g: &CsrGraph,
+        targets: &[Vid],
+        fanouts: &[usize],
+        part: &Partitioning,
+        seed: u64,
+        mode: RngMode,
+    ) -> SplitPlan {
         let k = part.k;
         assert_eq!(self.vmaps.len(), k, "SplitSampler built for different k");
         let num_layers = fanouts.len();
@@ -225,21 +280,29 @@ impl SplitSampler {
             frontier[part.device_of(t) as usize].push(t);
         }
 
-        let mut rngs: Vec<Pcg32> =
-            (0..k).map(|d| Pcg32::new(derive_seed(seed, &[d as u64]))).collect();
+        let mut rngs: Vec<Pcg32> = match mode {
+            RngMode::PerDevice => {
+                (0..k).map(|d| Pcg32::new(derive_seed(seed, &[d as u64]))).collect()
+            }
+            RngMode::PerVertex => Vec::new(),
+        };
 
-        for &fanout in fanouts.iter() {
+        for (li, &fanout) in fanouts.iter().enumerate() {
             let mut layer = SplitLayer {
                 per_dev: Vec::with_capacity(k),
                 shuffle: ShuffleIndex::new(k),
             };
             // --- per-device neighbor sampling into mixed frontiers ---
             for d in 0..k {
+                let rng = match mode {
+                    RngMode::PerDevice => LayerRng::Shared(&mut rngs[d]),
+                    RngMode::PerVertex => LayerRng::PerVertex { seed, layer: li as u64 },
+                };
                 let dl = sample_dev_layer(
                     g,
                     &frontier[d],
                     fanout,
-                    &mut rngs[d],
+                    rng,
                     &mut self.vmaps[d],
                     &mut self.scratch,
                 );
@@ -285,7 +348,7 @@ fn sample_dev_layer(
     g: &CsrGraph,
     frontier: &[Vid],
     fanout: usize,
-    rng: &mut Pcg32,
+    mut rng: LayerRng<'_>,
     vmap: &mut VertexMap,
     scratch: &mut Vec<u32>,
 ) -> DevLayer {
@@ -310,7 +373,15 @@ fn sample_dev_layer(
     }
     for (i, &v) in frontier.iter().enumerate() {
         let nbrs = g.neighbors(v);
-        sample_without_replacement(rng, nbrs.len() as u32, fanout as u32, scratch);
+        match &mut rng {
+            LayerRng::Shared(r) => {
+                sample_without_replacement(r, nbrs.len() as u32, fanout as u32, scratch)
+            }
+            LayerRng::PerVertex { seed, layer } => {
+                let mut r = Pcg32::new(derive_seed(*seed, &[*layer, v as u64]));
+                sample_without_replacement(&mut r, nbrs.len() as u32, fanout as u32, scratch)
+            }
+        }
         let row = &mut dl.neigh[i * fanout..(i + 1) * fanout];
         for (j, &slot) in scratch.iter().enumerate() {
             let u = nbrs[slot as usize];
@@ -471,6 +542,92 @@ mod tests {
                 let expect = layer.per_dev[d].num_dst() > 0
                     && (l == 0 || !plan.owned_rows(l - 1, d).is_empty());
                 assert_eq!(plan.bwd_active(l, d), expect, "layer {l} dev {d}");
+            }
+        }
+    }
+
+    /// The sampled neighbor vertices of top-layer target `t`, in sampling
+    /// order (indices resolved through `mixed_src`).
+    fn top_neighbors(plan: &SplitPlan, p: &Partitioning, t: Vid) -> Vec<Vid> {
+        let dl = &plan.layers[0].per_dev[p.device_of(t) as usize];
+        let i = dl.dst.iter().position(|&v| v == t).expect("target in its owner's dst");
+        dl.neighbors_of(i).iter().map(|&j| dl.mixed_src[j as usize]).collect()
+    }
+
+    #[test]
+    fn stateless_sampling_is_independent_of_batch_composition() {
+        let (g, p) = setup(4);
+        let targets: Vec<Vid> = (0..256).collect();
+        let mut s = SplitSampler::new(p.k);
+        let full = s.sample_stateless(&g, &targets, &[5, 5, 5], &p, 11);
+        // Each target sampled alone must see the exact same neighborhood,
+        // in the same order, as it did inside the full batch.
+        for &t in &[0u32, 17, 99, 255] {
+            let solo = s.sample_stateless(&g, &[t], &[5, 5, 5], &p, 11);
+            assert_eq!(
+                top_neighbors(&solo, &p, t),
+                top_neighbors(&full, &p, t),
+                "vertex {t}: stateless neighborhood depends on batch composition"
+            );
+        }
+        // Any split of the batch reproduces the full batch's neighborhoods.
+        let (a, b) = targets.split_at(100);
+        let pa = s.sample_stateless(&g, a, &[5, 5, 5], &p, 11);
+        let pb = s.sample_stateless(&g, b, &[5, 5, 5], &p, 11);
+        for &t in a {
+            assert_eq!(top_neighbors(&pa, &p, t), top_neighbors(&full, &p, t));
+        }
+        for &t in b {
+            assert_eq!(top_neighbors(&pb, &p, t), top_neighbors(&full, &p, t));
+        }
+    }
+
+    #[test]
+    fn stateless_sampling_is_deterministic_and_seed_sensitive() {
+        let (g, p) = setup(3);
+        let targets: Vec<Vid> = (0..128).collect();
+        let mut s = SplitSampler::new(p.k);
+        let a = s.sample_stateless(&g, &targets, &[5, 5], &p, 21);
+        let b = s.sample_stateless(&g, &targets, &[5, 5], &p, 21);
+        assert_eq!(a.input_frontier, b.input_frontier);
+        assert_eq!(a.total_edges(), b.total_edges());
+        let c = s.sample_stateless(&g, &targets, &[5, 5], &p, 22);
+        assert_ne!(
+            a.layers[1].per_dev[0].mixed_src, c.layers[1].per_dev[0].mixed_src,
+            "different seeds should differ"
+        );
+    }
+
+    #[test]
+    fn stateless_plans_keep_the_split_invariants() {
+        let (g, p) = setup(4);
+        let targets: Vec<Vid> = (0..256).collect();
+        let mut s = SplitSampler::new(p.k);
+        let plan = s.sample_stateless(&g, &targets, &[5, 5, 5], &p, 12);
+        // Disjoint input frontiers + the shuffle bijection both hold in
+        // per-vertex mode: the RNG discipline only changes which neighbors
+        // are drawn, not any of the plan wiring.
+        let mut inputs: Vec<Vid> =
+            plan.input_frontier.iter().flat_map(|f| f.iter().copied()).collect();
+        let before = inputs.len();
+        inputs.sort_unstable();
+        inputs.dedup();
+        assert_eq!(before, inputs.len(), "redundant input features");
+        for (l, layer) in plan.layers.iter().enumerate() {
+            for (d, dl) in layer.per_dev.iter().enumerate() {
+                let mut filled = vec![false; dl.mixed_src.len()];
+                for from in 0..plan.k {
+                    let send = &layer.shuffle.send[from][d];
+                    let recv = &layer.shuffle.recv[d][from];
+                    assert_eq!(send.len(), recv.len());
+                    for (&s_idx, &r_idx) in send.iter().zip(recv) {
+                        let owned = plan.owned_rows(l, from);
+                        assert_eq!(owned[s_idx as usize], dl.mixed_src[r_idx as usize]);
+                        assert!(!filled[r_idx as usize], "double fill (layer {l})");
+                        filled[r_idx as usize] = true;
+                    }
+                }
+                assert!(filled.iter().all(|&b| b), "unfilled mixed row (layer {l} dev {d})");
             }
         }
     }

@@ -131,6 +131,14 @@ enum Job {
         params: Arc<ParamStore>,
         backward: bool,
     },
+    /// Forward-only inference: run the shared loading-exchange + forward
+    /// front half and report each owned device's top-layer logits — no
+    /// loss head (labels never touched), no backward, no SGD step.
+    Infer {
+        idx: usize,
+        prep: Arc<PreparedBatch>,
+        params: Arc<ParamStore>,
+    },
     Stop,
 }
 
@@ -150,6 +158,13 @@ struct DeviceResult {
 
 enum WorkerMsg {
     Dev(DeviceResult),
+    /// One device's top-layer logits for a [`Job::Infer`] batch, row-major
+    /// `[num_dst, num_classes]` in `plan.layers[0].per_dev[dev].dst` order.
+    Logits {
+        batch_idx: usize,
+        dev: usize,
+        rows: Vec<f32>,
+    },
     Err(String),
 }
 
@@ -291,6 +306,9 @@ pub(super) fn run_batches(
                         by_dev[r.dev] = Some(r);
                         got += 1;
                     }
+                    Ok(WorkerMsg::Logits { .. }) => {
+                        bail!("unexpected inference result during training")
+                    }
                     Ok(WorkerMsg::Err(e)) => bail!("executor worker failed: {e}"),
                     Err(RecvTimeoutError::Timeout) => {
                         if abort.load(Ordering::SeqCst) {
@@ -311,6 +329,126 @@ pub(super) fn run_batches(
         Ok(())
     })?;
     Ok(stats)
+}
+
+/// Run one prepared batch's forward-only inference through the threaded
+/// pipelined executor: the same worker pool, channel fabric, and exchange
+/// phases as [`run_batches`], but workers stop at the top layer and report
+/// logits instead of loss statistics and gradients. Returns per-device
+/// top-layer logits, `out[d]` row-major `[num_dst, num_classes]` in
+/// `plan.layers[0].per_dev[d].dst` order — bit-identical to the serial
+/// inference path for the same `PreparedBatch` (the forward half of the
+/// module's determinism contract; labels are never touched).
+pub(super) fn run_infer(
+    trainer: &Trainer<'_>,
+    ds: &Dataset,
+    prep: PreparedBatch,
+    cfg: PipelineConfig,
+) -> Result<Vec<Vec<f32>>> {
+    crate::obs::set_thread_label("coordinator");
+    let k = trainer.part.k;
+    let n_workers = cfg.workers.clamp(1, k);
+    let channel_cap = cfg.channel_cap.max(1);
+    let chunk_rows = cfg.chunk_rows.max(1);
+    let backend = trainer.backend;
+    let model_cfg = trainer.params.cfg.clone();
+    let kernel_k = trainer.fanouts[0];
+    let cache = trainer.cache.clone();
+
+    let mut senders: Vec<Vec<Option<SyncSender<RowChunk>>>> =
+        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+    let mut receivers: Vec<Vec<Option<Receiver<RowChunk>>>> =
+        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+    for from in 0..k {
+        for to in 0..k {
+            let (tx, rx) = sync_channel::<RowChunk>(channel_cap);
+            senders[from][to] = Some(tx);
+            receivers[to][from] = Some(rx);
+        }
+    }
+    let abort = Arc::new(AtomicBool::new(false));
+    let (res_tx, res_rx) = channel::<WorkerMsg>();
+    let prep = Arc::new(prep);
+    let params = Arc::new(trainer.params.clone());
+
+    let mut logits: Vec<Vec<f32>> = vec![Vec::new(); k];
+    thread::scope(|scope| -> Result<()> {
+        let mut job_txs: Vec<SyncSender<Job>> = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let owned: Vec<usize> = (0..k).filter(|d| d % n_workers == w).collect();
+            let send: Vec<Vec<SyncSender<RowChunk>>> = owned
+                .iter()
+                .map(|&d| (0..k).map(|to| senders[d][to].take().expect("sender")).collect())
+                .collect();
+            let recv: Vec<Vec<Receiver<RowChunk>>> = owned
+                .iter()
+                .map(|&d| (0..k).map(|from| receivers[d][from].take().expect("receiver")).collect())
+                .collect();
+            let (jtx, jrx) = sync_channel::<Job>(1);
+            job_txs.push(jtx);
+            let res_tx = res_tx.clone();
+            let abort = Arc::clone(&abort);
+            let model_cfg = model_cfg.clone();
+            let cache = cache.clone();
+            scope.spawn(move || {
+                crate::obs::set_thread_label(&format!("worker-{w}"));
+                let guard = AbortOnDrop(Arc::clone(&abort));
+                let worker = Worker {
+                    backend,
+                    ds,
+                    cfg: model_cfg,
+                    kernel_k,
+                    cache,
+                    owned,
+                    send,
+                    recv,
+                    chunk_rows,
+                    abort,
+                    res_tx,
+                };
+                worker.run(jrx);
+                drop(guard);
+            });
+        }
+        drop(res_tx);
+
+        for jtx in &job_txs {
+            jtx.send(Job::Infer {
+                idx: 0,
+                prep: Arc::clone(&prep),
+                params: Arc::clone(&params),
+            })
+            .map_err(|_| anyhow!("executor worker exited early"))?;
+        }
+        // Collect every device's logits (same timed-receive abort polling
+        // as the training coordinator).
+        let mut seen = vec![false; k];
+        let mut got = 0usize;
+        while got < k {
+            match res_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(WorkerMsg::Logits { batch_idx, dev, rows }) => {
+                    debug_assert_eq!(batch_idx, 0);
+                    debug_assert!(!seen[dev]);
+                    seen[dev] = true;
+                    logits[dev] = rows;
+                    got += 1;
+                }
+                Ok(WorkerMsg::Dev(_)) => bail!("unexpected training result during inference"),
+                Ok(WorkerMsg::Err(e)) => bail!("executor worker failed: {e}"),
+                Err(RecvTimeoutError::Timeout) => {
+                    if abort.load(Ordering::SeqCst) {
+                        bail!("executor worker died (panic or abort)");
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("executor workers disconnected"),
+            }
+        }
+        for jtx in &job_txs {
+            let _ = jtx.send(Job::Stop);
+        }
+        Ok(())
+    })?;
+    Ok(logits)
 }
 
 /// Fixed-device-order reduction of one batch's per-device results: loss
@@ -396,6 +534,23 @@ impl<'e> Worker<'e> {
                         Ok(results) => {
                             for r in results {
                                 if self.res_tx.send(WorkerMsg::Dev(r)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            self.abort.store(true, Ordering::SeqCst);
+                            let _ = self.res_tx.send(WorkerMsg::Err(e.to_string()));
+                            return;
+                        }
+                    }
+                }
+                Ok(Job::Infer { idx, prep, params }) => {
+                    match self.fwd_to_top(&prep, &params) {
+                        Ok((_mixed, hidden)) => {
+                            for (rows, &d) in hidden.into_iter().zip(&self.owned) {
+                                let msg = WorkerMsg::Logits { batch_idx: idx, dev: d, rows };
+                                if self.res_tx.send(msg).is_err() {
                                     return;
                                 }
                             }
@@ -532,16 +687,17 @@ impl<'e> Worker<'e> {
         }
     }
 
-    /// Execute this worker's share of one mini-batch: the same per-device
-    /// math as the serial trainer, with channel all-to-alls where the
-    /// serial code indexes other devices' buffers directly.
-    fn run_batch(
+    /// Loading exchange + bottom-up forward over this worker's owned
+    /// devices — the shared front half of training ([`Worker::run_batch`])
+    /// and forward-only inference ([`Job::Infer`]). Returns the per-layer
+    /// mixed-frontier inputs (kept for the backward pass) and each owned
+    /// device's top-layer hidden rows, both indexed like `self.owned`.
+    #[allow(clippy::type_complexity)]
+    fn fwd_to_top(
         &self,
-        batch_idx: usize,
         prep: &PreparedBatch,
         params: &ParamStore,
-        backward: bool,
-    ) -> Result<Vec<DeviceResult>> {
+    ) -> Result<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>)> {
         let plan = &prep.plan;
         let k = plan.k;
         let num_layers = plan.layers.len();
@@ -549,9 +705,9 @@ impl<'e> Worker<'e> {
         let kernel_k = self.kernel_k;
         let owned = self.owned.clone();
         let n_own = owned.len();
-        // Global batch counter for trace labels (the `batch_idx` parameter
-        // is this epoch's coordinator index; spans use the trainer-global
-        // one so serial and pipelined traces label batches identically).
+        // Global batch counter for trace labels (the coordinator's batch
+        // index is per-call; spans use the trainer-global one so serial
+        // and pipelined traces label batches identically).
         let bidx = prep.batch_idx;
 
         // Owned rows at the current bottom-up boundary, starting from the
@@ -675,6 +831,28 @@ impl<'e> Worker<'e> {
                 )?;
             }
         }
+        Ok((mixed, hidden))
+    }
+
+    /// Execute this worker's share of one mini-batch: the same per-device
+    /// math as the serial trainer, with channel all-to-alls where the
+    /// serial code indexes other devices' buffers directly.
+    fn run_batch(
+        &self,
+        batch_idx: usize,
+        prep: &PreparedBatch,
+        params: &ParamStore,
+        backward: bool,
+    ) -> Result<Vec<DeviceResult>> {
+        let plan = &prep.plan;
+        let k = plan.k;
+        let num_layers = plan.layers.len();
+        let cfg = &self.cfg;
+        let kernel_k = self.kernel_k;
+        let owned = self.owned.clone();
+        let n_own = owned.len();
+        let bidx = prep.batch_idx;
+        let (mixed, hidden) = self.fwd_to_top(prep, params)?;
 
         // --- Loss head per owned device ---
         let c = cfg.num_classes;

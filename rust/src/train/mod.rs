@@ -207,6 +207,25 @@ impl<'a> Trainer<'a> {
     /// accumulate its byte accounting — the single entry point both
     /// executors share.
     fn prepare(&mut self, ds: &Dataset, targets: &[Vid], plan_seed: u64) -> PreparedBatch {
+        self.prepare_impl(ds, targets, plan_seed, false, "train")
+    }
+
+    /// Plan stage for the serving path: per-vertex stateless sampling
+    /// (micro-batch-composition-independent neighborhoods, DESIGN.md
+    /// §Serving), byte accounting recorded under the `serve` metrics
+    /// scope. Same loading classification and cache paths as training.
+    fn prepare_infer(&mut self, ds: &Dataset, targets: &[Vid], plan_seed: u64) -> PreparedBatch {
+        self.prepare_impl(ds, targets, plan_seed, true, "serve")
+    }
+
+    fn prepare_impl(
+        &mut self,
+        ds: &Dataset,
+        targets: &[Vid],
+        plan_seed: u64,
+        stateless: bool,
+        scope: &str,
+    ) -> PreparedBatch {
         let batch_idx = self.batches_prepared;
         self.batches_prepared += 1;
         let prep = plan::prepare_batch(
@@ -218,11 +237,12 @@ impl<'a> Trainer<'a> {
             self.cache.as_deref(),
             plan_seed,
             batch_idx,
+            stateless,
         );
         for (acc, s) in self.load_stats.iter_mut().zip(&prep.loading.stats) {
             acc.merge(s);
         }
-        LoadStats::sum(prep.loading.stats.iter()).record_metrics("train");
+        LoadStats::sum(prep.loading.stats.iter()).record_metrics(scope);
         prep
     }
 
@@ -296,6 +316,58 @@ impl<'a> Trainer<'a> {
                 Ok(out.pop().expect("one batch"))
             }
         }
+    }
+
+    /// Forward-only inference on `targets`: returns the top-layer logits
+    /// as a flat row-major `[targets.len(), num_classes]` buffer, rows in
+    /// `targets` order. Never touches `ds.labels` (serves label-stripped
+    /// datasets) and never updates parameters.
+    ///
+    /// Sampling uses per-vertex stateless RNG streams keyed on `seed`
+    /// ([`SplitSampler::sample_stateless`]), so for a fixed seed each
+    /// vertex's logits are a pure function of the trained parameters —
+    /// independent of which other vertices share its micro-batch and of
+    /// the executor ([`ExecMode`]); this is the bit-identity contract the
+    /// serving layer (`crate::serving`) is built on (DESIGN.md §Serving,
+    /// pinned by `serving_equivalence.rs`).
+    ///
+    /// `targets` must be unique and in-range — the cooperative sampler's
+    /// split invariants assume distinct top-layer destinations.
+    pub fn infer(&mut self, ds: &Dataset, targets: &[Vid], seed: u64) -> Result<Vec<f32>> {
+        if targets.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = ds.graph.num_vertices() as Vid;
+        let mut seen = std::collections::HashSet::with_capacity(targets.len());
+        for &v in targets {
+            ensure!(v < n, "inference target {v} out of range (graph has {n} vertices)");
+            ensure!(seen.insert(v), "duplicate inference target {v}");
+        }
+        let prep = self.prepare_infer(ds, targets, seed);
+        let batch_idx = prep.batch_idx;
+        let _s = span!(Phase::ServeInfer, batch = batch_idx);
+        // Top-layer dst lists: where each target's logits row lands.
+        let top_dst: Vec<Vec<Vid>> =
+            prep.plan.layers[0].per_dev.iter().map(|dl| dl.dst.clone()).collect();
+        let mode = self.mode;
+        let per_dev: Vec<Vec<f32>> = match mode {
+            ExecMode::Serial => self.infer_serial(ds, prep)?,
+            ExecMode::Pipelined(cfg) => executor::run_infer(self, ds, prep, cfg)?,
+        };
+        // Reassemble into `targets` order.
+        let c = self.params.cfg.num_classes;
+        let mut row_of = std::collections::HashMap::with_capacity(targets.len());
+        for (d, dst) in top_dst.iter().enumerate() {
+            for (row, &v) in dst.iter().enumerate() {
+                row_of.insert(v, (d, row));
+            }
+        }
+        let mut out = vec![0f32; targets.len() * c];
+        for (i, v) in targets.iter().enumerate() {
+            let &(d, row) = row_of.get(v).expect("target present in top-layer dst");
+            out[i * c..(i + 1) * c].copy_from_slice(&per_dev[d][row * c..(row + 1) * c]);
+        }
+        Ok(out)
     }
 }
 

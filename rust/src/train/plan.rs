@@ -108,6 +108,16 @@ pub struct PreparedBatch {
 /// `plan_seed` must already be the per-iteration derived seed; the same
 /// seed always yields the same `PreparedBatch` regardless of which
 /// executor later consumes it.
+///
+/// `stateless` selects [`SplitSampler::sample_stateless`] — per-vertex RNG
+/// streams, so each vertex's sampled neighborhood is independent of the
+/// batch it arrives in. The serving path requires this (DESIGN.md
+/// §Serving: served logits must not depend on micro-batch grouping);
+/// training keeps the cheaper per-device streams. Labels are never
+/// consulted here — a `PreparedBatch` is label-free by construction, which
+/// is what lets the serving path run on label-stripped datasets (pinned by
+/// `serving_equivalence.rs`).
+#[allow(clippy::too_many_arguments)]
 pub(super) fn prepare_batch(
     sampler: &mut SplitSampler,
     ds: &Dataset,
@@ -117,10 +127,15 @@ pub(super) fn prepare_batch(
     cache: Option<&ResidentCache>,
     plan_seed: u64,
     batch_idx: u64,
+    stateless: bool,
 ) -> PreparedBatch {
     let plan = {
         let _s = span!(Phase::Sample, batch = batch_idx);
-        sampler.sample(&ds.graph, targets, fanouts, part, plan_seed)
+        if stateless {
+            sampler.sample_stateless(&ds.graph, targets, fanouts, part, plan_seed)
+        } else {
+            sampler.sample(&ds.graph, targets, fanouts, part, plan_seed)
+        }
     };
     let _load_span = span!(Phase::Load, batch = batch_idx);
     let k = plan.k;

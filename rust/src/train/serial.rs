@@ -13,21 +13,28 @@ use anyhow::Result;
 use crate::graph::{Dataset, FeatureSource};
 use crate::obs::Phase;
 use crate::span;
-use crate::train::plan::PreparedBatch;
+use crate::split::SplitPlan;
+use crate::train::plan::{LoadingPlan, PreparedBatch};
 use crate::train::{IterStats, Trainer};
 
 impl<'a> Trainer<'a> {
-    /// The cooperative forward (+ optional backward) pass of Algorithms
-    /// 1–2, executed serially over all devices.
+    /// Loading exchange + the bottom-up cooperative forward of Algorithm 2,
+    /// executed serially over all devices — the single operation sequence
+    /// shared by training ([`Trainer::forward_backward`]) and label-free
+    /// inference ([`Trainer::infer_serial`]). Returns the per-layer mixed
+    /// frontier inputs (kept for the backward pass) and the top-layer
+    /// hidden rows per device (`hidden[d]` rows align with
+    /// `plan.layers[0].per_dev[d].dst`, width = `num_classes`).
     #[allow(clippy::type_complexity)]
-    pub(super) fn forward_backward(
-        &mut self,
+    fn forward_pass(
+        &self,
         ds: &Dataset,
-        prep: PreparedBatch,
-        backward: bool,
-    ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
-        let cfg = self.params.cfg.clone();
-        let PreparedBatch { plan, mut feats, loading, batch_idx } = prep;
+        plan: &SplitPlan,
+        mut feats: Vec<Vec<f32>>,
+        loading: &LoadingPlan,
+        batch_idx: u64,
+    ) -> Result<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>)> {
+        let cfg = &self.params.cfg;
         let k = plan.k;
         let num_layers = plan.layers.len();
         let kernel_k = self.fanouts[0];
@@ -113,6 +120,35 @@ impl<'a> Trainer<'a> {
             }
             hidden = next_hidden;
         }
+        Ok((mixed, hidden))
+    }
+
+    /// Forward-only serial inference: top-layer logits per device, **never
+    /// touching labels** — a [`PreparedBatch`] is label-free by
+    /// construction and the loss head is the only consumer of
+    /// `ds.labels`, so a label-stripped dataset serves fine here (pinned
+    /// by `serving_equivalence.rs`).
+    pub(super) fn infer_serial(&self, ds: &Dataset, prep: PreparedBatch) -> Result<Vec<Vec<f32>>> {
+        let PreparedBatch { plan, feats, loading, batch_idx } = prep;
+        let (_mixed, hidden) = self.forward_pass(ds, &plan, feats, &loading, batch_idx)?;
+        Ok(hidden)
+    }
+
+    /// The cooperative forward (+ optional backward) pass of Algorithms
+    /// 1–2, executed serially over all devices.
+    #[allow(clippy::type_complexity)]
+    pub(super) fn forward_backward(
+        &mut self,
+        ds: &Dataset,
+        prep: PreparedBatch,
+        backward: bool,
+    ) -> Result<(IterStats, Option<Vec<Vec<Vec<f32>>>>)> {
+        let cfg = self.params.cfg.clone();
+        let PreparedBatch { plan, feats, loading, batch_idx } = prep;
+        let k = plan.k;
+        let num_layers = plan.layers.len();
+        let kernel_k = self.fanouts[0];
+        let (mixed, hidden) = self.forward_pass(ds, &plan, feats, &loading, batch_idx)?;
 
         // --- Loss head per device (top-layer dst are the targets) ---
         let c = cfg.num_classes;

@@ -1,0 +1,316 @@
+//! Serving bit-identity (DESIGN.md §Serving): logits answered by the
+//! online service must be **bit-identical** to an offline
+//! [`Trainer::infer`] on the same vertices and seed — no matter how
+//! requests fall into micro-batches, which cache policy/budget backs the
+//! loading stage, how many pipeline workers run the forward, or whether
+//! features live in RAM or stream from a v2 `.gsg` on disk.
+//!
+//! The mechanism under test is per-vertex stateless sampling: each
+//! frontier vertex draws from its own stream keyed on
+//! `(seed, layer, vertex)`, so its sampled neighborhood — and therefore
+//! its logits — cannot depend on which other vertices shared its
+//! micro-batch. Request counts are chosen to straddle the flush boundary
+//! (1, exactly `max_batch`, `max_batch + 1`).
+//!
+//! Also pinned here: serving a **label-free** dataset (inference must
+//! never touch `ds.labels` — the regression behind `Trainer::infer`),
+//! shutdown drain (every admitted request is answered), and zero
+//! `max_wait` degrading to per-request batches without deadlock.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gsplit::cache::{CachePolicy, ResidentCache};
+use gsplit::devices::Topology;
+use gsplit::graph::{Dataset, DiskFeatureStore, StandIn};
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::serving::{self, ServeConfig};
+use gsplit::train::{ExecMode, PipelineConfig, Trainer};
+use gsplit::{DeviceId, Vid};
+
+const FANOUT: usize = 5;
+const SEED: u64 = 42;
+/// The sampling seed every serve run and every offline oracle pins to.
+const SERVE_SEED: u64 = 0xA11CE;
+const K: usize = 4;
+const MAX_BATCH: usize = 8;
+
+fn tiny_cfg(num_layers: usize) -> ModelConfig {
+    ModelConfig { kind: GnnKind::GraphSage, feat_dim: 32, hidden: 32, num_classes: 16, num_layers }
+}
+
+fn modulo_part(ds: &Dataset, k: usize) -> Partitioning {
+    Partitioning {
+        assignment: (0..ds.graph.num_vertices() as Vid)
+            .map(|v| (v % k as Vid) as DeviceId)
+            .collect(),
+        k,
+    }
+}
+
+fn degree_ranking(ds: &Dataset) -> Vec<u64> {
+    (0..ds.graph.num_vertices() as Vid).map(|v| ds.graph.degree(v) as u64).collect()
+}
+
+/// A trainer for one serving configuration. All trainers share `SEED`, so
+/// their freshly initialized parameters are bit-identical — serving never
+/// updates them, which keeps every config comparable to the oracle.
+fn make_trainer<'b>(
+    backend: &'b NativeBackend,
+    cfg: &ModelConfig,
+    ds: &Dataset,
+    workers: usize,
+    policy: CachePolicy,
+    budget: u64,
+) -> Trainer<'b> {
+    let part = modulo_part(ds, K);
+    let mut t = Trainer::new(backend, cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    if policy != CachePolicy::None {
+        let topo = Topology::for_gpus(K, 1.0);
+        let cache = Arc::new(ResidentCache::build(
+            policy,
+            &degree_ranking(ds),
+            budget,
+            &part,
+            &topo,
+            &ds.features,
+        ));
+        t.set_cache(Some(cache)).unwrap();
+    }
+    if workers > 0 {
+        t.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+    }
+    t
+}
+
+/// Submit `vids` through the online service and return each response's
+/// logits, in submit order.
+fn serve(
+    trainer: &mut Trainer<'_>,
+    ds: &Dataset,
+    vids: &[Vid],
+    max_batch: usize,
+    max_wait: Duration,
+) -> Vec<Vec<f32>> {
+    let cfg = ServeConfig { max_batch, max_wait, queue_cap: 1024, seed: SERVE_SEED };
+    let (rows, report) = serving::run(trainer, ds, cfg, |client| {
+        let pending: Vec<_> =
+            vids.iter().map(|&v| client.submit(v).expect("admitted")).collect();
+        pending
+            .into_iter()
+            .map(|p| {
+                let r = p.wait().expect("answered");
+                r.logits
+            })
+            .collect::<Vec<Vec<f32>>>()
+    })
+    .unwrap();
+    assert_eq!(report.served, vids.len() as u64, "every admitted request is answered");
+    rows
+}
+
+/// Deterministic distinct request vertices spread over the graph.
+fn targets(ds: &Dataset, r: usize) -> Vec<Vid> {
+    let n = ds.graph.num_vertices() as Vid;
+    let stride = n / r as Vid;
+    (0..r as Vid).map(|i| (i * stride.max(97) + 13) % n).collect()
+}
+
+fn assert_rows_bit_match(served: &[Vec<f32>], offline: &[f32], c: usize, what: &str) {
+    assert_eq!(served.len() * c, offline.len(), "{what}: row count");
+    for (i, row) in served.iter().enumerate() {
+        assert_eq!(row.len(), c, "{what}: row {i} width");
+        for (j, x) in row.iter().enumerate() {
+            let y = offline[i * c + j];
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: request {i} class {j}: served {x} != offline {y}"
+            );
+        }
+    }
+}
+
+/// The tentpole sweep: request counts straddling the micro-batch boundary
+/// × cache policies × budgets × worker counts, each bit-compared to one
+/// uncached serial offline oracle.
+#[test]
+fn served_logits_bit_match_offline_across_configs() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let mut oracle = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    for r in [1usize, MAX_BATCH, MAX_BATCH + 1] {
+        let vids = targets(&ds, r);
+        let offline = oracle.infer(&ds, &vids, SERVE_SEED).unwrap();
+        for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
+            for budget in [64u64, 1024] {
+                // An absent cache has no budget axis — sweep it once.
+                if policy == CachePolicy::None && budget != 64 {
+                    continue;
+                }
+                for workers in [0usize, 1, 2, 4] {
+                    let what = format!("r={r}/{}/b{budget}/w{workers}", policy.name());
+                    let mut t = make_trainer(&backend, &cfg, &ds, workers, policy, budget);
+                    let served =
+                        serve(&mut t, &ds, &vids, MAX_BATCH, Duration::from_millis(2));
+                    assert_rows_bit_match(&served, &offline, cfg.num_classes, &what);
+                }
+            }
+        }
+    }
+}
+
+/// Repeat requests for the same vertex are answered identically no matter
+/// which micro-batch they land in, and the service dedupes them into one
+/// inference row per unique vertex.
+#[test]
+fn duplicate_requests_get_identical_answers() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let v: Vid = 7;
+    let vids = vec![v; MAX_BATCH + 3]; // spans two micro-batches
+    let mut t = make_trainer(&backend, &cfg, &ds, 2, CachePolicy::None, 0);
+    let served = serve(&mut t, &ds, &vids, MAX_BATCH, Duration::from_millis(2));
+    let mut oracle = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    let offline = oracle.infer(&ds, &[v], SERVE_SEED).unwrap();
+    for (i, row) in served.iter().enumerate() {
+        assert_rows_bit_match(&[row.clone()], &offline, cfg.num_classes, &format!("dup {i}"));
+    }
+}
+
+static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+fn unique_gsg() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "gsplit_serving_eq_{}_{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("tiny.gsg")
+}
+
+/// RAM vs disk: the same vertices served from a chunk-buffered
+/// [`DiskFeatureStore`] answer bit-identically to the in-RAM reference
+/// the file was written from.
+#[test]
+fn served_logits_bit_match_between_ram_and_disk_features() {
+    let ram = StandIn::Tiny.load().unwrap();
+    let path = unique_gsg();
+    ram.write_gsg(&path).unwrap();
+    let mut disk = Dataset::open_ooc(&path, ram.spec.train_frac, ram.spec.seed ^ 0x5717).unwrap();
+    disk.spec = ram.spec.clone();
+    disk.features = Arc::new(DiskFeatureStore::open(&path).unwrap().with_buffer(64, 4));
+
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let vids = targets(&ram, MAX_BATCH + 1);
+    let mut oracle = make_trainer(&backend, &cfg, &ram, 0, CachePolicy::None, 0);
+    let offline = oracle.infer(&ram, &vids, SERVE_SEED).unwrap();
+    for workers in [0usize, 2] {
+        for policy in [CachePolicy::None, CachePolicy::Partitioned] {
+            let what = format!("disk/{}/w{workers}", policy.name());
+            let mut t = make_trainer(&backend, &cfg, &disk, workers, policy, 256);
+            let served = serve(&mut t, &disk, &vids, MAX_BATCH, Duration::from_millis(2));
+            assert_rows_bit_match(&served, &offline, cfg.num_classes, &what);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Regression: inference must never touch `ds.labels`. A dataset with its
+/// labels stripped (as a pure serving replica would hold) serves the same
+/// bits as the labeled original.
+#[test]
+fn label_free_dataset_serves_identically() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let vids = targets(&ds, MAX_BATCH + 1);
+    let mut oracle = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    let offline = oracle.infer(&ds, &vids, SERVE_SEED).unwrap();
+
+    let mut stripped = ds;
+    stripped.labels.labels = Vec::new();
+    stripped.labels.train_set = Vec::new();
+    stripped.labels.val_set = Vec::new();
+
+    // Offline label-free inference, serial and pipelined.
+    let mut t = make_trainer(&backend, &cfg, &stripped, 0, CachePolicy::None, 0);
+    let bare = t.infer(&stripped, &vids, SERVE_SEED).unwrap();
+    assert_eq!(offline.len(), bare.len());
+    for (i, (x, y)) in offline.iter().zip(&bare).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "label-free offline elem {i}");
+    }
+    // And through the full service.
+    let mut t2 = make_trainer(&backend, &cfg, &stripped, 2, CachePolicy::None, 0);
+    let served = serve(&mut t2, &stripped, &vids, MAX_BATCH, Duration::from_millis(2));
+    assert_rows_bit_match(&served, &offline, cfg.num_classes, "label-free served");
+}
+
+/// Shutdown drain: requests submitted and *not yet awaited* when the
+/// client drops are still answered — the loop drains the queue before
+/// exiting instead of dropping in-flight work.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let vids = targets(&ds, 5);
+    let mut t = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    let serve_cfg = ServeConfig {
+        // A batch that can never fill and an hour-long wait: only the
+        // shutdown drain can flush these requests.
+        max_batch: 1000,
+        max_wait: Duration::from_secs(3600),
+        queue_cap: 16,
+        seed: SERVE_SEED,
+    };
+    let (pending, report) = serving::run(&mut t, &ds, serve_cfg, |client| {
+        vids.iter().map(|&v| client.submit(v).expect("admitted")).collect::<Vec<_>>()
+    })
+    .unwrap();
+    assert_eq!(report.served, vids.len() as u64, "drain must answer every admitted request");
+    assert_eq!(report.batches, 1, "drain flushes the pending batch once");
+    for (i, p) in pending.into_iter().enumerate() {
+        let r = p.wait().unwrap_or_else(|e| panic!("request {i} dropped on shutdown: {e}"));
+        assert_eq!(r.vid, vids[i]);
+        assert_eq!(r.logits.len(), cfg.num_classes);
+    }
+}
+
+/// `max_wait == 0` degrades to one micro-batch per request — and the loop
+/// must not deadlock waiting for a batch that can never age.
+#[test]
+fn zero_wait_serves_per_request_batches_without_deadlock() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let cfg = tiny_cfg(2);
+    let backend = NativeBackend::new();
+    let vids = targets(&ds, 6);
+    let mut t = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    let serve_cfg =
+        ServeConfig { max_batch: 64, max_wait: Duration::ZERO, queue_cap: 16, seed: SERVE_SEED };
+    let (rows, report) = serving::run(&mut t, &ds, serve_cfg, |client| {
+        // Closed loop: each wait completes before the next submit, so
+        // every request reaches the loop alone and batches stay size 1.
+        vids.iter()
+            .map(|&v| client.submit(v).expect("admitted").wait().expect("answered").logits)
+            .collect::<Vec<_>>()
+    })
+    .unwrap();
+    assert_eq!(report.served, vids.len() as u64);
+    assert_eq!(
+        report.batches,
+        vids.len() as u64,
+        "zero max_wait must flush one batch per request"
+    );
+    let mut oracle = make_trainer(&backend, &cfg, &ds, 0, CachePolicy::None, 0);
+    let offline = oracle.infer(&ds, &vids, SERVE_SEED).unwrap();
+    assert_rows_bit_match(&rows, &offline, cfg.num_classes, "zero-wait");
+}

@@ -135,9 +135,9 @@ fn case_means(v: &JsonValue) -> Vec<(String, f64)> {
 }
 
 /// On most metrics a larger value is worse (wall-clock seconds, bytes
-/// moved); `speedup` metrics invert that.
+/// moved); `speedup` and rate metrics (`rps`, `throughput`) invert that.
 fn higher_is_better(name: &str) -> bool {
-    name.contains("speedup")
+    name.contains("speedup") || name.ends_with("/rps") || name.contains("throughput")
 }
 
 /// Diff `new` against `<dir>/<basename of path>`. Returns the number of
