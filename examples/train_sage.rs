@@ -34,7 +34,7 @@ use gsplit::opts;
 use gsplit::partition::{partition_graph, Strategy};
 use gsplit::presample::{presample, PresampleConfig};
 use gsplit::runtime::NativeBackend;
-use gsplit::train::{train_epoch, ExecMode, Trainer};
+use gsplit::train::{train_epoch, ExecMode, TrainConfig, Trainer};
 use gsplit::util::timer::timed;
 
 fn main() -> Result<()> {
@@ -101,20 +101,16 @@ fn main() -> Result<()> {
 
     let workers = a.get_usize("parallel-workers", 0)?;
     let mut trainer =
-        Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?
-            .with_parallel_workers(workers);
+        Trainer::new(&backend, &cfg, fanout, part, a.get_f64("lr", 0.25)? as f32, seed)?;
 
     // Optional cache-aware loading stage, ranked by pre-sampling
     // frequency (DESIGN.md §Loading). Numerics are identical at any
     // policy/budget; only the loading byte split below changes.
     let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    let mut resident = None;
     if policy != CachePolicy::None {
-        anyhow::ensure!(
-            (1..=8).contains(&k),
-            "--cache-policy needs a modeled topology: --gpus must be between 1 and 8"
-        );
         let budget = a.get_u64("cache-budget", 4096)?;
-        let topo = Topology::for_gpus(k, 1.0);
+        let topo = Topology::for_gpus(k, 1.0)?;
         let cache = Arc::new(ResidentCache::build(
             policy,
             &pw.vertex,
@@ -128,8 +124,9 @@ fn main() -> Result<()> {
             policy.name(),
             cache.placement().coverage() * 100.0
         );
-        trainer.set_cache(Some(cache))?;
+        resident = Some(cache);
     }
+    trainer.apply_config(TrainConfig::new().parallel_workers(workers).cache(resident))?;
 
     match trainer.exec_mode() {
         ExecMode::Serial => println!("# executor: serial"),

@@ -1,8 +1,10 @@
 //! **Figure 3** — epoch time breakdown of existing systems.
 //!
-//! (a) S / L / FB per epoch for DGL, Quiver, and P3* on Orkut and
-//!     Papers100M with GraphSage and GAT (the motivation figure: loading
-//!     dominates DGL; P3* trades loading for shuffle-heavy FB).
+//! (a) S / L / FB per epoch for DGL, Quiver, P3*, and the CAGNET-style 1D
+//!     full-graph baseline on Orkut and Papers100M with GraphSage and GAT
+//!     (the motivation figure: loading dominates DGL; P3* trades loading
+//!     for shuffle-heavy FB; full-graph drops S entirely but pays
+//!     whole-graph L and shuffle).
 //! (b) percentage breakdown for Quiver on Orkut and Papers100M with
 //!     GraphSage (loading stays significant even with distributed caching).
 //! (+) loading-stage byte split of the **real-compute trainer** under each
@@ -27,18 +29,20 @@ use bench_common::*;
 use gsplit::bench_harness::BenchSuite;
 use gsplit::cache::{CachePolicy, LoadStats, ResidentCache};
 use gsplit::devices::Topology;
-use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull};
+use gsplit::exec::{DataParallel, Engine, EngineCtx, FullGraph, PushPull};
 use gsplit::graph::{Dataset, StandIn};
 use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::Partitioning;
 use gsplit::runtime::NativeBackend;
-use gsplit::train::{train_epoch, Trainer};
+use gsplit::train::{train_epoch, TrainConfig, Trainer};
 use gsplit::util::{fmt_bytes, fmt_secs, Table};
 use gsplit::Vid;
 
 fn main() {
     let mut suite = BenchSuite::new("fig3_breakdown");
-    println!("Figure 3(a) — epoch breakdown of DGL / Quiver / P3* (modeled seconds)\n");
+    println!(
+        "Figure 3(a) — epoch breakdown of DGL / Quiver / P3* / FullGraph (modeled seconds)\n"
+    );
     let mut table =
         Table::new(&["Graph", "Model", "System", "S", "L", "FB", "Total(s)", "L %"]).left(0).left(1).left(2);
     let mut quiver_pct: Vec<(String, f64, f64, f64)> = Vec::new();
@@ -55,8 +59,8 @@ fn main() {
                 FANOUT,
             );
             let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
-            let mut run = |name: &str, e: &mut dyn Engine| {
-                let (_, t) = epoch_time(e, &ctx, BATCH, SEED, iter_cap());
+            let mut run = |name: &str, e: &mut dyn Engine, batch: usize, cap: usize| {
+                let (_, t) = epoch_time(e, &ctx, batch, SEED, cap);
                 table.row(vec![
                     ds.spec.paper_name.to_string(),
                     kind.name().to_string(),
@@ -74,12 +78,16 @@ fn main() {
                 suite.metric(&format!("{base}/loading_s"), t.loading);
                 suite.metric(&format!("{base}/total_s"), t.total());
             };
-            let td = run("DGL", &mut DataParallel::dgl(&ctx));
-            let tq = run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH));
-            let tp = run("P3*", &mut PushPull::new(&ctx, BATCH));
+            let td = run("DGL", &mut DataParallel::dgl(&ctx), BATCH, iter_cap());
+            let tq = run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH), BATCH, iter_cap());
+            let tp = run("P3*", &mut PushPull::new(&ctx, BATCH), BATCH, iter_cap());
+            // Full-graph training has no mini-batches: one pass is the epoch
+            // (S ≈ 0, but L and the shuffle volume cover the whole graph).
+            let tf = run("FullGraph", &mut FullGraph::new(&ctx), usize::MAX, 1);
             record("dgl", td);
             record("quiver", tq);
             record("p3", tp);
+            record("fullgraph", tf);
             table.sep();
             if kind == GnnKind::GraphSage {
                 quiver_pct.push((
@@ -132,8 +140,10 @@ fn trace_consistency_section(suite: &mut BenchSuite) {
         k,
     };
     let backend = NativeBackend::new();
-    let mut trainer = Trainer::new(&backend, &cfg, 5, part, 0.2, SEED).expect("trainer");
-    trainer.set_trace(true);
+    let mut trainer = Trainer::new(&backend, &cfg, 5, part, 0.2, SEED)
+        .expect("trainer")
+        .with_config(TrainConfig::new().trace(true))
+        .expect("trace config");
     tracer().reset();
     let (wall, _) = gsplit::util::timer::timed(|| {
         train_epoch(&mut trainer, &ds, 256, 0).expect("traced epoch")
@@ -208,12 +218,13 @@ fn loading_split_section(suite: &mut BenchSuite) -> u64 {
         Table::new(&["Policy", "Local", "Peer (NVLink)", "Host (PCIe)", "Total"]).left(0);
     let mut uncached_total: Option<u64> = None;
     for policy in [CachePolicy::None, CachePolicy::Distributed, CachePolicy::Partitioned] {
-        let mut trainer =
-            Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED).expect("trainer");
-        if policy != CachePolicy::None {
-            let cache = ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features);
-            trainer.set_cache(Some(Arc::new(cache))).expect("cache fits trainer");
-        }
+        let cache = (policy != CachePolicy::None).then(|| {
+            Arc::new(ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features))
+        });
+        let mut trainer = Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED)
+            .expect("trainer")
+            .with_config(TrainConfig::new().cache(cache))
+            .expect("cache fits trainer");
         train_epoch(&mut trainer, &ds, batch, 0).expect("epoch");
         let split = LoadStats::sum(trainer.load_stats());
         table.row(vec![
@@ -309,12 +320,13 @@ fn loading_split_section_ooc(suite: &mut BenchSuite, ram_uncached_total: u64) {
         let mut ds = Dataset::open_ooc(&path, 0.5, SEED ^ 0x5717).expect("open .gsg");
         let store = gsplit::graph::DiskFeatureStore::open(&path).expect("open features");
         ds.features = Arc::new(store.with_buffer(256, 8));
-        let mut trainer =
-            Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED).expect("trainer");
-        if policy != CachePolicy::None {
-            let cache = ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features);
-            trainer.set_cache(Some(Arc::new(cache))).expect("cache fits trainer");
-        }
+        let cache = (policy != CachePolicy::None).then(|| {
+            Arc::new(ResidentCache::build(policy, &ranking, budget, &part, &topo, &ds.features))
+        });
+        let mut trainer = Trainer::new(&backend, &cfg, 5, part.clone(), 0.2, SEED)
+            .expect("trainer")
+            .with_config(TrainConfig::new().cache(cache))
+            .expect("cache fits trainer");
         train_epoch(&mut trainer, &ds, batch, 0).expect("epoch");
         let split = LoadStats::sum(trainer.load_stats());
         table.row(vec![

@@ -25,7 +25,7 @@ fn main() {
         Table::new(&["Graph", "GPUs", "DGL", "Quiver", "GSplit", "DGL x", "Quiver x"]).left(0);
     for ds in all_datasets() {
         for gpus in [2usize, 4, 8] {
-            let topo = Topology::for_gpus(gpus, ds.spec.scale_divisor);
+            let topo = Topology::for_gpus(gpus, ds.spec.scale_divisor).unwrap();
             let ctx = EngineCtx::new(&ds, topo, kind, HIDDEN, LAYERS, FANOUT);
             let w = presample_cached(&ds, PRESAMPLE_EPOCHS, FANOUT, LAYERS);
             let t_dgl = epoch_time(&mut DataParallel::dgl(&ctx), &ctx, BATCH, SEED, iter_cap()).1;

@@ -22,7 +22,7 @@ use gsplit::runtime::kernels::{self, KernelKind};
 use gsplit::runtime::NativeBackend;
 use gsplit::sampling::{Sampler, VertexMap};
 use gsplit::split::SplitSampler;
-use gsplit::train::{train_epoch, ExecMode, PipelineConfig, Trainer};
+use gsplit::train::{train_epoch, TrainConfig, Trainer};
 use gsplit::util::timer::timed;
 use gsplit::Vid;
 
@@ -237,8 +237,10 @@ fn main() {
     );
     suite.metric("executor/serial_epoch_s", t_serial);
     for workers in [2usize, 4] {
-        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
-        tr.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED)
+            .unwrap()
+            .with_config(TrainConfig::new().parallel_workers(workers))
+            .unwrap();
         let (t, stats) = timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("pipelined epoch"));
         assert!(
             serial_stats.iter().zip(&stats).all(|(a, b)| a.loss.to_bits() == b.loss.to_bits()),
@@ -266,9 +268,10 @@ fn main() {
             &topo,
             &tds.features,
         ));
-        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
-        tr.set_cache(Some(cache)).unwrap();
-        tr.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(4)));
+        let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED)
+            .unwrap()
+            .with_config(TrainConfig::new().parallel_workers(4).cache(Some(cache)))
+            .unwrap();
         let (t, stats) = timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("cached epoch"));
         assert!(
             serial_stats.iter().zip(&stats).all(|(a, b)| a.loss.to_bits() == b.loss.to_bits()),
@@ -338,12 +341,14 @@ fn main() {
     );
     suite.record(&s);
 
-    let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED).unwrap();
-    tr.set_trace(true);
+    let mut tr = Trainer::new(&backend, &cfg, 5, tpart.clone(), 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().trace(true))
+        .unwrap();
     gsplit::obs::tracer().reset();
     let (t_traced, traced_stats) =
         timed(|| train_epoch(&mut tr, &tds, tbatch, 0).expect("traced epoch"));
-    tr.set_trace(false);
+    gsplit::obs::set_enabled(false);
     gsplit::obs::flush_thread();
     let spans: usize = gsplit::obs::tracer().snapshot().iter().map(|t| t.spans.len()).sum();
     assert!(spans > 0, "traced epoch must record spans");

@@ -25,7 +25,7 @@ use gsplit::partition::Strategy;
 use gsplit::rng::derive_seed;
 use gsplit::runtime::NativeBackend;
 use gsplit::serving::{self, traffic, ServeConfig};
-use gsplit::train::{ExecMode, PipelineConfig, Trainer};
+use gsplit::train::{TrainConfig, Trainer};
 use gsplit::util::Table;
 
 const K: usize = 4;
@@ -48,7 +48,7 @@ fn main() {
     let backend = NativeBackend::new();
     let w = presample_cached(&ds, 3, FANOUT, LAYERS);
     let part = partition_cached(&ds, &w, Strategy::GSplit, K);
-    let topo = Topology::for_gpus(K, 1.0);
+    let topo = Topology::for_gpus(K, 1.0).unwrap();
     let traffic_cfg = traffic::TrafficConfig {
         requests,
         concurrency: 8,
@@ -77,22 +77,19 @@ fn main() {
             for workers in [0usize, 2] {
                 let mut trainer =
                     Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
-                if policy != CachePolicy::None {
-                    let cache = Arc::new(ResidentCache::build(
+                let cache = (policy != CachePolicy::None).then(|| {
+                    Arc::new(ResidentCache::build(
                         policy,
                         &w.vertex,
                         budget,
                         trainer.partitioning(),
                         &topo,
                         &ds.features,
-                    ));
-                    trainer.set_cache(Some(cache)).unwrap();
-                }
-                if workers > 0 {
-                    trainer.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(
-                        workers,
-                    )));
-                }
+                    ))
+                });
+                trainer
+                    .apply_config(TrainConfig::new().parallel_workers(workers).cache(cache))
+                    .unwrap();
                 let serve_cfg = ServeConfig {
                     max_batch: 32,
                     max_wait: std::time::Duration::from_micros(500),

@@ -1,8 +1,9 @@
 //! **Table 3** — end-to-end epoch time (S / L / FB / Total, speedup vs
-//! GSplit) for DGL, P3*, Quiver, Edge (GSplit with unweighted min-cut
-//! partitioning), and GSplit, on all three graphs × GraphSage and GAT,
-//! at the paper's defaults (4 GPUs, fanout 15, 3 layers, hidden 256,
-//! batch 1024).
+//! GSplit) for DGL, P3*, Quiver, the CAGNET-style 1D full-graph baseline,
+//! Edge (GSplit with unweighted min-cut partitioning), and GSplit, on all
+//! three graphs × GraphSage and GAT, at the paper's defaults (4 GPUs,
+//! fanout 15, 3 layers, hidden 256, batch 1024; the full-graph baseline
+//! runs one whole-graph pass per epoch instead of mini-batches).
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -10,7 +11,7 @@ mod bench_common;
 use bench_common::*;
 use gsplit::bench_harness::BenchSuite;
 use gsplit::devices::Topology;
-use gsplit::exec::{DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
+use gsplit::exec::{DataParallel, Engine, EngineCtx, FullGraph, PushPull, SplitParallel};
 use gsplit::model::GnnKind;
 use gsplit::partition::Strategy;
 use gsplit::util::{fmt_bytes, fmt_secs, Table};
@@ -32,8 +33,8 @@ fn main() {
 
             let mut rows: Vec<(String, gsplit::costmodel::PhaseBreakdown)> = Vec::new();
             let mut gsplit_load: Option<(u64, u64, u64)> = None;
-            let mut run = |name: &str, engine: &mut dyn Engine| {
-                let (c, t) = epoch_time(engine, &ctx, BATCH, SEED, iter_cap());
+            let mut run = |name: &str, engine: &mut dyn Engine, batch: usize, cap: usize| {
+                let (c, t) = epoch_time(engine, &ctx, batch, SEED, cap);
                 if name == "GSplit" {
                     gsplit_load = Some((
                         c.local_load_bytes.iter().sum(),
@@ -43,16 +44,19 @@ fn main() {
                 }
                 rows.push((name.to_string(), t));
             };
-            run("DGL", &mut DataParallel::dgl(&ctx));
-            run("P3*", &mut PushPull::new(&ctx, BATCH));
-            run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH));
+            run("DGL", &mut DataParallel::dgl(&ctx), BATCH, iter_cap());
+            run("P3*", &mut PushPull::new(&ctx, BATCH), BATCH, iter_cap());
+            run("Quiver", &mut DataParallel::quiver(&ctx, &w, BATCH), BATCH, iter_cap());
+            // Full-graph training: one whole-graph pass is the epoch. Runs
+            // before GSplit — the speedup base is the last row.
+            run("FullGraph", &mut FullGraph::new(&ctx), usize::MAX, 1);
             {
                 let part = partition_cached(&ds, &w, Strategy::Edge, ctx.k());
-                run("Edge", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH));
+                run("Edge", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH), BATCH, iter_cap());
             }
             {
                 let part = partition_cached(&ds, &w, Strategy::GSplit, ctx.k());
-                run("GSplit", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH));
+                run("GSplit", &mut SplitParallel::new(&ctx, part, &w.vertex, BATCH), BATCH, iter_cap());
             }
 
             let gsplit_total = rows.last().unwrap().1.total();

@@ -1,0 +1,381 @@
+//! Deterministic collective-communication primitives over a k×k channel
+//! fabric (DESIGN.md §Collectives).
+//!
+//! The split-parallel executor used to build its device-to-device channel
+//! fabric inline (twice — once for training, once for inference). This
+//! module owns that fabric as a reusable type, [`Fabric`], plus the three
+//! collectives the pipeline is composed of:
+//!
+//! * [`FabricEndpoint::all_to_all`] — chunked [`RowChunk`] streaming over
+//!   the k×k bounded channels with interleaved send/receive pumping, used
+//!   by the per-layer forward/backward shuffles and the pre-forward
+//!   loading exchange;
+//! * [`all_reduce`] — coordinator-side reduction of per-device tensor
+//!   contributions, applied in fixed device order;
+//! * [`broadcast`] — fan-out of one message to every worker, in fixed
+//!   worker order, delivered exactly once per receiver.
+//!
+//! # Determinism contract
+//!
+//! Every primitive is **deterministic by construction** — bit-identical
+//! results at any worker count, channel capacity, or thread interleaving:
+//!
+//! * `all_to_all` never merges floats on arrival: the caller's `deliver`
+//!   closure scatters each chunk to positions derived from the shared
+//!   plan, and callers that must accumulate stage chunks per source and
+//!   apply them in fixed device order afterwards;
+//! * `all_reduce` visits contributions in slice order (ascending device
+//!   id at every call site), reproducing the serial accumulation order
+//!   exactly — never `+=` in arrival order;
+//! * `broadcast` sends to receivers in slice order over dedicated
+//!   channels, so each receiver sees exactly one copy.
+//!
+//! # Phase alignment and deadlock freedom
+//!
+//! `all_to_all` has no barrier: both endpoints of every link compute the
+//! expected chunk count from the shared plan ([`FabricEndpoint::chunks_of`]
+//! over the same send lists), so senders and receivers agree on when a
+//! phase is complete without exchanging control messages. Channels are
+//! bounded ([`Fabric::new`]'s `channel_cap`); when a link backs up, the
+//! pump interleaves sends with receives, so small capacities throttle
+//! throughput without deadlocking. A shared abort flag (set by
+//! [`Fabric::abort_handle`] holders when a peer dies) breaks the pump out
+//! of an exchange that can never complete.
+//!
+//! Collective activity is traced under the `collective` phase
+//! ([`crate::obs::Phase::Collective`]), nested inside whatever pipeline
+//! phase the caller opened.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::obs::Phase;
+use crate::span;
+
+/// One typed all-to-all payload: `rows` holds packed row-major values for
+/// positions `start .. start + rows.len()/width` of the (from→to) send
+/// list of the current exchange phase.
+pub struct RowChunk {
+    pub start: u32,
+    pub rows: Vec<f32>,
+}
+
+/// Outbound chunk queue for one (owned device `li` → destination `to`)
+/// link of an [`FabricEndpoint::all_to_all`] call.
+pub struct OutQueue {
+    /// Index into the endpoint's owned-device list (not a device id).
+    pub li: usize,
+    /// Destination device id.
+    pub to: usize,
+    pub q: VecDeque<RowChunk>,
+}
+
+/// Spin-then-yield-then-sleep schedule for the exchange pump.
+const SPIN_YIELDS: u32 = 256;
+
+/// A k×k fabric of bounded typed channels — one directed link per device
+/// pair — plus the shared abort flag and chunking parameters every
+/// endpoint inherits. Build one per executor run, then hand each worker
+/// its devices' endpoints via [`Fabric::endpoint`].
+pub struct Fabric {
+    k: usize,
+    chunk_rows: usize,
+    abort: Arc<AtomicBool>,
+    senders: Vec<Vec<Option<SyncSender<RowChunk>>>>,
+    receivers: Vec<Vec<Option<Receiver<RowChunk>>>>,
+}
+
+impl Fabric {
+    /// Build the k×k channel fabric. Each directed link buffers at most
+    /// `channel_cap` chunks (≥1); exchange messages are split into chunks
+    /// of at most `chunk_rows` rows (≥1). Neither knob can affect results
+    /// — only throughput and memory.
+    pub fn new(k: usize, channel_cap: usize, chunk_rows: usize) -> Self {
+        let channel_cap = channel_cap.max(1);
+        let mut senders: Vec<Vec<Option<SyncSender<RowChunk>>>> =
+            (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Option<Receiver<RowChunk>>>> =
+            (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
+        for from in 0..k {
+            for to in 0..k {
+                let (tx, rx) = sync_channel::<RowChunk>(channel_cap);
+                senders[from][to] = Some(tx);
+                receivers[to][from] = Some(rx);
+            }
+        }
+        Fabric {
+            k,
+            chunk_rows: chunk_rows.max(1),
+            abort: Arc::new(AtomicBool::new(false)),
+            senders,
+            receivers,
+        }
+    }
+
+    /// Number of devices the fabric connects.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The shared abort flag: set it when a participant dies so peers
+    /// pumping an exchange fail fast instead of spinning forever.
+    pub fn abort_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.abort)
+    }
+
+    /// Take the channel endpoints of `owned` devices (each device's k
+    /// outbound senders and k inbound receivers). Every device's endpoints
+    /// can be taken exactly once; the union of all `endpoint` calls must
+    /// cover each device at most once.
+    ///
+    /// # Panics
+    ///
+    /// If a device id is out of range or its endpoints were already taken.
+    pub fn endpoint(&mut self, owned: Vec<usize>) -> FabricEndpoint {
+        let k = self.k;
+        let send: Vec<Vec<SyncSender<RowChunk>>> = owned
+            .iter()
+            .map(|&d| (0..k).map(|to| self.senders[d][to].take().expect("sender taken once")).collect())
+            .collect();
+        let recv: Vec<Vec<Receiver<RowChunk>>> = owned
+            .iter()
+            .map(|&d| {
+                (0..k).map(|from| self.receivers[d][from].take().expect("receiver taken once")).collect()
+            })
+            .collect();
+        FabricEndpoint {
+            k,
+            chunk_rows: self.chunk_rows,
+            owned,
+            send,
+            recv,
+            abort: Arc::clone(&self.abort),
+        }
+    }
+}
+
+/// One participant's side of the [`Fabric`]: the senders and receivers of
+/// its owned devices, plus the shared chunking/abort parameters. Movable
+/// into a worker thread.
+pub struct FabricEndpoint {
+    k: usize,
+    chunk_rows: usize,
+    /// Owned device ids, ascending.
+    owned: Vec<usize>,
+    /// `send[li][to]` — sender of the (owned[li] → to) channel.
+    send: Vec<Vec<SyncSender<RowChunk>>>,
+    /// `recv[li][from]` — receiver of the (from → owned[li]) channel.
+    recv: Vec<Vec<Receiver<RowChunk>>>,
+    abort: Arc<AtomicBool>,
+}
+
+impl FabricEndpoint {
+    /// Number of devices in the fabric.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The devices this endpoint owns, ascending.
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    /// Chunk count of a `rows`-row exchange message (0 rows ⇒ no message).
+    /// Sender and receiver both derive counts from the shared plan, so the
+    /// two sides of every link always agree — the no-barrier phase
+    /// alignment the module docs describe.
+    pub fn chunks_of(&self, rows: usize) -> usize {
+        if rows == 0 {
+            0
+        } else {
+            rows.div_ceil(self.chunk_rows)
+        }
+    }
+
+    /// Pack `n_rows` logical rows into [`RowChunk`]s of ≤ `chunk_rows`,
+    /// `append(i, buf)` supplying row `i`'s `width` values. The one
+    /// chunking implementation behind every exchange phase — chunk counts
+    /// always match [`FabricEndpoint::chunks_of`].
+    pub fn pack_chunks(
+        &self,
+        n_rows: usize,
+        width: usize,
+        mut append: impl FnMut(usize, &mut Vec<f32>),
+    ) -> VecDeque<RowChunk> {
+        let mut out = VecDeque::with_capacity(self.chunks_of(n_rows));
+        let mut start = 0usize;
+        while start < n_rows {
+            let n = (n_rows - start).min(self.chunk_rows);
+            let mut rows = Vec::with_capacity(n * width);
+            for i in start..start + n {
+                append(i, &mut rows);
+            }
+            out.push_back(RowChunk { start: start as u32, rows });
+            start += n;
+        }
+        out
+    }
+
+    /// Pack `src` rows at `idx` positions into chunks of ≤ `chunk_rows`.
+    pub fn pack_rows(&self, src: &[f32], idx: &[u32], width: usize) -> VecDeque<RowChunk> {
+        self.pack_chunks(idx.len(), width, |i, rows| {
+            let p = idx[i] as usize;
+            rows.extend_from_slice(&src[p * width..(p + 1) * width]);
+        })
+    }
+
+    /// One all-to-all exchange phase: drive the queued sends in `outgoing`
+    /// and the expected receives in `expect[li][from]` (chunk counts, from
+    /// [`FabricEndpoint::chunks_of`] over the shared plan) to completion,
+    /// interleaving both so bounded channels cannot deadlock.
+    /// `deliver(li, from, chunk)` consumes each arriving chunk; it must
+    /// scatter to disjoint positions or stage for a later fixed-order
+    /// reduction — never accumulate in arrival order (the determinism
+    /// contract in the module docs).
+    pub fn all_to_all(
+        &self,
+        outgoing: &mut [OutQueue],
+        expect: &mut [Vec<usize>],
+        mut deliver: impl FnMut(usize, usize, RowChunk),
+    ) -> Result<()> {
+        let _s = span!(Phase::Collective);
+        let mut spins = 0u32;
+        loop {
+            let mut progress = false;
+            for oq in outgoing.iter_mut() {
+                while let Some(chunk) = oq.q.pop_front() {
+                    match self.send[oq.li][oq.to].try_send(chunk) {
+                        Ok(()) => progress = true,
+                        Err(TrySendError::Full(c)) => {
+                            oq.q.push_front(c);
+                            break;
+                        }
+                        Err(TrySendError::Disconnected(_)) => bail!("row channel closed"),
+                    }
+                }
+            }
+            let mut pending = outgoing.iter().any(|o| !o.q.is_empty());
+            for li in 0..self.owned.len() {
+                for from in 0..self.k {
+                    while expect[li][from] > 0 {
+                        match self.recv[li][from].try_recv() {
+                            Ok(chunk) => {
+                                expect[li][from] -= 1;
+                                progress = true;
+                                deliver(li, from, chunk);
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => bail!("row channel closed"),
+                        }
+                    }
+                    if expect[li][from] > 0 {
+                        pending = true;
+                    }
+                }
+            }
+            if !pending {
+                return Ok(());
+            }
+            if self.abort.load(Ordering::Relaxed) {
+                bail!("aborted: a peer worker failed");
+            }
+            if progress {
+                spins = 0;
+            } else {
+                spins += 1;
+                if spins < SPIN_YIELDS {
+                    thread::yield_now();
+                } else {
+                    thread::sleep(Duration::from_micros(50));
+                }
+            }
+        }
+    }
+}
+
+/// Fixed-order all-reduce: accumulate each participant's per-tensor
+/// contribution into `acc`, visiting `contribs` strictly in slice order
+/// (ascending device id at every call site) — the serial accumulation
+/// order, bit-identical at any worker count. `None` entries (devices that
+/// were inactive this phase) are skipped without perturbing the order.
+pub fn all_reduce(acc: &mut [Vec<f32>], contribs: &[Option<&Vec<Vec<f32>>>]) {
+    let _s = span!(Phase::Collective);
+    for contrib in contribs.iter().flatten() {
+        for (t, g) in acc.iter_mut().zip(contrib.iter()) {
+            for (a, b) in t.iter_mut().zip(g) {
+                *a += b;
+            }
+        }
+    }
+}
+
+/// Broadcast `msg` to every receiver in fixed slice order. Each receiver
+/// gets exactly one copy (dedicated channels, one send per receiver); the
+/// last send moves `msg` instead of cloning it. Fails if any receiver has
+/// hung up.
+pub fn broadcast<T: Clone>(txs: &[SyncSender<T>], msg: T) -> Result<()> {
+    let _s = span!(Phase::Collective);
+    if let Some((last, rest)) = txs.split_last() {
+        for tx in rest {
+            tx.send(msg.clone()).map_err(|_| anyhow!("broadcast receiver disconnected"))?;
+        }
+        last.send(msg).map_err(|_| anyhow!("broadcast receiver disconnected"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_of_matches_pack_chunks() {
+        let mut fabric = Fabric::new(1, 1, 3);
+        let ep = fabric.endpoint(vec![0]);
+        for rows in [0usize, 1, 2, 3, 4, 6, 7] {
+            let chunks = ep.pack_chunks(rows, 2, |i, buf| buf.extend([i as f32, 0.0]));
+            assert_eq!(chunks.len(), ep.chunks_of(rows), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_skips_inactive_and_sums_in_order() {
+        let mut acc = vec![vec![0f32; 3], vec![0f32; 2]];
+        let a = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0]];
+        let b = vec![vec![10.0, 20.0, 30.0], vec![40.0, 50.0]];
+        all_reduce(&mut acc, &[Some(&a), None, Some(&b)]);
+        assert_eq!(acc[0], vec![11.0, 22.0, 33.0]);
+        assert_eq!(acc[1], vec![44.0, 55.0]);
+    }
+
+    #[test]
+    fn broadcast_delivers_one_copy_per_receiver() {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..3).map(|_| sync_channel::<u32>(1)).unzip();
+        broadcast(&txs, 7).unwrap();
+        for rx in &rxs {
+            assert_eq!(rx.recv().unwrap(), 7);
+            assert!(rx.try_recv().is_err(), "exactly one copy per receiver");
+        }
+    }
+
+    #[test]
+    fn broadcast_fails_on_disconnected_receiver() {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..2).map(|_| sync_channel::<u32>(1)).unzip();
+        drop(rxs);
+        assert!(broadcast(&txs, 1).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "taken once")]
+    fn endpoint_double_take_panics() {
+        let mut fabric = Fabric::new(2, 1, 1);
+        let _a = fabric.endpoint(vec![0]);
+        let _b = fabric.endpoint(vec![0]);
+    }
+}

@@ -207,17 +207,18 @@ impl Topology {
     ///
     /// Truncation keeps `direct` square at `gpus × gpus` and updates
     /// `gpus_per_host` in the same step, so `num_gpus()` and `link()`
-    /// agree for every size (see the regression test below). Requests for
-    /// more than 8 GPUs panic: no single-host V100 instance has them —
-    /// use [`Topology::multi_host`] instead.
-    pub fn for_gpus(gpus: usize, scale_divisor: f64) -> Self {
-        assert!(gpus >= 1, "topology needs at least one GPU");
-        assert!(
-            gpus <= 8,
-            "single-host topologies model at most 8 GPUs (p3.16xlarge); \
-             use Topology::multi_host for {gpus}"
-        );
-        if gpus <= 4 {
+    /// agree for every size (see the regression test below). Out-of-range
+    /// requests return [`TopologyError`] instead of panicking: no
+    /// single-host V100 instance has more than 8 GPUs — use
+    /// [`Topology::multi_host`] for those.
+    pub fn for_gpus(gpus: usize, scale_divisor: f64) -> Result<Self, TopologyError> {
+        if gpus < 1 {
+            return Err(TopologyError::NoGpus);
+        }
+        if gpus > 8 {
+            return Err(TopologyError::TooManyGpus { requested: gpus });
+        }
+        Ok(if gpus <= 4 {
             Self::single_host(gpus, true, scale_divisor)
         } else {
             let mut t = Self::p3_16xlarge(scale_divisor);
@@ -229,9 +230,34 @@ impl Topology {
             debug_assert!(t.direct.len() == t.num_gpus());
             debug_assert!(t.direct.iter().all(|r| r.len() == t.num_gpus()));
             t
+        })
+    }
+}
+
+/// A GPU-count request no modeled instance can satisfy
+/// ([`Topology::for_gpus`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyError {
+    /// Requested zero GPUs.
+    NoGpus,
+    /// Requested more GPUs than any single-host V100 instance has.
+    TooManyGpus { requested: usize },
+}
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::NoGpus => write!(f, "topology needs at least one GPU"),
+            TopologyError::TooManyGpus { requested } => write!(
+                f,
+                "single-host topologies model at most 8 GPUs (p3.16xlarge), \
+                 got {requested}; use Topology::multi_host for multi-host runs"
+            ),
         }
     }
 }
+
+impl std::error::Error for TopologyError {}
 
 #[cfg(test)]
 mod tests {
@@ -301,7 +327,7 @@ mod tests {
         // must agree — every pair below `num_gpus()` resolves without
         // panicking, the diagonal is Local, and links are symmetric.
         for g in 1..=8usize {
-            let t = Topology::for_gpus(g, 32.0);
+            let t = Topology::for_gpus(g, 32.0).unwrap();
             assert_eq!(t.num_gpus(), g, "num_gpus for size {g}");
             for a in 0..g as u16 {
                 for b in 0..g as u16 {
@@ -317,14 +343,14 @@ mod tests {
         }
         // 5-GPU cube-mesh subset: GPU 4 keeps its NVLink to 0 but reaches
         // 1–3 through host memory.
-        let t5 = Topology::for_gpus(5, 32.0);
+        let t5 = Topology::for_gpus(5, 32.0).unwrap();
         assert_eq!(t5.link(4, 0), LinkKind::NvLink);
         assert_eq!(t5.link(4, 1), LinkKind::PcieHost);
     }
 
     #[test]
     fn has_nvlink_is_total_over_out_of_range_devices() {
-        let t = Topology::for_gpus(5, 32.0);
+        let t = Topology::for_gpus(5, 32.0).unwrap();
         assert!(t.has_nvlink(0, 1));
         assert!(!t.has_nvlink(0, 5), "unmodeled device is never linked");
         assert!(!t.has_nvlink(9, 0));
@@ -332,9 +358,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "at most 8 GPUs")]
-    fn for_gpus_rejects_more_than_one_host() {
-        let _ = Topology::for_gpus(9, 1.0);
+    fn for_gpus_rejects_out_of_range_counts_with_typed_errors() {
+        // Regression: >8 GPUs used to panic deep inside topology
+        // construction; now it is a typed error a CLI can print.
+        let err = Topology::for_gpus(9, 1.0).unwrap_err();
+        assert_eq!(err, TopologyError::TooManyGpus { requested: 9 });
+        assert!(err.to_string().contains("at most 8 GPUs"), "{err}");
+        assert!(err.to_string().contains("multi_host"), "{err}");
+        assert_eq!(Topology::for_gpus(0, 1.0).unwrap_err(), TopologyError::NoGpus);
+        // The boundary sizes stay fine.
+        assert!(Topology::for_gpus(1, 1.0).is_ok());
+        assert!(Topology::for_gpus(8, 1.0).is_ok());
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! CAGNET-style 1D full-graph engine (Tripathy et al., SC'20): no
+//! sampling at all — every epoch is one full-graph forward/backward pass.
+//! The adjacency (and the feature matrix with it) is row-partitioned into
+//! `k` contiguous blocks, one per GPU; at every layer each GPU aggregates
+//! the *full* neighborhoods of its owned rows, which requires an
+//! all-to-all of the activation rows owned by other partitions. A remote
+//! row transfers **once per needing device per layer** (the CAGNET
+//! broadcast is counted at its useful volume), at that layer's input
+//! width.
+//!
+//! This is the sampling-free baseline the paper's mini-batch systems are
+//! implicitly compared against: S is (near) zero, but L and the shuffle
+//! volume scale with the whole graph instead of a mini-batch frontier.
+
+use crate::costmodel::IterCounters;
+use crate::exec::{add_grad_allreduce, Engine, EngineCtx};
+use crate::graph::{FeatureSource, HostTier};
+use crate::{DeviceId, Vid};
+
+pub struct FullGraph {
+    k: usize,
+    /// Exclusive upper bound of each device's contiguous vertex block:
+    /// device `d` owns rows `[bounds[d-1], bounds[d])` (with `bounds[-1]`
+    /// read as 0).
+    bounds: Vec<usize>,
+}
+
+impl FullGraph {
+    /// Row-partition the graph in `ctx` into `ctx.k()` contiguous blocks.
+    pub fn new(ctx: &EngineCtx) -> Self {
+        let n = ctx.ds.graph.num_vertices();
+        let k = ctx.k();
+        FullGraph { k, bounds: (1..=k).map(|d| d * n / k).collect() }
+    }
+
+    /// Device owning vertex `v` under the 1D row partition.
+    pub fn owner(&self, v: Vid) -> usize {
+        self.bounds.partition_point(|&b| b <= v as usize)
+    }
+
+    /// Half-open vertex range `[lo, hi)` owned by device `d`.
+    pub fn block(&self, d: usize) -> (usize, usize) {
+        let lo = if d == 0 { 0 } else { self.bounds[d - 1] };
+        (lo, self.bounds[d])
+    }
+}
+
+impl Engine for FullGraph {
+    fn name(&self) -> &'static str {
+        "FullGraph"
+    }
+
+    /// One full-graph pass. `targets` and `seed` are ignored: full-graph
+    /// training touches every vertex every epoch and has no sampling
+    /// randomness, so callers should run **one** iteration per epoch
+    /// (e.g. `run_epoch` with `batch_size >= |targets|`).
+    fn iteration(&mut self, ctx: &EngineCtx, _targets: &[Vid], _seed: u64) -> IterCounters {
+        let mut c = IterCounters::new(self.k);
+        let g = &ctx.ds.graph;
+        let row_bytes = ctx.ds.features.row_bytes();
+        // Loading: the feature matrix is partitioned with the rows — each
+        // device stages exactly its own block from the host, split by the
+        // feature source's tier like the mini-batch engines (`probe_row`
+        // advances the same chunk-buffer state as a real fetch).
+        for d in 0..self.k {
+            let (lo, hi) = self.block(d);
+            for v in lo..hi {
+                match ctx.ds.features.probe_row(v as Vid) {
+                    HostTier::Ram => c.host_load_bytes[d] += row_bytes,
+                    HostTier::Disk => c.disk_load_bytes[d] += row_bytes,
+                }
+            }
+        }
+        // Per layer (model order, bottom up): full-neighborhood aggregation
+        // over owned rows plus the all-to-all of remote activation rows.
+        // `seen` deduplicates remote rows per (layer, destination device) —
+        // a row crosses each needed link once per layer.
+        let mut seen = vec![u32::MAX; g.num_vertices()];
+        for l in 0..ctx.model.num_layers {
+            let hid_bytes = ctx.model.row_bytes_in(l);
+            for d in 0..self.k {
+                let stamp = (l * self.k + d) as u32;
+                let (lo, hi) = self.block(d);
+                let mut edges = 0u64;
+                for v in lo..hi {
+                    for &u in g.neighbors(v as Vid) {
+                        edges += 1;
+                        let o = self.owner(u);
+                        if o != d && seen[u as usize] != stamp {
+                            seen[u as usize] = stamp;
+                            c.train_comm.add(o as DeviceId, d as DeviceId, hid_bytes);
+                        }
+                    }
+                }
+                c.fwd_flops[d] += ctx.model.layer_fwd_flops(l, (hi - lo) as u64, edges);
+                c.agg_bytes[d] += ctx.model.layer_agg_bytes(l, (hi - lo) as u64, edges);
+            }
+        }
+        add_grad_allreduce(&mut c, ctx.param_bytes());
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Topology;
+    use crate::graph::StandIn;
+    use crate::model::GnnKind;
+
+    fn ctx(ds: &crate::graph::Dataset, topo: Topology) -> EngineCtx<'_> {
+        EngineCtx::new(ds, topo, GnnKind::GraphSage, 64, 2, 5)
+    }
+
+    #[test]
+    fn blocks_cover_vertices_and_owner_agrees() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let c = ctx(&ds, Topology::p3_8xlarge(1.0));
+        let fg = FullGraph::new(&c);
+        let n = ds.graph.num_vertices();
+        let mut covered = 0usize;
+        for d in 0..c.k() {
+            let (lo, hi) = fg.block(d);
+            covered += hi - lo;
+            for v in lo..hi {
+                assert_eq!(fg.owner(v as Vid), d, "vertex {v}");
+            }
+        }
+        assert_eq!(covered, n, "blocks must partition the vertex set");
+    }
+
+    #[test]
+    fn processes_every_edge_every_layer_without_sampling() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let c = ctx(&ds, Topology::p3_8xlarge(1.0));
+        let mut fg = FullGraph::new(&c);
+        let out = fg.iteration(&c, &[], 0);
+        // No sampling phase at all.
+        assert_eq!(out.sampled_edges.iter().sum::<u64>(), 0);
+        assert_eq!(out.sample_comm.total_remote(), 0);
+        // Full feature matrix loaded exactly once.
+        let loaded: u64 =
+            out.host_load_bytes.iter().sum::<u64>() + out.disk_load_bytes.iter().sum::<u64>();
+        assert_eq!(loaded, ds.graph.num_vertices() as u64 * ds.features.row_bytes());
+        // Compute covers owned rows on every device.
+        assert!(out.fwd_flops.iter().all(|&f| f > 0), "{:?}", out.fwd_flops);
+    }
+
+    #[test]
+    fn deterministic_and_target_independent() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let c = ctx(&ds, Topology::p3_8xlarge(1.0));
+        let mut fg = FullGraph::new(&c);
+        let a = fg.iteration(&c, &[1, 2, 3], 7);
+        let b = fg.iteration(&c, &[], 99);
+        assert_eq!(a.train_comm, b.train_comm);
+        assert_eq!(a.fwd_flops, b.fwd_flops);
+        assert_eq!(a.host_load_bytes, b.host_load_bytes);
+    }
+
+    #[test]
+    fn remote_rows_dedup_per_layer_and_destination() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let c = ctx(&ds, Topology::p3_8xlarge(1.0));
+        let mut fg = FullGraph::new(&c);
+        let out = fg.iteration(&c, &[], 0);
+        // Upper bound: every remote row at most once per (layer, dst) pair,
+        // i.e. strictly less than counting one transfer per cross edge.
+        let mut per_edge = 0u64;
+        for l in 0..c.model.num_layers {
+            let w = c.model.row_bytes_in(l);
+            for d in 0..c.k() {
+                let (lo, hi) = fg.block(d);
+                for v in lo..hi {
+                    for &u in ds.graph.neighbors(v as Vid) {
+                        if fg.owner(u) != d {
+                            per_edge += w;
+                        }
+                    }
+                }
+            }
+        }
+        let allreduce = {
+            let mut base = IterCounters::new(c.k());
+            add_grad_allreduce(&mut base, c.param_bytes());
+            base.train_comm.total_remote()
+        };
+        let shuffled = out.train_comm.total_remote() - allreduce;
+        assert!(shuffled > 0, "cross-partition edges must shuffle rows");
+        assert!(shuffled <= per_edge, "dedup must not exceed per-edge counting");
+    }
+
+    #[test]
+    fn single_gpu_has_no_shuffle_or_allreduce() {
+        let ds = StandIn::Tiny.load().unwrap();
+        let c = ctx(&ds, Topology::single_host(1, false, 1.0));
+        let mut fg = FullGraph::new(&c);
+        let out = fg.iteration(&c, &[], 0);
+        assert_eq!(out.train_comm.total_remote(), 0);
+    }
+}

@@ -5,6 +5,7 @@
 //! | [`DataParallel::dgl`]    | DGL    | data parallel | none |
 //! | [`DataParallel::quiver`] | Quiver | data parallel | distributed (NVLink, replicated across cliques) |
 //! | [`PushPull`]             | P3\*   | push-pull hybrid | feature slices (full graphs only) |
+//! | [`FullGraph`]            | CAGNET (1D) | full-graph, row-partitioned | none (features partitioned with the rows) |
 //! | [`SplitParallel`]        | GSplit | split parallel | partitioned, consistent with `f_G` |
 //!
 //! Engines execute the *real* sampling / splitting / cache-lookup / shuffle
@@ -13,10 +14,12 @@
 //! the real-compute training path (`train/`).
 
 mod data_parallel;
+mod full_graph;
 mod push_pull;
 mod split_parallel;
 
 pub use data_parallel::DataParallel;
+pub use full_graph::FullGraph;
 pub use push_pull::PushPull;
 pub use split_parallel::SplitParallel;
 

@@ -8,8 +8,9 @@
 //!   sampling, the online splitting algorithm with its offline pre-sampling +
 //!   weighted min-edge-cut partitioning stages, feature caches, a simulated
 //!   multi-GPU/multi-host device topology with a calibrated transfer cost
-//!   model, and four training engines (DGL-like data parallel, Quiver-like
-//!   cached data parallel, P3*-like push-pull, and GSplit split parallel).
+//!   model, and five training engines (DGL-like data parallel, Quiver-like
+//!   cached data parallel, P3*-like push-pull, CAGNET-style 1D full-graph,
+//!   and GSplit split parallel).
 //! * **runtime** — the numeric [`Backend`](crate::runtime::Backend)
 //!   abstraction behind the trainer. The default build uses the pure-Rust
 //!   [`NativeBackend`](crate::runtime::NativeBackend) (GraphSage/GAT
@@ -23,9 +24,14 @@
 //!
 //! See `README.md` for the architecture map and experiment index.
 
+// The pre-`TrainConfig` setters survive only as deprecated shims for
+// downstream callers; nothing inside the crate may use them.
+#![deny(deprecated)]
+
 pub mod bench_harness;
 pub mod cache;
 pub mod cli;
+pub mod collectives;
 pub mod config;
 pub mod costmodel;
 pub mod devices;

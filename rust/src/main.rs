@@ -10,6 +10,8 @@
 //!   gen        generate and cache a stand-in dataset graph
 //!   info       print dataset/topology/manifest information
 
+#![deny(deprecated)]
+
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -20,7 +22,7 @@ use gsplit::cli::Args;
 use gsplit::config::{parse_dataset, parse_model};
 use gsplit::costmodel::PhaseBreakdown;
 use gsplit::devices::Topology;
-use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, PushPull, SplitParallel};
+use gsplit::exec::{run_epoch, DataParallel, Engine, EngineCtx, FullGraph, PushPull, SplitParallel};
 use gsplit::graph::{Dataset, FeatureSource};
 use gsplit::model::ModelConfig;
 use gsplit::opts;
@@ -29,7 +31,7 @@ use gsplit::presample::{presample, PresampleConfig};
 use gsplit::rng::derive_seed;
 use gsplit::runtime::{Backend, NativeBackend};
 use gsplit::serving::{self, traffic};
-use gsplit::train::{train_epoch, ExecMode, Trainer};
+use gsplit::train::{train_epoch, ExecMode, TrainConfig, Trainer};
 use gsplit::util::{fmt_secs, Table};
 
 fn main() -> Result<()> {
@@ -174,18 +176,15 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
     let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
     let workers = a.get_usize("parallel-workers", 0)?;
     let mut trainer =
-        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?
-            .with_parallel_workers(workers);
+        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?;
 
     // Cache-aware loading stage (DESIGN.md §Loading): serve input rows
     // from per-GPU resident caches, ranked by pre-sampling frequency.
     let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    let mut resident = None;
     if policy != CachePolicy::None {
-        if !(1..=8).contains(&k) {
-            bail!("--cache-policy needs a modeled topology: --gpus must be between 1 and 8");
-        }
         let budget = a.get_u64("cache-budget", 4096)?;
-        let topo = Topology::for_gpus(k, 1.0);
+        let topo = Topology::for_gpus(k, 1.0)?;
         let cache = Arc::new(ResidentCache::build(
             policy,
             &pw.vertex,
@@ -201,8 +200,10 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> Result<()> {
             placement.coverage() * 100.0,
             gsplit::util::fmt_bytes((0..k as u16).map(|d| cache.store().bytes_on(d)).sum::<u64>()),
         );
-        trainer.set_cache(Some(cache))?;
+        resident = Some(cache);
     }
+    trainer
+        .apply_config(TrainConfig::new().parallel_workers(workers).cache(resident))?;
 
     let exec = match trainer.exec_mode() {
         ExecMode::Serial => "serial".to_string(),
@@ -335,16 +336,13 @@ fn cmd_serve(argv: impl Iterator<Item = String>) -> Result<()> {
     let part = partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, k, 0.05, seed);
     let workers = a.get_usize("parallel-workers", 0)?;
     let mut trainer =
-        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?
-            .with_parallel_workers(workers);
+        Trainer::new(backend.as_ref(), &cfg, fanout, part, a.get_f64("lr", 0.2)? as f32, seed)?;
 
     let policy = CachePolicy::parse(&a.get_str("cache-policy", "none"))?;
+    let mut resident = None;
     if policy != CachePolicy::None {
-        if !(1..=8).contains(&k) {
-            bail!("--cache-policy needs a modeled topology: --gpus must be between 1 and 8");
-        }
         let budget = a.get_u64("cache-budget", 4096)?;
-        let topo = Topology::for_gpus(k, 1.0);
+        let topo = Topology::for_gpus(k, 1.0)?;
         let cache = Arc::new(ResidentCache::build(
             policy,
             &pw.vertex,
@@ -358,8 +356,10 @@ fn cmd_serve(argv: impl Iterator<Item = String>) -> Result<()> {
             policy.name(),
             cache.placement().coverage() * 100.0,
         );
-        trainer.set_cache(Some(cache))?;
+        resident = Some(cache);
     }
+    trainer
+        .apply_config(TrainConfig::new().parallel_workers(workers).cache(resident))?;
 
     let exec = match trainer.exec_mode() {
         ExecMode::Serial => "serial".to_string(),
@@ -466,7 +466,7 @@ fn cmd_serve(argv: impl Iterator<Item = String>) -> Result<()> {
 fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
     let spec = opts![
         ("dataset", true, "orkut-s|papers-s|friendster-s|tiny (default tiny)"),
-        ("system", true, "dgl|quiver|p3|gsplit (default gsplit)"),
+        ("system", true, "dgl|quiver|p3|fullgraph|gsplit (default gsplit)"),
         ("model", true, "sage|gat (default sage)"),
         ("gpus", true, "GPUs (default 4)"),
         ("hosts", true, "hosts of 4 GPUs each (default 1; overrides --gpus)"),
@@ -484,10 +484,8 @@ fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
         Topology::multi_host(hosts, ds.spec.scale_divisor)
     } else {
         let gpus = a.get_usize("gpus", 4)?;
-        if !(1..=8).contains(&gpus) {
-            bail!("--gpus must be between 1 and 8 on a single host (use --hosts for more GPUs)");
-        }
         Topology::for_gpus(gpus, ds.spec.scale_divisor)
+            .map_err(|e| anyhow::anyhow!("--gpus {gpus}: {e} (or pass --hosts for more GPUs)"))?
     };
     let batch = a.get_usize("batch", 1024)?;
     let seed = a.get_u64("seed", 42)?;
@@ -510,6 +508,7 @@ fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
         "dgl" => Box::new(DataParallel::dgl(&ctx)),
         "quiver" => Box::new(DataParallel::quiver(&ctx, &pw, batch)),
         "p3" | "p3*" => Box::new(PushPull::new(&ctx, batch)),
+        "full" | "fullgraph" | "cagnet" => Box::new(FullGraph::new(&ctx)),
         "gsplit" => {
             let part =
                 partition_graph(&ds.graph, &pw, &mask, Strategy::GSplit, ctx.k(), 0.05, seed);
@@ -517,7 +516,9 @@ fn cmd_epoch(argv: impl Iterator<Item = String>) -> Result<()> {
         }
         other => bail!("unknown system `{other}`"),
     };
-    let (counters, time) = run_epoch(engine.as_mut(), &ctx, batch, seed);
+    // Full-graph training has no mini-batches: one iteration is the epoch.
+    let eff_batch = if engine.name() == "FullGraph" { usize::MAX } else { batch };
+    let (counters, time) = run_epoch(engine.as_mut(), &ctx, eff_batch, seed);
     print_breakdown(engine.name(), &ds.spec.name, &time);
     println!(
         "loads: host {} | peer {} | shuffle {}",

@@ -8,8 +8,9 @@
 //!
 //! * a process-global [`Tracer`] recording [`Span`]s into per-thread
 //!   buffers. Tracing is a no-op unless enabled (`GSPLIT_TRACE=<path>`,
-//!   [`set_enabled`], or `Trainer::set_trace`); the disabled hot path is
-//!   one relaxed atomic load;
+//!   [`set_enabled`], or `TrainConfig::trace` applied through
+//!   `Trainer::with_config`); the disabled hot path is one relaxed atomic
+//!   load;
 //! * a typed [`metrics`] registry (`Counter` / `Gauge` with static label
 //!   sets) that the loading tiers, the cache, and the engines publish
 //!   into, so byte accounting is snapshot-able without hand-copying
@@ -93,6 +94,10 @@ pub enum Phase {
     /// The split-parallel forward-only inference inside a served
     /// micro-batch (`Trainer::infer`: plan + exchange + compute).
     ServeInfer,
+    /// Time inside a `crate::collectives` primitive (all-to-all pump,
+    /// fixed-order all-reduce, job broadcast) — nested inside whatever
+    /// pipeline phase opened the collective.
+    Collective,
 }
 
 /// Paper-style grouping of [`Phase`]s into the Figure-3 S/L/FB breakdown.
@@ -113,7 +118,7 @@ pub enum PhaseGroup {
 
 impl Phase {
     /// Every phase, for exhaustive iteration in validators and benches.
-    pub const ALL: [Phase; 18] = [
+    pub const ALL: [Phase; 19] = [
         Phase::Sample,
         Phase::Load,
         Phase::SampleAhead,
@@ -132,6 +137,7 @@ impl Phase {
         Phase::CacheBuild,
         Phase::ServeBatch,
         Phase::ServeInfer,
+        Phase::Collective,
     ];
 
     /// Stable wire name (the Chrome event `cat` field).
@@ -155,6 +161,7 @@ impl Phase {
             Phase::CacheBuild => "cache_build",
             Phase::ServeBatch => "serve_batch",
             Phase::ServeInfer => "serve_infer",
+            Phase::Collective => "collective",
         }
     }
 
@@ -321,8 +328,8 @@ pub fn enabled() -> bool {
     tracer().enabled()
 }
 
-/// Enable or disable the global tracer (`Trainer::set_trace` forwards
-/// here).
+/// Enable or disable the global tracer (`TrainConfig::trace` forwards
+/// here when applied).
 pub fn set_enabled(on: bool) {
     tracer().set_enabled(on);
 }

@@ -7,10 +7,10 @@
 //!   to `workers` OS threads; each device runs its own [`Backend`] layer
 //!   calls on its slice of the mini-batch,
 //! * **exchange stage** — per-layer all-to-all shuffles of hidden-feature
-//!   rows (forward) and their gradients (backward) flow through a `k × k`
-//!   fabric of typed bounded channels ([`RowChunk`] messages), mirroring
-//!   Algorithms 1–2; gradient all-reduce contributions and loss statistics
-//!   travel to the coordinator over a typed result channel,
+//!   rows (forward) and their gradients (backward) flow through a
+//!   [`Fabric`] of typed bounded channels ([`RowChunk`] messages),
+//!   mirroring Algorithms 1–2; gradient all-reduce contributions and loss
+//!   statistics travel to the coordinator over a typed result channel,
 //! * **plan stage** — while the workers train batch *t*, the coordinator
 //!   thread runs the plan stage for batch *t+1* (cooperative sampling +
 //!   input-feature gather), the paper §6 inter-batch overlap.
@@ -21,35 +21,23 @@
 //! cache over the same channel fabric, before the first forward shuffle
 //! (DESIGN.md §Loading). Destination rows are distinct and the payloads
 //! are bit-exact copies of host rows, so the phase preserves the
-//! determinism contract below at every cache policy and budget.
-//!
-//! # Determinism contract
+//! determinism contract at every cache policy and budget.
 //!
 //! The executor is **bit-identical** to the serial trainer for the same
-//! seed, at every worker count and channel capacity:
-//!
-//! * per-device compute is self-contained, so thread interleaving cannot
-//!   change it;
-//! * forward shuffle rows land at disjoint `mixed_src` positions (the
-//!   shuffle index is a bijection), so arrival order is irrelevant;
-//! * backward reverse-shuffle contributions are **staged per source
-//!   device** and applied in fixed device order `0..k` (each source's
-//!   chunks in send-list order), reproducing the serial scatter-add
-//!   ordering exactly;
-//! * loss statistics and parameter gradients are reduced by the
-//!   coordinator in fixed device order, and the SGD step runs on the one
-//!   canonical [`ParamStore`].
-//!
-//! Channels are bounded (`channel_cap` chunks per directed link); when a
-//! link backs up, workers interleave sends with receives, so small
-//! capacities throttle throughput without deadlocking.
+//! seed, at every worker count and channel capacity. The communication
+//! primitives carrying that contract — the chunked all-to-all pump, the
+//! fixed-order all-reduce, and the job broadcast — live in
+//! [`crate::collectives`] (DESIGN.md §Collectives); this module adds the
+//! trainer-specific composition: per-device compute is self-contained (so
+//! thread interleaving cannot change it), forward shuffle rows scatter to
+//! disjoint `mixed_src` positions, backward contributions are staged per
+//! source device and applied in fixed device order `0..k`, and the
+//! coordinator reduces loss statistics and gradients in fixed device
+//! order before the SGD step on the one canonical [`ParamStore`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
-    TrySendError,
-};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
@@ -57,6 +45,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use crate::cache::ResidentCache;
+use crate::collectives::{self, Fabric, FabricEndpoint, OutQueue, RowChunk};
 use crate::graph::{Dataset, FeatureSource};
 use crate::model::{ModelConfig, ParamStore};
 use crate::obs::Phase;
@@ -69,14 +58,35 @@ use super::plan::PreparedBatch;
 use super::{IterStats, Trainer};
 
 /// How a [`Trainer`] executes mini-batches.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
     /// Reference executor: every simulated device runs one after another on
     /// the calling thread.
+    #[default]
     Serial,
     /// Threaded, pipelined executor — bit-identical to [`ExecMode::Serial`]
     /// for the same seed (see the module docs for the contract).
     Pipelined(PipelineConfig),
+}
+
+impl ExecMode {
+    /// The single executor-selection surface: training, evaluation, and
+    /// inference (and therefore serving, which routes through
+    /// `Trainer::infer`) all pick serial-vs-pipelined here, so a future
+    /// execution engine is one new match arm instead of one per entry
+    /// point. `ctx` threads the caller's state (e.g. `&mut Trainer` plus
+    /// a prepared batch) into whichever arm runs.
+    pub fn dispatch<C, T>(
+        self,
+        ctx: C,
+        serial: impl FnOnce(C) -> Result<T>,
+        pipelined: impl FnOnce(C, PipelineConfig) -> Result<T>,
+    ) -> Result<T> {
+        match self {
+            ExecMode::Serial => serial(ctx),
+            ExecMode::Pipelined(cfg) => pipelined(ctx, cfg),
+        }
+    }
 }
 
 /// Tuning knobs of the pipelined executor.
@@ -115,15 +125,9 @@ pub(super) struct BatchSpec {
     pub plan_seed: u64,
 }
 
-/// One typed all-to-all payload: `rows` holds packed row-major values for
-/// positions `start .. start + rows.len()/width` of the (from→to) shuffle
-/// index lists of the current exchange phase.
-struct RowChunk {
-    start: u32,
-    rows: Vec<f32>,
-}
-
-/// Work order broadcast to every worker.
+/// Work order broadcast to every worker ([`collectives::broadcast`] — the
+/// `Clone` is per-receiver; payloads are shared via [`Arc`]).
+#[derive(Clone)]
 enum Job {
     Batch {
         idx: usize,
@@ -168,16 +172,6 @@ enum WorkerMsg {
     Err(String),
 }
 
-/// Outbound chunk queue for one (owned device → destination) link.
-struct OutQueue {
-    li: usize,
-    to: usize,
-    q: VecDeque<RowChunk>,
-}
-
-/// Spin-then-yield-then-sleep schedule for the exchange pump.
-const SPIN_YIELDS: u32 = 256;
-
 /// Sets the shared abort flag when dropped, so fellow workers never spin
 /// forever waiting for chunks from a worker that panicked or errored out.
 /// (At clean shutdown everything is already drained, so the flag is inert.)
@@ -187,6 +181,67 @@ impl Drop for AbortOnDrop {
     fn drop(&mut self) {
         self.0.store(true, Ordering::SeqCst);
     }
+}
+
+/// Trainer state the worker threads borrow, copied out before the thread
+/// scope so the coordinator keeps exclusive use of `&mut Trainer` for the
+/// overlapped plan stage.
+struct WorkerCtx<'e> {
+    backend: &'e dyn Backend,
+    ds: &'e Dataset,
+    model_cfg: ModelConfig,
+    kernel_k: usize,
+    cache: Option<Arc<ResidentCache>>,
+}
+
+impl<'e> WorkerCtx<'e> {
+    fn of(trainer: &Trainer<'e>, ds: &'e Dataset) -> Self {
+        WorkerCtx {
+            backend: trainer.backend,
+            ds,
+            model_cfg: trainer.params.cfg.clone(),
+            kernel_k: trainer.fanouts[0],
+            cache: trainer.cache.clone(),
+        }
+    }
+}
+
+/// Spawn the worker pool: each of the `n_workers` threads takes its
+/// round-robin devices' [`Fabric`] endpoints and listens on a depth-1 job
+/// channel. Shared by the training and inference drivers — the one place
+/// the fabric is wired to threads.
+fn spawn_workers<'scope, 'env: 'scope>(
+    scope: &'scope thread::Scope<'scope, 'env>,
+    ctx: &WorkerCtx<'env>,
+    fabric: &mut Fabric,
+    n_workers: usize,
+    res_tx: &Sender<WorkerMsg>,
+) -> Vec<SyncSender<Job>> {
+    let k = fabric.k();
+    let abort = fabric.abort_handle();
+    let mut job_txs: Vec<SyncSender<Job>> = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let endpoint = fabric.endpoint((0..k).filter(|d| d % n_workers == w).collect());
+        let (jtx, jrx) = sync_channel::<Job>(1);
+        job_txs.push(jtx);
+        let worker = Worker {
+            backend: ctx.backend,
+            ds: ctx.ds,
+            cfg: ctx.model_cfg.clone(),
+            kernel_k: ctx.kernel_k,
+            cache: ctx.cache.clone(),
+            fabric: endpoint,
+            abort: Arc::clone(&abort),
+            res_tx: res_tx.clone(),
+        };
+        scope.spawn(move || {
+            crate::obs::set_thread_label(&format!("worker-{w}"));
+            let guard = AbortOnDrop(Arc::clone(&worker.abort));
+            worker.run(jrx);
+            drop(guard);
+        });
+    }
+    job_txs
 }
 
 /// Run `specs` through the threaded pipelined executor. Returns one
@@ -205,69 +260,17 @@ pub(super) fn run_batches(
     crate::obs::set_thread_label("coordinator");
     let k = trainer.part.k;
     let n_workers = cfg.workers.clamp(1, k);
-    let channel_cap = cfg.channel_cap.max(1);
-    let chunk_rows = cfg.chunk_rows.max(1);
-    let backend = trainer.backend;
-    let model_cfg = trainer.params.cfg.clone();
-    let kernel_k = trainer.fanouts[0];
     let lr = trainer.lr;
-    let cache = trainer.cache.clone();
+    let wctx = WorkerCtx::of(trainer, ds);
+    let model_cfg = wctx.model_cfg.clone();
 
-    // k × k typed row channels; each (from→to) sender goes to the worker
-    // owning `from`, the receiver to the worker owning `to`.
-    let mut senders: Vec<Vec<Option<SyncSender<RowChunk>>>> =
-        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
-    let mut receivers: Vec<Vec<Option<Receiver<RowChunk>>>> =
-        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
-    for from in 0..k {
-        for to in 0..k {
-            let (tx, rx) = sync_channel::<RowChunk>(channel_cap);
-            senders[from][to] = Some(tx);
-            receivers[to][from] = Some(rx);
-        }
-    }
-    let abort = Arc::new(AtomicBool::new(false));
+    let mut fabric = Fabric::new(k, cfg.channel_cap, cfg.chunk_rows);
+    let abort = fabric.abort_handle();
     let (res_tx, res_rx) = channel::<WorkerMsg>();
 
     let mut stats: Vec<IterStats> = Vec::with_capacity(specs.len());
     thread::scope(|scope| -> Result<()> {
-        let mut job_txs: Vec<SyncSender<Job>> = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let owned: Vec<usize> = (0..k).filter(|d| d % n_workers == w).collect();
-            let send: Vec<Vec<SyncSender<RowChunk>>> = owned
-                .iter()
-                .map(|&d| (0..k).map(|to| senders[d][to].take().expect("sender")).collect())
-                .collect();
-            let recv: Vec<Vec<Receiver<RowChunk>>> = owned
-                .iter()
-                .map(|&d| (0..k).map(|from| receivers[d][from].take().expect("receiver")).collect())
-                .collect();
-            let (jtx, jrx) = sync_channel::<Job>(1);
-            job_txs.push(jtx);
-            let res_tx = res_tx.clone();
-            let abort = Arc::clone(&abort);
-            let model_cfg = model_cfg.clone();
-            let cache = cache.clone();
-            scope.spawn(move || {
-                crate::obs::set_thread_label(&format!("worker-{w}"));
-                let guard = AbortOnDrop(Arc::clone(&abort));
-                let worker = Worker {
-                    backend,
-                    ds,
-                    cfg: model_cfg,
-                    kernel_k,
-                    cache,
-                    owned,
-                    send,
-                    recv,
-                    chunk_rows,
-                    abort,
-                    res_tx,
-                };
-                worker.run(jrx);
-                drop(guard);
-            });
-        }
+        let job_txs = spawn_workers(scope, &wctx, &mut fabric, n_workers, &res_tx);
         drop(res_tx);
 
         let mut next_prep: Option<Arc<PreparedBatch>> = None;
@@ -277,15 +280,16 @@ pub(super) fn run_batches(
                 None => Arc::new(trainer.prepare(ds, &spec.targets, spec.plan_seed)),
             };
             let params = Arc::new(trainer.params.clone());
-            for jtx in &job_txs {
-                jtx.send(Job::Batch {
+            collectives::broadcast(
+                &job_txs,
+                Job::Batch {
                     idx: t,
                     prep: Arc::clone(&prep),
                     params: Arc::clone(&params),
                     backward,
-                })
-                .map_err(|_| anyhow!("executor worker exited early"))?;
-            }
+                },
+            )
+            .map_err(|_| anyhow!("executor worker exited early"))?;
             // Plan stage for batch t+1 overlaps the workers training batch t.
             if let Some(next) = specs.get(t + 1) {
                 let _s = span!(Phase::SampleAhead, batch = trainer.batches_prepared);
@@ -323,9 +327,7 @@ pub(super) fn run_batches(
                 stats.push(reduce_batch(trainer, &model_cfg, &prep.plan, &by_dev, backward, lr));
             }
         }
-        for jtx in &job_txs {
-            let _ = jtx.send(Job::Stop);
-        }
+        let _ = collectives::broadcast(&job_txs, Job::Stop);
         Ok(())
     })?;
     Ok(stats)
@@ -348,78 +350,24 @@ pub(super) fn run_infer(
     crate::obs::set_thread_label("coordinator");
     let k = trainer.part.k;
     let n_workers = cfg.workers.clamp(1, k);
-    let channel_cap = cfg.channel_cap.max(1);
-    let chunk_rows = cfg.chunk_rows.max(1);
-    let backend = trainer.backend;
-    let model_cfg = trainer.params.cfg.clone();
-    let kernel_k = trainer.fanouts[0];
-    let cache = trainer.cache.clone();
+    let wctx = WorkerCtx::of(trainer, ds);
 
-    let mut senders: Vec<Vec<Option<SyncSender<RowChunk>>>> =
-        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
-    let mut receivers: Vec<Vec<Option<Receiver<RowChunk>>>> =
-        (0..k).map(|_| (0..k).map(|_| None).collect()).collect();
-    for from in 0..k {
-        for to in 0..k {
-            let (tx, rx) = sync_channel::<RowChunk>(channel_cap);
-            senders[from][to] = Some(tx);
-            receivers[to][from] = Some(rx);
-        }
-    }
-    let abort = Arc::new(AtomicBool::new(false));
+    let mut fabric = Fabric::new(k, cfg.channel_cap, cfg.chunk_rows);
+    let abort = fabric.abort_handle();
     let (res_tx, res_rx) = channel::<WorkerMsg>();
     let prep = Arc::new(prep);
     let params = Arc::new(trainer.params.clone());
 
     let mut logits: Vec<Vec<f32>> = vec![Vec::new(); k];
     thread::scope(|scope| -> Result<()> {
-        let mut job_txs: Vec<SyncSender<Job>> = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let owned: Vec<usize> = (0..k).filter(|d| d % n_workers == w).collect();
-            let send: Vec<Vec<SyncSender<RowChunk>>> = owned
-                .iter()
-                .map(|&d| (0..k).map(|to| senders[d][to].take().expect("sender")).collect())
-                .collect();
-            let recv: Vec<Vec<Receiver<RowChunk>>> = owned
-                .iter()
-                .map(|&d| (0..k).map(|from| receivers[d][from].take().expect("receiver")).collect())
-                .collect();
-            let (jtx, jrx) = sync_channel::<Job>(1);
-            job_txs.push(jtx);
-            let res_tx = res_tx.clone();
-            let abort = Arc::clone(&abort);
-            let model_cfg = model_cfg.clone();
-            let cache = cache.clone();
-            scope.spawn(move || {
-                crate::obs::set_thread_label(&format!("worker-{w}"));
-                let guard = AbortOnDrop(Arc::clone(&abort));
-                let worker = Worker {
-                    backend,
-                    ds,
-                    cfg: model_cfg,
-                    kernel_k,
-                    cache,
-                    owned,
-                    send,
-                    recv,
-                    chunk_rows,
-                    abort,
-                    res_tx,
-                };
-                worker.run(jrx);
-                drop(guard);
-            });
-        }
+        let job_txs = spawn_workers(scope, &wctx, &mut fabric, n_workers, &res_tx);
         drop(res_tx);
 
-        for jtx in &job_txs {
-            jtx.send(Job::Infer {
-                idx: 0,
-                prep: Arc::clone(&prep),
-                params: Arc::clone(&params),
-            })
-            .map_err(|_| anyhow!("executor worker exited early"))?;
-        }
+        collectives::broadcast(
+            &job_txs,
+            Job::Infer { idx: 0, prep: Arc::clone(&prep), params: Arc::clone(&params) },
+        )
+        .map_err(|_| anyhow!("executor worker exited early"))?;
         // Collect every device's logits (same timed-receive abort polling
         // as the training coordinator).
         let mut seen = vec![false; k];
@@ -443,17 +391,16 @@ pub(super) fn run_infer(
                 Err(RecvTimeoutError::Disconnected) => bail!("executor workers disconnected"),
             }
         }
-        for jtx in &job_txs {
-            let _ = jtx.send(Job::Stop);
-        }
+        let _ = collectives::broadcast(&job_txs, Job::Stop);
         Ok(())
     })?;
     Ok(logits)
 }
 
 /// Fixed-device-order reduction of one batch's per-device results: loss
-/// statistics, the gradient all-reduce, and the SGD step — the same
-/// floating-point operation sequence as the serial trainer.
+/// statistics, the gradient all-reduce ([`collectives::all_reduce`]), and
+/// the SGD step — the same floating-point operation sequence as the
+/// serial trainer.
 fn reduce_batch(
     trainer: &mut Trainer<'_>,
     cfg: &ModelConfig,
@@ -488,16 +435,11 @@ fn reduce_batch(
             .collect();
         for i in 0..num_layers {
             let l = cfg.num_layers - 1 - i;
-            for r in by_dev.iter() {
-                let r = r.as_ref().expect("every device reports");
-                if let Some(contrib) = &r.gparams[i] {
-                    for (acc, g) in g_params[l].iter_mut().zip(contrib) {
-                        for (a, b) in acc.iter_mut().zip(g) {
-                            *a += b;
-                        }
-                    }
-                }
-            }
+            let contribs: Vec<Option<&Vec<Vec<f32>>>> = by_dev
+                .iter()
+                .map(|r| r.as_ref().expect("every device reports").gparams[i].as_ref())
+                .collect();
+            collectives::all_reduce(&mut g_params[l], &contribs);
         }
         trainer.params.sgd_step(&g_params, lr);
     }
@@ -514,13 +456,10 @@ struct Worker<'e> {
     /// Resident feature cache shared with the trainer; this worker serves
     /// its owned devices' cached rows during the loading exchange phase.
     cache: Option<Arc<ResidentCache>>,
-    /// Owned device ids, ascending.
-    owned: Vec<usize>,
-    /// `send[li][to]` — sender of the (owned[li] → to) channel.
-    send: Vec<Vec<SyncSender<RowChunk>>>,
-    /// `recv[li][from]` — receiver of the (from → owned[li]) channel.
-    recv: Vec<Vec<Receiver<RowChunk>>>,
-    chunk_rows: usize,
+    /// This worker's side of the [`Fabric`]: its owned devices' senders
+    /// and receivers, the chunking parameters, and the abort flag the
+    /// all-to-all pump polls.
+    fabric: FabricEndpoint,
     abort: Arc<AtomicBool>,
     res_tx: Sender<WorkerMsg>,
 }
@@ -548,7 +487,7 @@ impl<'e> Worker<'e> {
                 Ok(Job::Infer { idx, prep, params }) => {
                     match self.fwd_to_top(&prep, &params) {
                         Ok((_mixed, hidden)) => {
-                            for (rows, &d) in hidden.into_iter().zip(&self.owned) {
+                            for (rows, &d) in hidden.into_iter().zip(self.fabric.owned()) {
                                 let msg = WorkerMsg::Logits { batch_idx: idx, dev: d, rows };
                                 if self.res_tx.send(msg).is_err() {
                                     return;
@@ -567,49 +506,8 @@ impl<'e> Worker<'e> {
         }
     }
 
-    /// Chunk count of a `rows`-row shuffle message (0 rows ⇒ no message).
-    fn chunks_of(&self, rows: usize) -> usize {
-        if rows == 0 {
-            0
-        } else {
-            rows.div_ceil(self.chunk_rows)
-        }
-    }
-
-    /// Pack `n_rows` logical rows into [`RowChunk`]s of ≤ `chunk_rows`,
-    /// `append(i, buf)` supplying row `i`'s `width` values. The one
-    /// chunking implementation behind every exchange phase — sender and
-    /// receiver chunk counts must always agree ([`Worker::chunks_of`]).
-    fn pack_chunks(
-        &self,
-        n_rows: usize,
-        width: usize,
-        mut append: impl FnMut(usize, &mut Vec<f32>),
-    ) -> VecDeque<RowChunk> {
-        let mut out = VecDeque::with_capacity(self.chunks_of(n_rows));
-        let mut start = 0usize;
-        while start < n_rows {
-            let n = (n_rows - start).min(self.chunk_rows);
-            let mut rows = Vec::with_capacity(n * width);
-            for i in start..start + n {
-                append(i, &mut rows);
-            }
-            out.push_back(RowChunk { start: start as u32, rows });
-            start += n;
-        }
-        out
-    }
-
-    /// Pack `src` rows at `idx` positions into chunks of ≤ `chunk_rows`.
-    fn pack_rows(&self, src: &[f32], idx: &[u32], width: usize) -> VecDeque<RowChunk> {
-        self.pack_chunks(idx.len(), width, |i, rows| {
-            let p = idx[i] as usize;
-            rows.extend_from_slice(&src[p * width..(p + 1) * width]);
-        })
-    }
-
     /// Pack resident-cache rows of device `d` for `vids` (the loading
-    /// exchange phase's counterpart of [`Worker::pack_rows`]).
+    /// exchange phase's counterpart of [`FabricEndpoint::pack_rows`]).
     fn pack_cache_rows(
         &self,
         cache: &ResidentCache,
@@ -617,81 +515,19 @@ impl<'e> Worker<'e> {
         vids: &[Vid],
         width: usize,
     ) -> VecDeque<RowChunk> {
-        self.pack_chunks(vids.len(), width, |i, rows| {
+        self.fabric.pack_chunks(vids.len(), width, |i, rows| {
             rows.extend_from_slice(
                 cache.resident_row(d, vids[i]).expect("peer-served row resident on server"),
             );
         })
     }
 
-    /// Drive queued sends and expected receives of one exchange phase to
-    /// completion, interleaving both so bounded channels cannot deadlock.
-    /// `deliver(li, from, chunk)` consumes each arriving chunk.
-    fn pump(
-        &self,
-        k: usize,
-        outgoing: &mut [OutQueue],
-        expect: &mut [Vec<usize>],
-        mut deliver: impl FnMut(usize, usize, RowChunk),
-    ) -> Result<()> {
-        let mut spins = 0u32;
-        loop {
-            let mut progress = false;
-            for oq in outgoing.iter_mut() {
-                while let Some(chunk) = oq.q.pop_front() {
-                    match self.send[oq.li][oq.to].try_send(chunk) {
-                        Ok(()) => progress = true,
-                        Err(TrySendError::Full(c)) => {
-                            oq.q.push_front(c);
-                            break;
-                        }
-                        Err(TrySendError::Disconnected(_)) => bail!("row channel closed"),
-                    }
-                }
-            }
-            let mut pending = outgoing.iter().any(|o| !o.q.is_empty());
-            for li in 0..self.owned.len() {
-                for from in 0..k {
-                    while expect[li][from] > 0 {
-                        match self.recv[li][from].try_recv() {
-                            Ok(chunk) => {
-                                expect[li][from] -= 1;
-                                progress = true;
-                                deliver(li, from, chunk);
-                            }
-                            Err(TryRecvError::Empty) => break,
-                            Err(TryRecvError::Disconnected) => bail!("row channel closed"),
-                        }
-                    }
-                    if expect[li][from] > 0 {
-                        pending = true;
-                    }
-                }
-            }
-            if !pending {
-                return Ok(());
-            }
-            if self.abort.load(Ordering::Relaxed) {
-                bail!("aborted: a peer worker failed");
-            }
-            if progress {
-                spins = 0;
-            } else {
-                spins += 1;
-                if spins < SPIN_YIELDS {
-                    thread::yield_now();
-                } else {
-                    thread::sleep(Duration::from_micros(50));
-                }
-            }
-        }
-    }
-
     /// Loading exchange + bottom-up forward over this worker's owned
     /// devices — the shared front half of training ([`Worker::run_batch`])
     /// and forward-only inference ([`Job::Infer`]). Returns the per-layer
     /// mixed-frontier inputs (kept for the backward pass) and each owned
-    /// device's top-layer hidden rows, both indexed like `self.owned`.
+    /// device's top-layer hidden rows, both indexed like
+    /// `self.fabric.owned()`.
     #[allow(clippy::type_complexity)]
     fn fwd_to_top(
         &self,
@@ -703,7 +539,7 @@ impl<'e> Worker<'e> {
         let num_layers = plan.layers.len();
         let cfg = &self.cfg;
         let kernel_k = self.kernel_k;
-        let owned = self.owned.clone();
+        let owned = self.fabric.owned().to_vec();
         let n_own = owned.len();
         // Global batch counter for trace labels (the coordinator's batch
         // index is per-call; spans use the trainer-global one so serial
@@ -746,11 +582,11 @@ impl<'e> Worker<'e> {
             let mut expect = vec![vec![0usize; k]; n_own];
             for (li, &d) in owned.iter().enumerate() {
                 for from in 0..k {
-                    expect[li][from] = self.chunks_of(load.peer_fetch[from][d].len());
+                    expect[li][from] = self.fabric.chunks_of(load.peer_fetch[from][d].len());
                 }
             }
             let hidden_mut = &mut hidden;
-            self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+            self.fabric.all_to_all(&mut outgoing, &mut expect, |li, from, chunk| {
                 let pf = &load.peer_fetch[from][owned[li]];
                 let nrows = chunk.rows.len() / dim;
                 let start = chunk.start as usize;
@@ -779,8 +615,11 @@ impl<'e> Worker<'e> {
                         if idx.is_empty() {
                             continue;
                         }
-                        outgoing
-                            .push(OutQueue { li, to, q: self.pack_rows(&hidden[li], idx, din) });
+                        outgoing.push(OutQueue {
+                            li,
+                            to,
+                            q: self.fabric.pack_rows(&hidden[li], idx, din),
+                        });
                     }
                 }
             }
@@ -791,13 +630,13 @@ impl<'e> Worker<'e> {
             for (li, &d) in owned.iter().enumerate() {
                 mixed[i][li] = vec![0f32; layer.per_dev[d].mixed_src.len() * din];
                 for from in 0..k {
-                    expect[li][from] = self.chunks_of(layer.shuffle.send[from][d].len());
+                    expect[li][from] = self.fabric.chunks_of(layer.shuffle.send[from][d].len());
                 }
             }
             let mixed_i = &mut mixed[i];
             {
                 let _s = span!(Phase::ShuffleFwdRecv, batch = bidx, layer = i);
-                self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                self.fabric.all_to_all(&mut outgoing, &mut expect, |li, from, chunk| {
                     let rl = &layer.shuffle.recv[owned[li]][from];
                     let nrows = chunk.rows.len() / din;
                     let start = chunk.start as usize;
@@ -849,7 +688,7 @@ impl<'e> Worker<'e> {
         let num_layers = plan.layers.len();
         let cfg = &self.cfg;
         let kernel_k = self.kernel_k;
-        let owned = self.owned.clone();
+        let owned = self.fabric.owned().to_vec();
         let n_own = owned.len();
         let bidx = prep.batch_idx;
         let (mixed, hidden) = self.fwd_to_top(prep, params)?;
@@ -928,7 +767,7 @@ impl<'e> Worker<'e> {
                         outgoing.push(OutQueue {
                             li,
                             to,
-                            q: self.pack_rows(&grads.g_x, idx, din),
+                            q: self.fabric.pack_rows(&grads.g_x, idx, din),
                         });
                     }
                     gparams[li][i] = Some(grads.g_params);
@@ -943,12 +782,13 @@ impl<'e> Worker<'e> {
                 for (li, &o) in owned.iter().enumerate() {
                     for from in 0..k {
                         if plan.bwd_active(i, from) {
-                            expect[li][from] = self.chunks_of(layer.shuffle.send[o][from].len());
+                            expect[li][from] =
+                                self.fabric.chunks_of(layer.shuffle.send[o][from].len());
                         }
                     }
                 }
                 let _s = span!(Phase::ShuffleBwdRecv, batch = bidx, layer = i);
-                self.pump(k, &mut outgoing, &mut expect, |li, from, chunk| {
+                self.fabric.all_to_all(&mut outgoing, &mut expect, |li, from, chunk| {
                     stage[li][from].push(chunk);
                 })?;
 

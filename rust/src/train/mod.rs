@@ -15,7 +15,7 @@
 //!
 //! * **plan** ([`plan`] module) — cooperative sampling + input-feature
 //!   gather, independent of the model parameters. With a
-//!   [`ResidentCache`] installed ([`Trainer::set_cache`]), the gather is
+//!   [`ResidentCache`] installed ([`TrainConfig::cache`]), the gather is
 //!   cache-aware: rows are classified Local / Peer / Host and peer rows
 //!   travel through an extra pre-forward exchange phase (DESIGN.md
 //!   §Loading) — numerics are identical at any policy or budget, only
@@ -29,7 +29,13 @@
 //! model, *numerics* come from here), while [`ExecMode::Pipelined`] runs
 //! one worker-thread pool over the devices and overlaps the next batch's
 //! plan stage with the current batch's compute — **bit-identical** to the
-//! serial executor for the same seed.
+//! serial executor for the same seed. Every entry point (train, evaluate,
+//! infer — and serving, via [`Trainer::infer`]) picks its executor through
+//! the single [`ExecMode::dispatch`] surface.
+//!
+//! A trainer is configured once through [`TrainConfig`] (executor, cache,
+//! tracing) applied by [`Trainer::with_config`]; the per-field setters
+//! accreted by earlier revisions remain as deprecated shims.
 
 mod executor;
 mod plan;
@@ -73,6 +79,70 @@ impl IterStats {
     }
 }
 
+/// Unified trainer configuration: executor selection, the cache-aware
+/// loading stage, and span tracing — everything that used to be scattered
+/// over per-field setters — built with a chainable builder and applied by
+/// [`Trainer::with_config`] (or [`Trainer::apply_config`] in place).
+///
+/// ```
+/// use gsplit::train::{ExecMode, PipelineConfig, TrainConfig};
+///
+/// let cfg = TrainConfig::new()
+///     .exec(ExecMode::Pipelined(PipelineConfig::with_workers(2)))
+///     .trace(false);
+/// assert_eq!(cfg.exec, ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+/// ```
+#[derive(Clone, Default)]
+pub struct TrainConfig {
+    /// Executor selection ([`ExecMode::Serial`] by default).
+    pub exec: ExecMode,
+    /// Cache-aware loading stage (DESIGN.md §Loading). `None` gathers
+    /// every input row from host memory. Numerics are unaffected at any
+    /// policy or budget — only the Local/NVLink/PCIe byte split changes.
+    pub cache: Option<Arc<ResidentCache>>,
+    /// Span tracing: `Some(on)` sets the process-global tracer
+    /// (`crate::obs`), `None` leaves it as-is (so `GSPLIT_TRACE`-enabled
+    /// runs are not clobbered by a config that never mentioned tracing).
+    pub trace: Option<bool>,
+}
+
+impl TrainConfig {
+    /// An all-defaults configuration: serial executor, no cache, tracing
+    /// untouched.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Select the executor.
+    pub fn exec(mut self, mode: ExecMode) -> Self {
+        self.exec = mode;
+        self
+    }
+
+    /// Convenience: `workers == 0` selects [`ExecMode::Serial`], otherwise
+    /// a pipelined executor with that many worker threads.
+    pub fn parallel_workers(mut self, workers: usize) -> Self {
+        self.exec = if workers == 0 {
+            ExecMode::Serial
+        } else {
+            ExecMode::Pipelined(PipelineConfig::with_workers(workers))
+        };
+        self
+    }
+
+    /// Install (or, with `None`, remove) the cache-aware loading stage.
+    pub fn cache(mut self, cache: Option<Arc<ResidentCache>>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Enable or disable span tracing when the config is applied.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = Some(on);
+        self
+    }
+}
+
 /// Split-parallel trainer over a fixed partitioning and a numeric backend.
 ///
 /// # Example
@@ -85,7 +155,7 @@ impl IterStats {
 /// use gsplit::model::{GnnKind, ModelConfig};
 /// use gsplit::partition::Partitioning;
 /// use gsplit::runtime::NativeBackend;
-/// use gsplit::train::{train_epoch, ExecMode, PipelineConfig, Trainer};
+/// use gsplit::train::{train_epoch, TrainConfig, Trainer};
 ///
 /// let cfg = ModelConfig {
 ///     kind: GnnKind::GraphSage,
@@ -99,8 +169,10 @@ impl IterStats {
 /// let backend = NativeBackend::new();
 ///
 /// let mut serial = Trainer::new(&backend, &cfg, 4, part.clone(), 0.1, 7).unwrap();
-/// let mut pipelined = Trainer::new(&backend, &cfg, 4, part, 0.1, 7).unwrap();
-/// pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+/// let mut pipelined = Trainer::new(&backend, &cfg, 4, part, 0.1, 7)
+///     .unwrap()
+///     .with_config(TrainConfig::new().parallel_workers(2))
+///     .unwrap();
 ///
 /// let a = train_epoch(&mut serial, &ds, 128, 0).unwrap();
 /// let b = train_epoch(&mut pipelined, &ds, 128, 0).unwrap();
@@ -133,8 +205,8 @@ impl<'a> Trainer<'a> {
     /// across layers, like the paper's sampling setup). With the PJRT
     /// backend this must equal the manifest's `kernel_fanout` and `cfg`
     /// must match the exported dims — the runtime rejects mismatches when
-    /// it picks artifacts. Starts in [`ExecMode::Serial`]; see
-    /// [`Trainer::set_exec_mode`].
+    /// it picks artifacts. Starts with a default [`TrainConfig`] (serial
+    /// executor, no cache); see [`Trainer::with_config`].
     pub fn new(
         backend: &'a dyn Backend,
         cfg: &ModelConfig,
@@ -165,11 +237,31 @@ impl<'a> Trainer<'a> {
         &self.part
     }
 
+    /// Apply a [`TrainConfig`], builder-style — the single configuration
+    /// surface. Validates the cache (it must be built for this trainer's
+    /// device count) and, when the config says so, toggles the
+    /// process-global tracer.
+    pub fn with_config(mut self, cfg: TrainConfig) -> Result<Self> {
+        self.apply_config(cfg)?;
+        Ok(self)
+    }
+
+    /// In-place [`Trainer::with_config`], for re-configuring an existing
+    /// trainer between runs.
+    pub fn apply_config(&mut self, cfg: TrainConfig) -> Result<()> {
+        self.install_cache(cfg.cache)?;
+        self.mode = cfg.exec;
+        if let Some(on) = cfg.trace {
+            crate::obs::set_enabled(on);
+        }
+        Ok(())
+    }
+
     /// Install (or remove) the cache-aware loading stage. Both executors
     /// honour it; numerics are unaffected at any policy or budget because
     /// cached rows are bit-exact copies of the host rows (DESIGN.md
     /// §Loading) — only the Local/NVLink/PCIe byte split changes.
-    pub fn set_cache(&mut self, cache: Option<Arc<ResidentCache>>) -> Result<()> {
+    fn install_cache(&mut self, cache: Option<Arc<ResidentCache>>) -> Result<()> {
         if let Some(c) = &cache {
             ensure!(
                 c.k() == self.part.k,
@@ -182,9 +274,16 @@ impl<'a> Trainer<'a> {
         Ok(())
     }
 
-    /// Builder-style [`Trainer::set_cache`].
+    /// Deprecated shim over [`TrainConfig::cache`] + [`Trainer::apply_config`].
+    #[deprecated(note = "use TrainConfig::cache with Trainer::with_config/apply_config")]
+    pub fn set_cache(&mut self, cache: Option<Arc<ResidentCache>>) -> Result<()> {
+        self.install_cache(cache)
+    }
+
+    /// Deprecated shim over [`TrainConfig::cache`] + [`Trainer::with_config`].
+    #[deprecated(note = "use TrainConfig::cache with Trainer::with_config")]
     pub fn with_cache(mut self, cache: Arc<ResidentCache>) -> Result<Self> {
-        self.set_cache(Some(cache))?;
+        self.install_cache(Some(cache))?;
         Ok(self)
     }
 
@@ -246,17 +345,19 @@ impl<'a> Trainer<'a> {
         prep
     }
 
-    /// Enable or disable span tracing for this run. Forwards to the
-    /// process-global tracer (`crate::obs`) — equivalent to setting
-    /// `GSPLIT_TRACE` — and never affects numerics: traced and untraced
-    /// runs are bit-identical (see `executor_equivalence.rs`).
+    /// Deprecated shim over [`TrainConfig::trace`]. Tracing never affects
+    /// numerics: traced and untraced runs are bit-identical (see
+    /// `executor_equivalence.rs`).
+    #[deprecated(note = "use TrainConfig::trace with Trainer::with_config/apply_config")]
     pub fn set_trace(&mut self, enabled: bool) {
         crate::obs::set_enabled(enabled);
     }
 
-    /// Select the executor. [`ExecMode::Pipelined`] spawns its worker
-    /// threads per call ([`train_epoch`] pipelines a whole epoch through
-    /// one pool; a single [`Trainer::train_iteration`] pays one spawn).
+    /// Deprecated shim over [`TrainConfig::exec`]. [`ExecMode::Pipelined`]
+    /// spawns its worker threads per call ([`train_epoch`] pipelines a
+    /// whole epoch through one pool; a single
+    /// [`Trainer::train_iteration`] pays one spawn).
+    #[deprecated(note = "use TrainConfig::exec with Trainer::with_config/apply_config")]
     pub fn set_exec_mode(&mut self, mode: ExecMode) {
         self.mode = mode;
     }
@@ -266,8 +367,8 @@ impl<'a> Trainer<'a> {
         self.mode
     }
 
-    /// Convenience: `workers == 0` selects [`ExecMode::Serial`], otherwise
-    /// a pipelined executor with that many worker threads.
+    /// Deprecated shim over [`TrainConfig::parallel_workers`].
+    #[deprecated(note = "use TrainConfig::parallel_workers with Trainer::with_config")]
     pub fn with_parallel_workers(mut self, workers: usize) -> Self {
         self.mode = if workers == 0 {
             ExecMode::Serial
@@ -281,41 +382,43 @@ impl<'a> Trainer<'a> {
     pub fn train_iteration(&mut self, ds: &Dataset, targets: &[Vid], seed: u64) -> Result<IterStats> {
         let plan_seed = derive_seed(seed, &[0x17e2]);
         let mode = self.mode;
-        match mode {
-            ExecMode::Serial => {
-                let prep = self.prepare(ds, targets, plan_seed);
+        mode.dispatch(
+            &mut *self,
+            |t| {
+                let prep = t.prepare(ds, targets, plan_seed);
                 let batch_idx = prep.batch_idx;
-                let (stats, grads) = self.forward_backward(ds, prep, true)?;
+                let (stats, grads) = t.forward_backward(ds, prep, true)?;
                 {
                     let _s = span!(Phase::GradReduce, batch = batch_idx);
-                    self.params.sgd_step(&grads.expect("grads requested"), self.lr);
+                    t.params.sgd_step(&grads.expect("grads requested"), t.lr);
                 }
                 Ok(stats)
-            }
-            ExecMode::Pipelined(cfg) => {
+            },
+            |t, cfg| {
                 let specs = [BatchSpec { targets: targets.to_vec(), plan_seed }];
-                let mut out = executor::run_batches(self, ds, &specs, true, cfg)?;
+                let mut out = executor::run_batches(t, ds, &specs, true, cfg)?;
                 Ok(out.pop().expect("one batch"))
-            }
-        }
+            },
+        )
     }
 
     /// Forward-only evaluation (accuracy / loss on given targets).
     pub fn evaluate(&mut self, ds: &Dataset, targets: &[Vid], seed: u64) -> Result<IterStats> {
         let plan_seed = derive_seed(seed, &[0xE7A1]);
         let mode = self.mode;
-        match mode {
-            ExecMode::Serial => {
-                let prep = self.prepare(ds, targets, plan_seed);
-                let (stats, _) = self.forward_backward(ds, prep, false)?;
+        mode.dispatch(
+            &mut *self,
+            |t| {
+                let prep = t.prepare(ds, targets, plan_seed);
+                let (stats, _) = t.forward_backward(ds, prep, false)?;
                 Ok(stats)
-            }
-            ExecMode::Pipelined(cfg) => {
+            },
+            |t, cfg| {
                 let specs = [BatchSpec { targets: targets.to_vec(), plan_seed }];
-                let mut out = executor::run_batches(self, ds, &specs, false, cfg)?;
+                let mut out = executor::run_batches(t, ds, &specs, false, cfg)?;
                 Ok(out.pop().expect("one batch"))
-            }
-        }
+            },
+        )
     }
 
     /// Forward-only inference on `targets`: returns the top-layer logits
@@ -350,10 +453,11 @@ impl<'a> Trainer<'a> {
         let top_dst: Vec<Vec<Vid>> =
             prep.plan.layers[0].per_dev.iter().map(|dl| dl.dst.clone()).collect();
         let mode = self.mode;
-        let per_dev: Vec<Vec<f32>> = match mode {
-            ExecMode::Serial => self.infer_serial(ds, prep)?,
-            ExecMode::Pipelined(cfg) => executor::run_infer(self, ds, prep, cfg)?,
-        };
+        let per_dev: Vec<Vec<f32>> = mode.dispatch(
+            (&mut *self, prep),
+            |(t, prep)| t.infer_serial(ds, prep),
+            |(t, prep), cfg| executor::run_infer(t, ds, prep, cfg),
+        )?;
         // Reassemble into `targets` order.
         let c = self.params.cfg.num_classes;
         let mut row_of = std::collections::HashMap::with_capacity(targets.len());
@@ -385,20 +489,25 @@ pub fn train_epoch(
 ) -> Result<Vec<IterStats>> {
     let targets = ds.epoch_targets(epoch_seed);
     let mode = trainer.mode;
-    if let ExecMode::Pipelined(cfg) = mode {
-        let specs: Vec<BatchSpec> = targets
-            .chunks(batch_size)
-            .enumerate()
-            .map(|(i, chunk)| BatchSpec {
-                targets: chunk.to_vec(),
-                plan_seed: derive_seed(derive_seed(epoch_seed, &[i as u64]), &[0x17e2]),
-            })
-            .collect();
-        return executor::run_batches(trainer, ds, &specs, true, cfg);
-    }
-    let mut out = Vec::new();
-    for (i, chunk) in targets.chunks(batch_size).enumerate() {
-        out.push(trainer.train_iteration(ds, chunk, derive_seed(epoch_seed, &[i as u64]))?);
-    }
-    Ok(out)
+    mode.dispatch(
+        trainer,
+        |t| {
+            let mut out = Vec::new();
+            for (i, chunk) in targets.chunks(batch_size).enumerate() {
+                out.push(t.train_iteration(ds, chunk, derive_seed(epoch_seed, &[i as u64]))?);
+            }
+            Ok(out)
+        },
+        |t, cfg| {
+            let specs: Vec<BatchSpec> = targets
+                .chunks(batch_size)
+                .enumerate()
+                .map(|(i, chunk)| BatchSpec {
+                    targets: chunk.to_vec(),
+                    plan_seed: derive_seed(derive_seed(epoch_seed, &[i as u64]), &[0x17e2]),
+                })
+                .collect();
+            executor::run_batches(t, ds, &specs, true, cfg)
+        },
+    )
 }

@@ -15,7 +15,7 @@ use gsplit::graph::{Dataset, StandIn};
 use gsplit::model::{GnnKind, ModelConfig, ParamStore};
 use gsplit::partition::Partitioning;
 use gsplit::runtime::NativeBackend;
-use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, TrainConfig, Trainer};
 use gsplit::{DeviceId, Vid};
 
 const FANOUT: usize = 5;
@@ -87,11 +87,14 @@ fn check_case(
     ));
 
     let mut oracle = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
-    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
-    serial.set_cache(Some(Arc::clone(&cache))).unwrap();
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
-    pipelined.set_cache(Some(cache)).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(Arc::clone(&cache))))
+        .unwrap();
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(cache)).parallel_workers(workers))
+        .unwrap();
 
     let a = train_epoch(&mut oracle, &ds, BATCH, SEED).unwrap();
     let b = train_epoch(&mut serial, &ds, BATCH, SEED).unwrap();
@@ -154,7 +157,7 @@ fn cached_epochs_bit_identical_on_truncated_cube_mesh() {
     // k = 6 cube-mesh truncation: some cached copies sit behind missing
     // NVLinks, so the Distributed policy exercises Local, Peer, AND the
     // linkless-copy → Host fallback in one run — still bit-identical.
-    let topo = Topology::for_gpus(6, 1.0);
+    let topo = Topology::for_gpus(6, 1.0).unwrap();
     let (split, _) = check_case(&topo, CachePolicy::Distributed, 256, 3, "cube6/distributed");
     assert!(split.local_bytes > 0 && split.peer_bytes > 0 && split.host_bytes > 0);
     let (split_p, _) = check_case(&topo, CachePolicy::Partitioned, 256, 6, "cube6/partitioned");
@@ -179,15 +182,15 @@ fn backpressure_stress_with_peer_exchange() {
         &topo,
         &ds.features,
     ));
-    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 9).unwrap();
-    serial.set_cache(Some(Arc::clone(&cache))).unwrap();
-    let mut stressed = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 9).unwrap();
-    stressed.set_cache(Some(cache)).unwrap();
-    stressed.set_exec_mode(ExecMode::Pipelined(PipelineConfig {
-        workers: 3,
-        channel_cap: 1,
-        chunk_rows: 1,
-    }));
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 9)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(Arc::clone(&cache))))
+        .unwrap();
+    let stress = ExecMode::Pipelined(PipelineConfig { workers: 3, channel_cap: 1, chunk_rows: 1 });
+    let mut stressed = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 9)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(cache)).exec(stress))
+        .unwrap();
     let a = train_epoch(&mut serial, &ds, BATCH, 9).unwrap();
     let b = train_epoch(&mut stressed, &ds, BATCH, 9).unwrap();
     assert_stats_bit_identical(&a, &b, "backpressure + peer exchange");
@@ -196,7 +199,7 @@ fn backpressure_stress_with_peer_exchange() {
 }
 
 #[test]
-fn set_cache_rejects_mismatched_device_count() {
+fn config_rejects_mismatched_cache_device_count() {
     let ds = StandIn::Tiny.load().unwrap();
     let topo = Topology::p3_8xlarge(1.0);
     let part4 = modulo_part(&ds, 4);
@@ -211,6 +214,57 @@ fn set_cache_rejects_mismatched_device_count() {
         &ds.features,
     ));
     let cfg = tiny_cfg(2);
-    let mut trainer = Trainer::new(&backend, &cfg, FANOUT, part2, 0.2, SEED).unwrap();
-    assert!(trainer.set_cache(Some(cache)).is_err(), "k mismatch must be rejected");
+    let trainer = Trainer::new(&backend, &cfg, FANOUT, part2, 0.2, SEED).unwrap();
+    let res = trainer.with_config(TrainConfig::new().cache(Some(cache)));
+    assert!(res.is_err(), "k mismatch must be rejected");
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_setters_forward_to_the_config_path() {
+    // The pre-TrainConfig setters stay as thin shims; this is the one
+    // place they are still exercised, pinned against the new surface.
+    let ds = StandIn::Tiny.load().unwrap();
+    let topo = Topology::p3_8xlarge(1.0);
+    let part = modulo_part(&ds, 4);
+    let backend = NativeBackend::new();
+    let cfg = tiny_cfg(2);
+    let cache = Arc::new(ResidentCache::build(
+        CachePolicy::Partitioned,
+        &degree_ranking(&ds),
+        64,
+        &part,
+        &topo,
+        &ds.features,
+    ));
+
+    let mut shimmed = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    shimmed.set_cache(Some(Arc::clone(&cache))).unwrap();
+    shimmed.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+    let configured = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(cache)).parallel_workers(2))
+        .unwrap();
+    assert_eq!(shimmed.exec_mode(), configured.exec_mode());
+    assert!(shimmed.cache().is_some() && configured.cache().is_some());
+
+    // with_parallel_workers(0) still means serial, like parallel_workers(0).
+    let serial = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED)
+        .unwrap()
+        .with_parallel_workers(0);
+    assert_eq!(serial.exec_mode(), ExecMode::Serial);
+
+    // And the shim path enforces the same cache/k validation.
+    let ds2 = StandIn::Tiny.load().unwrap();
+    let part2 = modulo_part(&ds2, 2);
+    let mut mismatched = Trainer::new(&backend, &cfg, FANOUT, part2, 0.2, SEED).unwrap();
+    let bad = Arc::new(ResidentCache::build(
+        CachePolicy::Partitioned,
+        &degree_ranking(&ds2),
+        64,
+        &modulo_part(&ds2, 4),
+        &topo,
+        &ds2.features,
+    ));
+    assert!(mismatched.set_cache(Some(bad)).is_err(), "shim must reject k mismatch too");
 }

@@ -1,0 +1,255 @@
+//! Property tests for the `collectives` fabric in isolation — no trainer,
+//! no dataset (DESIGN.md §Collectives):
+//!
+//! * `all_to_all` is a **bijection on rows**: every planned row arrives at
+//!   exactly the position the shared plan derives for it, exactly once —
+//!   at any worker grouping, channel capacity, or chunk size;
+//! * the exchanged buffers are **bit-identical** across worker counts and
+//!   `channel_cap ∈ {1, 8}`;
+//! * `all_reduce` accumulates in fixed slice order (the serial oracle's
+//!   bits, proven with an order-sensitive float sequence);
+//! * `broadcast` delivers exactly one copy per receiver, in order;
+//! * the shared abort flag breaks a pump whose peer never sends.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::sync_channel;
+use std::thread;
+use std::time::Duration;
+
+use gsplit::collectives::{all_reduce, broadcast, Fabric, OutQueue, RowChunk};
+
+const W: usize = 3; // row width (f32s per row)
+
+/// Deterministic per-link row count (≥1, self-links included).
+fn rows_sent(from: usize, to: usize) -> usize {
+    (from * 7 + to * 3) % 5 + 1
+}
+
+fn recv_rows(k: usize, to: usize) -> usize {
+    (0..k).map(|f| rows_sent(f, to)).sum()
+}
+
+/// Row offset of the (from → to) block in `to`'s receive buffer — the
+/// "shared plan" both sides derive positions from.
+fn offset(from: usize, to: usize) -> usize {
+    (0..from).map(|f| rows_sent(f, to)).sum()
+}
+
+/// The unique value planted at (from → to, row r, column c).
+fn value(from: usize, to: usize, r: usize, c: usize) -> f32 {
+    (from * 100_000 + to * 10_000 + r * 10 + c) as f32
+}
+
+/// Run one all-to-all over `owned_sets` worker groupings and return each
+/// device's assembled receive buffer. Panics if any planned position is
+/// not written exactly once (the bijection property).
+fn run_exchange(
+    owned_sets: &[Vec<usize>],
+    k: usize,
+    channel_cap: usize,
+    chunk_rows: usize,
+) -> Vec<Vec<f32>> {
+    let mut fabric = Fabric::new(k, channel_cap, chunk_rows);
+    let mut endpoints: Vec<_> = owned_sets.iter().map(|o| fabric.endpoint(o.clone())).collect();
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); k];
+    thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .drain(..)
+            .map(|ep| {
+                s.spawn(move || {
+                    let owned = ep.owned().to_vec();
+                    let mut outgoing = Vec::new();
+                    for (li, &d) in owned.iter().enumerate() {
+                        for to in 0..k {
+                            let n = rows_sent(d, to);
+                            let q = ep.pack_chunks(n, W, |i, buf| {
+                                for c in 0..W {
+                                    buf.push(value(d, to, i, c));
+                                }
+                            });
+                            outgoing.push(OutQueue { li, to, q });
+                        }
+                    }
+                    let mut expect: Vec<Vec<usize>> = owned
+                        .iter()
+                        .map(|&d| (0..k).map(|from| ep.chunks_of(rows_sent(from, d))).collect())
+                        .collect();
+                    let mut bufs: Vec<Vec<f32>> =
+                        owned.iter().map(|&d| vec![f32::NAN; recv_rows(k, d) * W]).collect();
+                    let mut fills: Vec<Vec<u32>> =
+                        owned.iter().map(|&d| vec![0u32; recv_rows(k, d)]).collect();
+                    ep.all_to_all(&mut outgoing, &mut expect, |li, from, chunk: RowChunk| {
+                        let d = owned[li];
+                        let base = offset(from, d) + chunk.start as usize;
+                        let n = chunk.rows.len() / W;
+                        for r in 0..n {
+                            fills[li][base + r] += 1;
+                            bufs[li][(base + r) * W..(base + r + 1) * W]
+                                .copy_from_slice(&chunk.rows[r * W..(r + 1) * W]);
+                        }
+                    })
+                    .expect("exchange completes");
+                    for (li, f) in fills.iter().enumerate() {
+                        assert!(
+                            f.iter().all(|&c| c == 1),
+                            "device {}: some planned position not written exactly once: {f:?}",
+                            owned[li]
+                        );
+                    }
+                    owned.into_iter().zip(bufs).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (d, buf) in h.join().expect("worker panicked") {
+                out[d] = buf;
+            }
+        }
+    });
+    out
+}
+
+#[test]
+fn all_to_all_is_a_bijection_on_rows() {
+    let k = 4;
+    let owners: Vec<Vec<usize>> = (0..k).map(|d| vec![d]).collect();
+    let out = run_exchange(&owners, k, 8, 3);
+    // Placement: every planted value landed at exactly the plan-derived
+    // position (exactly-once is asserted inside run_exchange).
+    for to in 0..k {
+        for from in 0..k {
+            let base = offset(from, to);
+            for r in 0..rows_sent(from, to) {
+                for c in 0..W {
+                    assert_eq!(
+                        out[to][(base + r) * W + c],
+                        value(from, to, r, c),
+                        "row ({from}->{to})[{r}][{c}] misplaced"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exchange_bit_identical_across_worker_groupings_and_capacity() {
+    let k = 4;
+    let per_device: Vec<Vec<usize>> = (0..k).map(|d| vec![d]).collect();
+    let reference = run_exchange(&per_device, k, 8, 4);
+    let groupings: Vec<Vec<Vec<usize>>> = vec![
+        vec![vec![0, 1, 2, 3]],       // one worker owns everything
+        vec![vec![0, 2], vec![1, 3]], // two workers, strided
+        per_device.clone(),           // one worker per device
+    ];
+    for owners in &groupings {
+        for channel_cap in [1usize, 8] {
+            for chunk_rows in [1usize, 5] {
+                let got = run_exchange(owners, k, channel_cap, chunk_rows);
+                for d in 0..k {
+                    let same = reference[d]
+                        .iter()
+                        .zip(&got[d])
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(
+                        same,
+                        "device {d} differs: owners={owners:?} cap={channel_cap} chunk={chunk_rows}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_reduce_matches_the_serial_accumulation_order_bitwise() {
+    // Classic order-sensitive sequence: (1e8 + 1) - 1e8 rounds the 1 away,
+    // so left-to-right gives 0.0 while any reordering that pairs the big
+    // magnitudes first gives 1.0. The fixed slice order must reproduce the
+    // serial oracle's bits exactly.
+    let contribs = [
+        vec![vec![1e8f32, 0.25]],
+        vec![vec![1.0f32, 0.5]],
+        vec![vec![-1e8f32, 0.125]],
+    ];
+    let mut oracle = vec![vec![0f32; 2]];
+    for c in &contribs {
+        for (a, b) in oracle[0].iter_mut().zip(&c[0]) {
+            *a += b;
+        }
+    }
+    assert_eq!(oracle[0][0].to_bits(), 0f32.to_bits(), "sequence must be order-sensitive");
+
+    let refs: Vec<Option<&Vec<Vec<f32>>>> = contribs.iter().map(Some).collect();
+    let mut acc = vec![vec![0f32; 2]];
+    all_reduce(&mut acc, &refs);
+    for (a, o) in acc[0].iter().zip(&oracle[0]) {
+        assert_eq!(a.to_bits(), o.to_bits(), "all_reduce diverged from the serial order");
+    }
+
+    // A permutation visibly changes the bits — proving the order is load-bearing.
+    let permuted: Vec<Option<&Vec<Vec<f32>>>> =
+        [&contribs[0], &contribs[2], &contribs[1]].map(Some).to_vec();
+    let mut acc_p = vec![vec![0f32; 2]];
+    all_reduce(&mut acc_p, &permuted);
+    assert_ne!(acc_p[0][0].to_bits(), acc[0][0].to_bits());
+
+    // None entries are skipped without perturbing the order of the rest.
+    let with_gaps: Vec<Option<&Vec<Vec<f32>>>> =
+        vec![Some(&contribs[0]), None, Some(&contribs[1]), None, Some(&contribs[2])];
+    let mut acc_g = vec![vec![0f32; 2]];
+    all_reduce(&mut acc_g, &with_gaps);
+    for (a, o) in acc_g[0].iter().zip(&oracle[0]) {
+        assert_eq!(a.to_bits(), o.to_bits(), "None gaps must not perturb the order");
+    }
+}
+
+#[test]
+fn broadcast_delivers_every_message_exactly_once_per_worker_in_order() {
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..3).map(|_| sync_channel::<u64>(1)).unzip();
+    thread::scope(|s| {
+        let handles: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| {
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for m in 0..16u64 {
+            broadcast(&txs, m).unwrap();
+        }
+        drop(txs);
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                (0..16).collect::<Vec<u64>>(),
+                "each worker must see every message exactly once, in send order"
+            );
+        }
+    });
+}
+
+#[test]
+fn abort_flag_breaks_a_stuck_exchange() {
+    let mut fabric = Fabric::new(2, 1, 1);
+    let abort = fabric.abort_handle();
+    let ep = fabric.endpoint(vec![0]);
+    // Keep device 1's endpoints alive so the pump spins on an empty
+    // channel instead of erroring on disconnect.
+    let _peer = fabric.endpoint(vec![1]);
+    thread::scope(|s| {
+        s.spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            abort.store(true, Ordering::Relaxed);
+        });
+        // Expect one chunk from device 1 that never comes.
+        let mut expect = vec![vec![0usize, 1]];
+        let err = ep.all_to_all(&mut [], &mut expect, |_, _, _| {}).unwrap_err();
+        assert!(err.to_string().contains("aborted"), "{err}");
+    });
+}

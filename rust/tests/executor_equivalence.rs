@@ -8,7 +8,7 @@ use gsplit::graph::{Dataset, StandIn};
 use gsplit::model::{GnnKind, ModelConfig, ParamStore};
 use gsplit::partition::Partitioning;
 use gsplit::runtime::NativeBackend;
-use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, TrainConfig, Trainer};
 
 const FANOUT: usize = 5;
 const K: usize = 4;
@@ -60,8 +60,10 @@ fn check_epoch_equivalence(num_layers: usize, seed: u64, pipeline: PipelineConfi
     let backend = NativeBackend::new();
 
     let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, seed).unwrap();
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, seed).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(pipeline));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, seed)
+        .unwrap()
+        .with_config(TrainConfig::new().exec(ExecMode::Pipelined(pipeline)))
+        .unwrap();
     assert_params_bit_identical(&serial.params, &pipelined.params, "init");
 
     let a = train_epoch(&mut serial, &ds, 512, seed).unwrap();
@@ -124,8 +126,10 @@ fn pipelined_evaluate_matches_serial() {
     let part = modulo_part(&ds, K);
     let backend = NativeBackend::new();
     let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 5).unwrap();
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 5).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(K)));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 5)
+        .unwrap()
+        .with_config(TrainConfig::new().parallel_workers(K))
+        .unwrap();
     let targets = &ds.labels.val_set[..256];
     let a = serial.evaluate(&ds, targets, 77).unwrap();
     let b = pipelined.evaluate(&ds, targets, 77).unwrap();
@@ -150,14 +154,18 @@ fn tracing_changes_no_output_bit() {
     let mut untraced = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 11).unwrap();
     let a = train_epoch(&mut untraced, &ds, 512, 11).unwrap();
 
-    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 11).unwrap();
-    serial.set_trace(true);
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 11)
+        .unwrap()
+        .with_config(TrainConfig::new().trace(true))
+        .unwrap();
     let b = train_epoch(&mut serial, &ds, 512, 11).unwrap();
 
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 11).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 11)
+        .unwrap()
+        .with_config(TrainConfig::new().parallel_workers(2))
+        .unwrap();
     let c = train_epoch(&mut pipelined, &ds, 512, 11).unwrap();
-    pipelined.set_trace(false);
+    gsplit::obs::set_enabled(false);
 
     gsplit::obs::flush_thread();
     let spans: usize = gsplit::obs::tracer().snapshot().iter().map(|t| t.spans.len()).sum();
@@ -178,8 +186,10 @@ fn single_iteration_and_single_device_paths() {
     let part = modulo_part(&ds, 1);
     let backend = NativeBackend::new();
     let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, 3).unwrap();
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 3).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(2)));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, 3)
+        .unwrap()
+        .with_config(TrainConfig::new().parallel_workers(2))
+        .unwrap();
     let epoch_targets = ds.epoch_targets(0);
     let targets = &epoch_targets[..192];
     let a = serial.train_iteration(&ds, targets, 0).unwrap();

@@ -1,0 +1,97 @@
+//! Full-graph smoke suite (CI job `full-graph-smoke`):
+//!
+//! 1. The CAGNET-style [`FullGraph`] engine on `StandIn::Tiny` — sampling
+//!    phase must be exactly zero (it processes every edge, every layer),
+//!    the breakdown must be deterministic, and remote shuffle volume must
+//!    vanish at `k = 1`.
+//! 2. Full-neighborhood real-compute training: with fanout ≥ the graph's
+//!    max degree the sampler keeps *every* neighbor, so each mini-batch
+//!    computes exactly the math a full-graph system would for those
+//!    targets. Serial vs pipelined executors must then be bit-identical —
+//!    the determinism contract holds even at full-graph working-set sizes.
+
+use gsplit::exec::{run_epoch, EngineCtx, FullGraph};
+use gsplit::graph::StandIn;
+use gsplit::model::{GnnKind, ModelConfig};
+use gsplit::partition::Partitioning;
+use gsplit::runtime::NativeBackend;
+use gsplit::train::{train_epoch, TrainConfig, Trainer};
+use gsplit::{devices::Topology, Vid};
+
+#[test]
+fn full_graph_engine_has_no_sampling_phase_and_is_deterministic() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let topo = Topology::for_gpus(4, ds.spec.scale_divisor).unwrap();
+    let ctx = EngineCtx::new(&ds, topo, GnnKind::GraphSage, 64, 2, 5);
+    let mut engine = FullGraph::new(&ctx);
+    // One whole-graph pass per epoch: batch = usize::MAX collapses the
+    // epoch targets into a single iteration (matching the benches).
+    let (c, t) = run_epoch(&mut engine, &ctx, usize::MAX, 42);
+
+    assert_eq!(c.sampled_edges.iter().sum::<u64>(), 0, "full-graph must not sample");
+    assert_eq!(c.sample_comm.total_remote(), 0, "no cooperative-sampling shuffle");
+    assert_eq!(t.sampling, 0.0, "S must be exactly zero");
+    assert!(t.loading > 0.0, "row-partitioned features still load");
+    assert!(t.fb > 0.0, "forward/backward over every edge");
+    assert!(c.train_comm.total_remote() > 0, "per-layer activation exchange at k=4");
+
+    // Target- and seed-independent: a different epoch seed permutes the
+    // targets, but the full-graph pass covers the same rows and edges.
+    let (c2, _) = run_epoch(&mut FullGraph::new(&ctx), &ctx, usize::MAX, 1337);
+    assert_eq!(c.fwd_flops, c2.fwd_flops, "FLOPs must not depend on the epoch seed");
+    assert_eq!(
+        c.train_comm.total_remote(),
+        c2.train_comm.total_remote(),
+        "shuffle volume must not depend on the epoch seed"
+    );
+}
+
+#[test]
+fn full_graph_engine_single_gpu_has_no_remote_traffic() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let topo = Topology::single_host(1, false, ds.spec.scale_divisor);
+    let ctx = EngineCtx::new(&ds, topo, GnnKind::GraphSage, 64, 2, 5);
+    let (c, _) = run_epoch(&mut FullGraph::new(&ctx), &ctx, usize::MAX, 42);
+    assert_eq!(c.train_comm.total_remote(), 0, "one GPU owns every row");
+    assert!(c.fwd_flops.iter().sum::<u64>() > 0);
+}
+
+#[test]
+fn exhaustive_fanout_epoch_serial_vs_pipelined_bit_identical() {
+    let ds = StandIn::Tiny.load().unwrap();
+    let max_degree = (0..ds.graph.num_vertices() as Vid)
+        .map(|v| ds.graph.degree(v))
+        .max()
+        .unwrap_or(0) as usize;
+    let fanout = max_degree.max(1);
+
+    let cfg = ModelConfig {
+        kind: GnnKind::GraphSage,
+        feat_dim: 32,
+        hidden: 32,
+        num_classes: 16,
+        num_layers: 2,
+    };
+    let part = Partitioning {
+        assignment: (0..ds.graph.num_vertices() as Vid).map(|v| (v % 4) as u16).collect(),
+        k: 4,
+    };
+    let backend = NativeBackend::new();
+
+    let mut serial = Trainer::new(&backend, &cfg, fanout, part.clone(), 0.2, 42).unwrap();
+    let a = train_epoch(&mut serial, &ds, 1024, 7).unwrap();
+
+    let mut pipelined = Trainer::new(&backend, &cfg, fanout, part, 0.2, 42)
+        .unwrap()
+        .with_config(TrainConfig::new().parallel_workers(2))
+        .unwrap();
+    let b = train_epoch(&mut pipelined, &ds, 1024, 7).unwrap();
+
+    assert!(!a.is_empty());
+    assert_eq!(a.len(), b.len(), "iteration counts differ");
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.examples, y.examples, "iter {i} examples");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "iter {i} loss {} != {}", x.loss, y.loss);
+        assert_eq!(x.correct.to_bits(), y.correct.to_bits(), "iter {i} correct");
+    }
+}

@@ -27,7 +27,7 @@ use gsplit::graph::{Dataset, DiskFeatureStore, FeatureSource, StandIn};
 use gsplit::model::{GnnKind, ModelConfig, ParamStore};
 use gsplit::partition::Partitioning;
 use gsplit::runtime::NativeBackend;
-use gsplit::train::{train_epoch, ExecMode, IterStats, PipelineConfig, Trainer};
+use gsplit::train::{train_epoch, IterStats, TrainConfig, Trainer};
 use gsplit::{DeviceId, Vid};
 
 const FANOUT: usize = 5;
@@ -135,16 +135,19 @@ fn check_case(
     let ds_s = open_disk_tiny(&path, &ram, chunk_rows, max_chunks);
     let cache_s =
         Arc::new(ResidentCache::build(policy, &ranking, budget, &part, topo, &ds_s.features));
-    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
-    serial.set_cache(Some(cache_s)).unwrap();
+    let mut serial = Trainer::new(&backend, &cfg, FANOUT, part.clone(), 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(cache_s)))
+        .unwrap();
     let b = train_epoch(&mut serial, &ds_s, BATCH, SEED).unwrap();
 
     let ds_p = open_disk_tiny(&path, &ram, chunk_rows, max_chunks);
     let cache_p =
         Arc::new(ResidentCache::build(policy, &ranking, budget, &part, topo, &ds_p.features));
-    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
-    pipelined.set_cache(Some(cache_p)).unwrap();
-    pipelined.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
+    let mut pipelined = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().cache(Some(cache_p)).parallel_workers(workers))
+        .unwrap();
     let c = train_epoch(&mut pipelined, &ds_p, BATCH, SEED).unwrap();
 
     assert!(!a.is_empty());
@@ -189,10 +192,12 @@ fn tracing_changes_no_output_bit_out_of_core() {
     let a = train_epoch(&mut untraced, &ds_a, BATCH, SEED).unwrap();
 
     let ds_b = open_disk_tiny(&path, &ram, 256, 4);
-    let mut traced = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED).unwrap();
-    traced.set_trace(true);
+    let mut traced = Trainer::new(&backend, &cfg, FANOUT, part, 0.2, SEED)
+        .unwrap()
+        .with_config(TrainConfig::new().trace(true))
+        .unwrap();
     let b = train_epoch(&mut traced, &ds_b, BATCH, SEED).unwrap();
-    traced.set_trace(false);
+    gsplit::obs::set_enabled(false);
 
     gsplit::obs::flush_thread();
     let snap = gsplit::obs::tracer().snapshot();
@@ -292,7 +297,7 @@ fn truncated_cube_mesh_exercises_all_four_tiers() {
     // caching exercises Local, Peer, AND the linkless-copy → Host
     // fallback; with the disk source the Host leg further splits into
     // Ram + Disk — all four tiers nonzero in one bit-identical run.
-    let topo = Topology::for_gpus(6, 1.0);
+    let topo = Topology::for_gpus(6, 1.0).unwrap();
     let (split, _) =
         check_case(&topo, CachePolicy::Distributed, 256, 3, 128, 4, "ooc/cube6/distributed");
     assert!(

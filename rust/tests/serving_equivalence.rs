@@ -29,7 +29,7 @@ use gsplit::model::{GnnKind, ModelConfig};
 use gsplit::partition::Partitioning;
 use gsplit::runtime::NativeBackend;
 use gsplit::serving::{self, ServeConfig};
-use gsplit::train::{ExecMode, PipelineConfig, Trainer};
+use gsplit::train::{TrainConfig, Trainer};
 use gsplit::{DeviceId, Vid};
 
 const FANOUT: usize = 5;
@@ -68,23 +68,19 @@ fn make_trainer<'b>(
     budget: u64,
 ) -> Trainer<'b> {
     let part = modulo_part(ds, K);
-    let mut t = Trainer::new(backend, cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
-    if policy != CachePolicy::None {
-        let topo = Topology::for_gpus(K, 1.0);
-        let cache = Arc::new(ResidentCache::build(
+    let t = Trainer::new(backend, cfg, FANOUT, part.clone(), 0.2, SEED).unwrap();
+    let cache = (policy != CachePolicy::None).then(|| {
+        let topo = Topology::for_gpus(K, 1.0).unwrap();
+        Arc::new(ResidentCache::build(
             policy,
             &degree_ranking(ds),
             budget,
             &part,
             &topo,
             &ds.features,
-        ));
-        t.set_cache(Some(cache)).unwrap();
-    }
-    if workers > 0 {
-        t.set_exec_mode(ExecMode::Pipelined(PipelineConfig::with_workers(workers)));
-    }
-    t
+        ))
+    });
+    t.with_config(TrainConfig::new().parallel_workers(workers).cache(cache)).unwrap()
 }
 
 /// Submit `vids` through the online service and return each response's
